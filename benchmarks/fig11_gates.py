@@ -1,0 +1,33 @@
+"""Paper Fig. 11: bulk bitwise throughput (GOps) vs Ambit / Pinatubo.
+Anchored ratios (see costmodel): NOT 178x, XOR 1.34x, Pinatubo-OR ~6x
+(near-term); long-term scaling comes out of the device model (~2.15x vs
+paper's 370/178=2.08x)."""
+
+import time
+
+from repro.core import costmodel as cm
+from repro.core.tech import LONG_TERM, NEAR_TERM
+
+PAPER_RATIOS = {"NOT": (178, 370), "XOR": (1.34, 4.0)}
+
+
+def run():
+    rows = []
+    for op in ("NOT", "OR", "NAND", "XOR"):
+        t0 = time.perf_counter()
+        near = cm.bulk_gops(op, NEAR_TERM)
+        longt = cm.bulk_gops(op, LONG_TERM)
+        us = (time.perf_counter() - t0) * 1e6
+        ambit = cm.AMBIT_GOPS[op]
+        extra = ""
+        if op in PAPER_RATIOS:
+            extra = f" paper={PAPER_RATIOS[op][0]}x/{PAPER_RATIOS[op][1]}x"
+        rows.append((f"fig11/{op}", round(us, 1),
+                     f"near={near:.4g}GOps long={longt:.4g}GOps"
+                     f" vs_ambit={near/ambit:.3g}x/{longt/ambit:.3g}x" + extra))
+    near_or = cm.bulk_gops("OR", NEAR_TERM)
+    long_or = cm.bulk_gops("OR", LONG_TERM)
+    rows.append(("fig11/vs_pinatubo_OR", 0.0,
+                 f"near={near_or/cm.PINATUBO_OR_GOPS:.3g}x"
+                 f" long={long_or/cm.PINATUBO_OR_GOPS:.3g}x paper=~6x/12x"))
+    return rows

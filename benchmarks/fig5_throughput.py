@@ -1,0 +1,30 @@
+"""Paper Fig. 5: throughput + energy efficiency, Naive/Oracular x plain/Opt,
+3M-pattern DNA pool, normalized to the GPU baseline."""
+
+import time
+
+from repro.core import costmodel as cm
+from repro.core.tech import NEAR_TERM
+
+PAPER = {("naive", False): 23215.3, ("oracular", False): 2.32}
+
+
+def run():
+    rows = []
+    gpu = cm.GPUBaseline()
+    for opt in (False, True):
+        for sched in ("naive", "oracular"):
+            t0 = time.perf_counter()
+            d = cm.Design(tech=NEAR_TERM, opt=opt)
+            r = cm.run_workload(d, 3_000_000, sched)
+            us = (time.perf_counter() - t0) * 1e6
+            name = f"fig5/{sched}{'Opt' if opt else ''}"
+            paper_h = PAPER.get((sched, opt))
+            rows.append((name, round(us, 1),
+                         f"hours={r.total_time_s/3600:.2f}"
+                         + (f" paper={paper_h}" if paper_h else "")
+                         + f" rate={r.match_rate:.4g}/s"
+                         f" vs_gpu={r.match_rate/gpu.match_rate:.3g}x"
+                         f" eff={r.efficiency:.4g}/s/mW"
+                         f" eff_vs_gpu={r.efficiency/gpu.efficiency:.3g}x"))
+    return rows

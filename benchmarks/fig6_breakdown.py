@@ -1,0 +1,23 @@
+"""Paper Fig. 6: energy/latency breakdown by stage (unoptimized design).
+Paper anchors: preset 43.86% energy / 97.25% latency; BL <1% / 2.7%;
+writes <1%/<1%."""
+
+import time
+
+from repro.core import costmodel as cm
+from repro.core.tech import NEAR_TERM
+
+
+def run():
+    t0 = time.perf_counter()
+    pc = cm.pass_cost(cm.Design(tech=NEAR_TERM, opt=False))
+    us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    for stage in sorted(pc.stages):
+        rows.append((
+            f"fig6/{stage}", round(us, 1),
+            f"lat_share={pc.share(stage, 'latency'):.4f}"
+            f" energy_share={pc.share(stage, 'energy'):.4f}"))
+    rows.append(("fig6/paper_anchor", 0.0,
+                 "preset paper=0.4386 energy / 0.9725 latency"))
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Fig. 7: sensitivity to pattern length (OracularOpt): throughput
+stays close to the 100-char baseline, efficiency decreases."""
+
+import time
+
+from repro.core import costmodel as cm
+from repro.core.tech import NEAR_TERM
+
+
+def run():
+    rows = []
+    base = None
+    for plen in (100, 200, 300):
+        t0 = time.perf_counter()
+        d = cm.Design(tech=NEAR_TERM, opt=True, pattern_chars=plen)
+        r = cm.run_workload(d, 3_000_000, "oracular")
+        us = (time.perf_counter() - t0) * 1e6
+        if base is None:
+            base = r
+        rows.append((f"fig7/P{plen}", round(us, 1),
+                     f"rate={r.match_rate:.4g}/s"
+                     f" rel_rate={r.match_rate/base.match_rate:.3f}"
+                     f" eff={r.efficiency:.4g}"
+                     f" rel_eff={r.efficiency/base.efficiency:.3f}"))
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Figs. 9-10: match rate + compute efficiency of CRAM-PM vs the NMP
+and NMP-Hyp baselines, per benchmark app (+ DNA).  Paper anchors: WC max
+match-rate gain 133552x (long-term); RC4 max efficiency gain ~300x/900x;
+BC least benefit vs NMP-Hyp; all but BC >5x vs NMP-Hyp."""
+
+import time
+
+from repro.core import costmodel as cm
+from repro.core.tech import LONG_TERM, NEAR_TERM
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    d = cm.Design(tech=NEAR_TERM, opt=False)
+    dna_near = cm.run_workload(d, 3_000_000, "oracular")
+    dna_long = cm.run_workload(
+        cm.Design(tech=LONG_TERM, opt=False), 3_000_000, "oracular")
+    nmp = cm.dna_nmp_run(d, 3_000_000)
+    hyp = cm.dna_nmp_run(d, 3_000_000, hyp=True)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("fig9/DNA", round(us, 1),
+                 f"rate_vs_nmp={dna_near.match_rate/nmp.match_rate:.4g}x"
+                 f" long={dna_long.match_rate/nmp.match_rate:.4g}x"
+                 f" vs_hyp={dna_near.match_rate/hyp.match_rate:.4g}x"))
+    for name, app in cm.table4_apps().items():
+        cn = cm.app_cram_run(app, NEAR_TERM)
+        cl = cm.app_cram_run(app, LONG_TERM)
+        n = cm.app_nmp_run(app)
+        h = cm.app_nmp_run(app, hyp=True)
+        rows.append((f"fig9/{name}", 0.0,
+                     f"rate_vs_nmp near={cn.match_rate/n.match_rate:.4g}x"
+                     f" long={cl.match_rate/n.match_rate:.4g}x"
+                     + (" paper_long=133552x" if name == "WC" else "")))
+        rows.append((f"fig10/{name}", 0.0,
+                     f"eff_vs_nmp near={cn.efficiency/n.efficiency:.4g}x"
+                     f" long={cl.efficiency/n.efficiency:.4g}x"
+                     f" vs_hyp near={cn.efficiency/h.efficiency:.3g}x"
+                     f" long={cl.efficiency/h.efficiency:.3g}x"
+                     + (" paper=~300x/900x" if name == "RC4" else "")))
+    return rows

@@ -1,0 +1,459 @@
+"""Generate EXPERIMENTS.md from recorded artifacts.
+
+Sources: experiments/dryrun/full.jsonl (baseline sweep, both meshes),
+experiments/perf/iters.jsonl (hillclimb records), the live cost model
+(paper-claim table), and the train-100m log if present.
+
+  PYTHONPATH=src python -m benchmarks.gen_experiments
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+PEAK = 197e12
+
+
+def load_cells(path):
+    cells = {}
+    for line in pathlib.Path(path).open():
+        r = json.loads(line)
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return cells
+
+
+def load_iters(path):
+    out = {}
+    p = pathlib.Path(path)
+    if not p.exists():
+        return out
+    for line in p.open():
+        r = json.loads(line)
+        out[r["tag"]] = r
+    return out
+
+
+def mfu(r):
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return r["model_flops_global"] / r["n_devices"] / PEAK / bound, bound
+
+
+MOVE_DOWN = {
+    "compute": "more MXU-efficient layouts / lower-precision matmuls",
+    "memory": ("fuse elementwise chains & keep attention/SSD score tiles in "
+               "VMEM (flash-style), quantize resident state"),
+    "collective": ("reshard to cut activation all-reduces (FSDP profile / "
+                   "block-diagonal projections), overlap with compute"),
+}
+
+
+def dryrun_section(cells):
+    lines = ["## §Dry-run", ""]
+    lines.append(
+        "Production meshes: 16x16 `(data, model)` = 256 chips/pod and "
+        "2x16x16 `(pod, data, model)` = 512 chips, built from 512 forced "
+        "host devices (`launch/dryrun.py`).  Every live cell lowered AND "
+        "compiled (`.lower().compile()`); `memory_analysis()`/"
+        "`cost_analysis()` recorded per cell.  40 assigned cells per mesh = "
+        "32 live + 8 recorded skips (long_500k on pure full-attention "
+        "archs; DESIGN.md).")
+    for mesh in ("16x16", "2x16x16"):
+        sub = {k: v for k, v in cells.items() if k[2] == mesh}
+        n_ok = sum(1 for r in sub.values() if r["status"] == "ok")
+        n_skip = sum(1 for r in sub.values() if r["status"] == "skipped")
+        lines += ["", f"### Mesh {mesh}: {n_ok} compiled, {n_skip} skips", ""]
+        lines.append("| arch | shape | compile s | args GB/dev | temps GB/dev"
+                     " | collective ops (AR/AG/AA/CP) |")
+        lines.append("|---|---|---|---|---|---|")
+        for (arch, shape, _), r in sorted(sub.items()):
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | skip | | | "
+                             f"{r['reason'][:60]}... |")
+                continue
+            mem = r.get("memory", {})
+            args = (mem.get("argument_bytes") or 0) / 1e9
+            temps = (mem.get("temp_bytes") or 0) / 1e9
+            c = r["collective_counts"]
+            lines.append(
+                f"| {arch} | {shape} | {r['compile_s']:.1f} | {args:.2f} | "
+                f"{temps:.2f} | {int(c['all-reduce'])}/"
+                f"{int(c['all-gather'])}/{int(c['all-to-all'])}/"
+                f"{int(c['collective-permute'])} |")
+    return "\n".join(lines)
+
+
+def roofline_section(cells):
+    lines = ["## §Roofline", ""]
+    lines.append(
+        "Terms per device from the compiled single-pod (16x16) artifact, "
+        "hardware constants 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link:\n"
+        "\n"
+        "* **compute** = walker HLO FLOPs / peak (our HLO walker multiplies "
+        "while-loop bodies by trip count -- XLA's `cost_analysis()` counts "
+        "scan bodies once and is kept as a cross-check column);\n"
+        "* **memory** = TPU-proxy HLO bytes / HBM BW (dot/movement/reduce "
+        "boundaries; pure-elementwise fusion boundaries excluded as a TPU "
+        "compile fuses them).  `mem floor` is the analytic lower bound "
+        "(weights/grads/optimizer/activation/cache passes); the real TPU "
+        "value lies between;\n"
+        "* **collective** = collective operand bytes / link BW, "
+        "trip-multiplied.\n"
+        "* **MFU@bound** = (MODEL_FLOPS/chips/peak) / max(terms) -- the "
+        "roofline fraction §Perf hillclimbs.  MODEL_FLOPS = 6*N_active*D "
+        "(train) or 2*N_active*D (serve).\n")
+    lines.append("| arch | shape | compute s | memory s | mem floor s | "
+                 "collective s | dominant | model/HLO | MFU@bound | to move "
+                 "the dominant term |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        if mesh != "16x16":
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | -- | -- | -- | -- | skip | "
+                         f"-- | -- | n/a (recorded skip) |")
+            continue
+        m, bound = mfu(r)
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['memory_s_analytic']:.3g} | "
+            f"{r['collective_s']:.3g} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.2f} | {m:.4f} | "
+            f"{MOVE_DOWN[r['dominant']]} |")
+    return "\n".join(lines)
+
+
+PERF_LOG = [
+    # (cell, tag_before, tag_after, hypothesis, change, verdict)
+    ("recurrentgemma-9b x train_4k (most collective-bound)",
+     "rg_baseline", "rg_blockdiag",
+     "The 376 GB/dev of all-reduce comes from the dense (r x r) RG-LRU "
+     "gates: row-parallel TP all-reduces a 536 MB f32 activation per gate "
+     "per layer.  Block-diagonal gates (16 blocks = TP width, which is what "
+     "RecurrentGemma itself ships) keep the whole recurrent branch inside "
+     "one shard: predict ~30% collective reduction (gate ARs gone, "
+     "wx/wo ARs remain).",
+     "rglru_block_diag=16",
+     "CONFIRMED: collective 7.71 -> 5.41 s (-30%), all-reduce 376 -> 268 "
+     "GB; MFU@bound 0.121 -> 0.154."),
+    ("recurrentgemma-9b x train_4k",
+     "rg_blockdiag", "rg_blockdiag_fsdp",
+     "Remaining 268 GB AR = row/column-parallel activation reductions "
+     "(536 MB each) vs per-layer weight tensors of only ~33 MB: gathering "
+     "weights must be ~16x cheaper than reducing activations.  Switch to a "
+     "ZeRO/FSDP-only profile (weights 256-way sharded + gathered; no TP).",
+     "sharding_profile=fsdp (first attempt, batch still 16-way)",
+     "REFUTED as first implemented: collective 5.41 -> 1.92 s as predicted, "
+     "BUT compute 1.15 -> 15.6 s -- with batch sharded only over `data`, "
+     "the 16 model-axis shards replicated all compute.  Lesson: a pure-DP "
+     "profile must shard batch over *every* mesh axis."),
+    ("recurrentgemma-9b x train_4k",
+     "rg_blockdiag", "rg_blockdiag_fsdp_v2",
+     "Same hypothesis with batch -> (pod, data, model): 256-way DP, 1 "
+     "sequence/device, weight gathers ~2x33 MB/layer.",
+     "sharding_profile=fsdp + batch over all axes (microbatch=1)",
+     "CONFIRMED: bound 7.71 -> 1.53 s, collective 7.71 -> 0.64 s (12x), "
+     "MFU@bound 0.121 -> 0.544.  4.5x total; now memory-dominant."),
+    ("mamba2-130m x train_4k (worst roofline fraction)",
+     "mamba_baseline", "mamba_bf16intra",
+     "The SSD intra-chunk decay tensor (B,nc,c,c,H) in f32 dominates "
+     "activation traffic; casting the G/decay/M chain to bf16 should halve "
+     "the memory term.",
+     "ssd_bf16_intra=True",
+     "REFUTED on the proxy metric: terms identical -- the einsum operands "
+     "were already cast to bf16 at the dots, and the f32 intermediates sit "
+     "on elementwise (fused-away) boundaries the proxy already excludes.  "
+     "Kept (it does halve the strict-bytes upper bound)."),
+    ("mamba2-130m x train_4k",
+     "mamba_baseline", "mamba_bf16_fsdp",
+     "The 17 GB of collective-permutes + 4 GB all-to-all are TP resharding "
+     "artifacts of splitting a 1536-wide inner dim 16 ways; a 130M model "
+     "wants pure DP.",
+     "sharding_profile=fsdp",
+     "CONFIRMED: bound 1.86 -> 0.27 s (6.9x), collectives 1.18 -> 0.014 s "
+     "(permutes/all-to-alls eliminated); MFU@bound 0.0087 -> 0.0596."),
+    ("mamba2-130m x train_4k",
+     "mamba_bf16_fsdp", "mamba_fsdp_c128",
+     "Halving the SSD chunk (256 -> 128) halves the quadratic intra-chunk "
+     "work per token; predict lower compute & memory.",
+     "ssm_chunk=128",
+     "REFUTED: memory 0.27 -> 0.44 s -- twice as many chunks doubles the "
+     "inter-chunk state traffic (B,nc,H,P,N) and scan-carry updates, "
+     "outweighing the intra saving at these sizes.  Reverted to 256."),
+    ("llama3.2-1b x decode_32k (paper-representative: compute lives where "
+     "the data lives)",
+     "llama_dec_baseline", "llama_dec_int8kv",
+     "Decode is pure cache streaming (compute term 1.8e-5 s vs memory 0.106 "
+     "s).  int8 KV with per-(batch,head,token) scales halves cache bytes; "
+     "folding the scales outside the dots keeps MXU operands quantized "
+     "(exact algebra, measured 0.9% logits error).",
+     "kv_quant=True",
+     "CONFIRMED: memory 0.106 -> 0.047 s (2.26x); decode bound 1211 -> "
+     "2741 tok/s/pod."),
+    ("llama3.2-1b x decode_32k",
+     "llama_dec_int8kv", "llama_dec_int8kv_bf16w",
+     "Weights are stored f32 and cast at use; bf16 serving weights halve "
+     "weight reads.",
+     "param_dtype=bf16",
+     "NO MEASURABLE CHANGE on this cell: weight traffic is ~0.4% of the "
+     "walker bytes at batch 128 (cache dominates).  Kept for deployment "
+     "(halves weight HBM footprint); would matter at small batch."),
+    ("internlm2-20b x decode_32k (capacity finding from §Dry-run)",
+     "internlm_dec_baseline", "internlm_dec_padkv_int8",
+     "The dry-run memory_analysis exposed a capacity bug-class: GQA archs "
+     "with kv<16 replicate the KV cache across the model axis -> 52 GB/dev "
+     "at decode_32k, exceeding 16 GB HBM.  Padding KV heads 8->16 shards "
+     "the cache 16-way; with int8 that is a 32x footprint cut for 2x "
+     "padded writes.",
+     "pad_kv_heads=True kv_quant=True",
+     "CONFIRMED: cache argument bytes 52.0 -> 3.6 GB/dev (now fits), "
+     "memory term 1.66 -> 0.65 s (2.5x).  Promoted to every GQA arch's "
+     "serve overrides."),
+    ("recurrentgemma-9b x train_4k (post-FSDP, memory-dominant)",
+     "rg_blockdiag_fsdp_v2", "rg_fsdp_noremat",
+     "With collectives fixed, memory dominates (1.53 s).  Disabling remat "
+     "trades recompute flops for saved-activation traffic; if the "
+     "recompute was memory-bound too, compute drops and memory may not "
+     "rise much.",
+     "remat=False",
+     "REFUTED decisively: compute 1.10 -> 0.88 s but memory 1.53 -> 10.0 s "
+     "-- storing every intermediate for backward costs ~7x more traffic "
+     "than recomputing it.  Remat is load-bearing; kept.  Stop rule hit "
+     "for this cell (last two iterations <5% / negative)."),
+    ("moonshot-v1-16b-a3b x train_4k (bonus cell)",
+     "moonshot_fsdp", "moonshot_fsdp_g512",
+     "Doubling the MoE dispatch group (256 -> 512 tokens) halves the "
+     "number of dispatch einsums; predicted small memory win from fewer "
+     "boundary crossings.",
+     "moe_group_size=512",
+     "REFUTED (neutral): 8.01 -> 8.05 s -- capacity C scales with group "
+     "size so total dispatch bytes are invariant (T*k*cf per token).  "
+     "Kept at 256."),
+    ("recurrentgemma-9b x prefill_32k (bonus: the remaining 100% "
+     "collective-bound cell in §Roofline)",
+     "rg_prefill_baseline", "rg_prefill_blockdiag",
+     "Same gate all-reduces as the train cell, on the serving path; the "
+     "block-diagonal gates already promoted for rg serving should transfer.",
+     "rglru_block_diag=16",
+     "CONFIRMED: bound 2.79 -> 1.68 s (1.67x), all-reduce 138 -> 83 GB; "
+     "MFU@bound 0.111 -> 0.165.  Matches the promoted serve override."),
+]
+
+BONUS_FSDP = [
+    ("qwen1.5-32b", "qwen_fsdp"),
+    ("moonshot-v1-16b-a3b", "moonshot_fsdp"),
+    ("llama3.2-1b", "llama3.2-1b_train_fsdp"),
+    ("internlm2-20b", "internlm2-20b_train_fsdp"),
+    ("pixtral-12b", "pixtral-12b_train_fsdp"),
+    ("stablelm-3b", "stablelm-3b_train_fsdp"),
+    ("olmoe-1b-7b", "olmoe-1b-7b_train_fsdp"),
+    ("whisper-tiny", "whisper-tiny_train_fsdp"),
+]
+
+
+def perf_section(cells, iters):
+    lines = ["## §Perf", ""]
+    lines.append(
+        "Methodology: hypothesis -> change -> re-lower -> re-derive terms "
+        "-> validate (driver: `benchmarks/perf_iter.py`, records in "
+        "`experiments/perf/iters.jsonl`).  Baselines for every cell are the "
+        "§Roofline table (paper-faithful system, 2-D FSDP+TP sharding); the "
+        "three assigned hillclimb cells below were iterated until <5% "
+        "improvements remained; a bonus sweep then applied the winning "
+        "profile everywhere.\n\n"
+        "Cell selection: *worst roofline fraction* -> mamba2-130m/train_4k "
+        "(MFU@bound 0.0087; the nominally-worst cells are single-token "
+        "decode/long_500k cells whose MFU is degenerate by construction -- "
+        "the decode family is covered by the third pick); *most "
+        "collective-bound* -> recurrentgemma-9b/train_4k (collective term "
+        "dominant, 7.7 s); *most representative of the paper's technique* "
+        "-> llama3.2-1b/decode_32k (pure resident-state streaming: compute "
+        "where the data lives, the paper's core objective).\n")
+    lines.append("### Hillclimb log (hypothesis / change / before -> after / "
+                 "verdict)\n")
+    for cell, t0, t1, hyp, change, verdict in PERF_LOG:
+        b, a = iters.get(t0), iters.get(t1)
+        lines.append(f"**{cell}**")
+        lines.append(f"- *Hypothesis*: {hyp}")
+        lines.append(f"- *Change*: `{change}`")
+        if b and a and b.get("status") == "ok" and a.get("status") == "ok":
+            mb, bb = mfu(b)
+            ma, ba = mfu(a)
+            lines.append(
+                f"- *Measured*: bound {bb:.3g}s -> {ba:.3g}s; compute "
+                f"{b['compute_s']:.3g}->{a['compute_s']:.3g}, memory "
+                f"{b['memory_s']:.3g}->{a['memory_s']:.3g}, collective "
+                f"{b['collective_s']:.3g}->{a['collective_s']:.3g}; "
+                f"MFU@bound {mb:.4f} -> {ma:.4f}")
+        lines.append(f"- *Verdict*: {verdict}")
+        lines.append("")
+
+    lines.append("### Final: paper-faithful baseline vs beyond-paper "
+                 "optimized\n")
+    lines.append("| cell | baseline bound s | baseline MFU | optimized "
+                 "bound s | optimized MFU | gain |")
+    lines.append("|---|---|---|---|---|---|")
+    finals = [
+        ("recurrentgemma-9b/train_4k", "rg_baseline", "rg_blockdiag_fsdp_v2"),
+        ("mamba2-130m/train_4k", "mamba_baseline", "mamba_bf16_fsdp"),
+        ("llama3.2-1b/decode_32k", "llama_dec_baseline", "llama_dec_int8kv"),
+    ]
+    for name, t0, t1 in finals:
+        b, a = iters[t0], iters[t1]
+        mb, bb = mfu(b)
+        ma, ba = mfu(a)
+        lines.append(f"| {name} | {bb:.3g} | {mb:.4f} | {ba:.3g} | {ma:.4f} "
+                     f"| {bb/ba:.2f}x |")
+
+    lines.append("\n### Bonus: FSDP-only train profile across the pool\n")
+    lines.append("| arch (train_4k) | baseline bound s / MFU | fsdp bound s "
+                 "/ MFU | gain |")
+    lines.append("|---|---|---|---|")
+    for arch, tag in BONUS_FSDP:
+        base = cells.get((arch, "train_4k", "16x16"))
+        r = iters.get(tag)
+        if not base or not r or r.get("status") != "ok":
+            continue
+        mb, bb = mfu(base)
+        ma, ba = mfu(r)
+        lines.append(f"| {arch} | {bb:.3g} / {mb:.4f} | {ba:.3g} / {ma:.4f} "
+                     f"| {bb/ba:.2f}x |")
+    lines.append(
+        "\nThe winning per-arch settings are promoted as "
+        "`get_config(arch, optimized=True, kind=...)` "
+        "(`configs/registry.py::OPTIMIZED_OVERRIDES`); the plain configs "
+        "remain the recorded baselines.  Stop criterion reached: the last "
+        "iterations on each assigned cell (mamba chunk-128, llama bf16 "
+        "weights, rg no-remat, moonshot group-512) moved the dominant term "
+        "<5% or regressed.")
+
+    opt_path = REPO / "experiments/dryrun/optimized.jsonl"
+    if opt_path.exists():
+        lines.append("\n### Optimized configs re-verified on both meshes\n")
+        lines.append("Every promoted configuration (changed parameter "
+                     "shapes included: block-diagonal gates, padded KV "
+                     "heads, int8 caches) recompiles on 16x16 AND 2x16x16 "
+                     "(`experiments/dryrun/optimized.jsonl`):\n")
+        lines.append("| arch | shape | mesh | status | bound s | MFU@bound |")
+        lines.append("|---|---|---|---|---|---|")
+        for line in opt_path.open():
+            r = json.loads(line)
+            if r["status"] != "ok":
+                lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                             f"**{r['status']}** | | |")
+                continue
+            m, bound = mfu(r)
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                         f"{bound:.3g} | {m:.4f} |")
+    return "\n".join(lines)
+
+
+def repro_section():
+    from repro.core import costmodel as cm
+    from repro.core.tech import LONG_TERM, NEAR_TERM
+    rows = []
+    d = cm.Design(tech=NEAR_TERM, opt=False)
+    naive = cm.run_workload(d, 3_000_000, "naive")
+    orac = cm.run_workload(d, 3_000_000, "oracular")
+    pc = cm.pass_cost(d)
+    near_opt = cm.run_workload(cm.Design(tech=NEAR_TERM, opt=True),
+                               3_000_000, "oracular")
+    long_opt = cm.run_workload(cm.Design(tech=LONG_TERM, opt=True),
+                               3_000_000, "oracular")
+    wc = cm.table4_apps()["WC"]
+    wc_gain = (cm.app_cram_run(wc, LONG_TERM).match_rate
+               / cm.app_nmp_run(wc).match_rate)
+    rows = [
+        ("Naive, 3M patterns", "23215.3 h",
+         f"{naive.total_time_s/3600:.1f} h", "calibration anchor (1 scalar)"),
+        ("Oracular, 3M patterns", "2.32 h",
+         f"{orac.total_time_s/3600:.2f} h", "derived"),
+        ("Naive/Oracular ratio", "~10^4x",
+         f"{naive.total_time_s/orac.total_time_s:.0f}x", "derived"),
+        ("Preset energy share (unopt)", "43.86%",
+         f"{pc.share('2_5_presets','energy')*100:.1f}%",
+         "emerges from device model"),
+        ("Preset latency share (unopt)", "97.25%",
+         f"{pc.share('2_5_presets','latency')*100:.2f}%", "derived"),
+        ("Opt energy unchanged", "unchanged", "unchanged (exact)", "derived"),
+        ("Long-term boost", "2.15x",
+         f"{long_opt.match_rate/near_opt.match_rate:.3f}x", "derived"),
+        ("vs Ambit NOT (near/long)", "178x / 370x",
+         f"{cm.bulk_gops('NOT', NEAR_TERM)/cm.AMBIT_GOPS['NOT']:.0f}x / "
+         f"{cm.bulk_gops('NOT', LONG_TERM)/cm.AMBIT_GOPS['NOT']:.0f}x",
+         "NOT near anchored; long derived"),
+        ("vs Ambit XOR (near)", "1.34x",
+         f"{cm.bulk_gops('XOR', NEAR_TERM)/cm.AMBIT_GOPS['XOR']:.2f}x",
+         "anchored"),
+        ("vs Pinatubo OR (near/long)", "~6x / 12x",
+         f"{cm.bulk_gops('OR', NEAR_TERM)/cm.PINATUBO_OR_GOPS:.1f}x / "
+         f"{cm.bulk_gops('OR', LONG_TERM)/cm.PINATUBO_OR_GOPS:.1f}x",
+         "near anchored; long derived"),
+        ("WC match-rate gain vs NMP (long)", "133552x",
+         f"{wc_gain:.0f}x", "derived from app model"),
+        ("Adder tree, P=100", "188 FAs / N=7 bits", "194 FAs / 7 bits",
+         "3% over paper's schedule"),
+        ("Gate V windows (near)", "Table 3", "within 100 mV, ordering exact",
+         "R_series calibrated once"),
+    ]
+    lines = ["## §Repro (paper-claim validation)", ""]
+    lines.append(
+        "The functional simulator + step-accurate cost model reproduce the "
+        "paper's evaluation.  Calibration policy (DESIGN.md / "
+        "`core/costmodel.py`): ONE free scalar (SMC write pipelining 0.515) "
+        "anchored on the Naive runtime, plus literature-derived baseline "
+        "constants where the paper reports only speedup ratios; everything "
+        "else is derived.  Full tables: `python -m benchmarks.run`.\n")
+    lines.append("| claim | paper | ours | status |")
+    lines.append("|---|---|---|---|")
+    for c, p, o, s in rows:
+        lines.append(f"| {c} | {p} | {o} | {s} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    cells = load_cells(REPO / "experiments/dryrun/full.jsonl")
+    iters = load_iters(REPO / "experiments/perf/iters.jsonl")
+    doc = ["# EXPERIMENTS", ""]
+    doc.append(
+        "Reproduce: `PYTHONPATH=src pytest tests/` + "
+        "`PYTHONPATH=src python -m benchmarks.run` + "
+        "`PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both "
+        "--out experiments/dryrun/full.jsonl` + the perf driver "
+        "(`benchmarks/perf_iter.py`).  This file is generated by "
+        "`benchmarks/gen_experiments.py` from those artifacts.")
+    doc.append("")
+    doc.append(repro_section())
+    doc.append("")
+    doc.append(dryrun_section(cells))
+    doc.append("")
+    doc.append(roofline_section(cells))
+    doc.append("")
+    doc.append(perf_section(cells, iters))
+    doc.append("")
+    doc.append("## Caveats (measurement fidelity)")
+    doc.append("""
+* This container is CPU-only; the dry-run compiles for the XLA CPU backend
+  with 512 forced host devices.  CPU fusion granularity differs from TPU,
+  so the walker's memory term is an over-estimate (each fusion boundary
+  charged); the analytic floor column bounds it from below.  Relative
+  comparisons (the hillclimb deltas) use identical accounting on both
+  sides.
+* XLA's `cost_analysis()` counts while-loop bodies once; all §Roofline
+  numbers therefore come from our trip-multiplying HLO walker
+  (`distributed/hlo_analysis.py`), with XLA's numbers retained in the
+  records as `xla_*` cross-checks.
+* `memory_analysis()` temp/argument bytes are per-device CPU-backend
+  figures; they prove the sharded program's footprint scales (e.g. int8 KV
+  halves cache argument bytes) rather than exact v5e HBM occupancy.
+* The ~100M end-to-end training run artifact lives in
+  `experiments/train_100m.log`.""")
+    out = REPO / "EXPERIMENTS.md"
+    out.write_text("\n".join(doc) + "\n")
+    print(f"wrote {out} ({len(doc)} sections, "
+          f"{sum(len(s.splitlines()) for s in doc)} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Kernel micro-bench (beyond paper): the TPU-adapted matching engine.
+
+On this CPU container the Pallas kernels execute via the interpreter (not
+meaningful to time), so we wall-clock the jnp packed SWAR mirror (identical
+math, XLA-compiled for CPU) and derive the TPU v5e roofline projection for
+both kernels from their exact op/byte counts.  The projection is compared
+against the CRAM-PM substrate's match rate from the paper cost model --
+the adaptation target the hillclimb in EXPERIMENTS §Perf works against.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import encoding
+from repro.core.tech import NEAR_TERM, TPU_V5E
+from repro.kernels import ref as kref
+
+R, F, P = 512, 1024, 100
+
+
+def _setup():
+    rng = np.random.default_rng(0)
+    frags = rng.integers(0, 4, (R, F), np.uint8)
+    pat = rng.integers(0, 4, P, np.uint8)
+    L = F - P + 1
+    wp = -(-P // 16)
+    rw = encoding.pack_codes_u32(frags)
+    need = (L - 1) // 16 + wp + 1
+    rw = np.concatenate([rw, np.zeros((R, need - rw.shape[1]), np.uint32)], 1)
+    pw = encoding.pack_codes_u32(np.broadcast_to(pat, (R, P)))
+    mask_codes = np.zeros(wp * 16, np.uint32)
+    mask_codes[:P] = 1
+    mask = encoding.pack_codes_u32(mask_codes[None, :])[0]
+    return rw, pw, mask, L
+
+
+def run():
+    import jax
+    rw, pw, mask, L = _setup()
+    f = jax.jit(lambda a, b: kref.match_scores_swar_ref(
+        a, b, mask, n_locs=L, pattern_chars=P))
+    out = f(rw, pw)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        f(rw, pw).block_until_ready()
+    dt = (time.perf_counter() - t0) / reps
+    rows_per_s = R / dt
+
+    # TPU roofline projection of the SWAR kernel: per (row, loc): ~Wp words
+    # x ~12 integer ops; ref tile read once per pattern block.
+    wp = pw.shape[1]
+    ops = R * L * wp * 12
+    bytes_hbm = rw.nbytes + out.nbytes + pw.nbytes
+    t_compute = ops / (TPU_V5E.peak_bf16_flops / 2)      # int ops ~ half rate
+    t_mem = bytes_hbm / TPU_V5E.hbm_bw
+    t_tpu = max(t_compute, t_mem)
+    tpu_rows_per_s = R / t_tpu
+
+    # MXU one-hot correlation projection: per (row, loc-tile, k-chunk) one
+    # (256 x 128) @ (128 x Q) matmul; Q=128 patterns amortize the ref read.
+    Q = 128
+    n_chunks = -(-P // 32)
+    mxu_flops = R * L * (n_chunks * 128) * 2 * Q         # 2*K*out per dot
+    mxu_bytes = (R * (F + P) * 4 * 2                     # one-hot ref bf16
+                 + n_chunks * 128 * Q * 2 + R * L * Q * 4)
+    t_c = mxu_flops / TPU_V5E.peak_bf16_flops
+    t_m = mxu_bytes / TPU_V5E.hbm_bw
+    mxu_rows_per_s = R * Q / max(t_c, t_m)               # row-pattern pairs/s
+
+    # CRAM-PM substrate: one array, OracularOpt: rows/s = n_rows/pass_time.
+    d = cm.Design(tech=NEAR_TERM, opt=True, n_arrays=1)
+    pc = cm.pass_cost(d)
+    cram_rows_per_s = d.n_rows / pc.latency_s
+
+    return [
+        ("kernel/swar_cpu", round(dt / R * 1e6, 3),
+         f"rows_per_s={rows_per_s:.4g} (CPU jnp mirror, R={R} F={F} P={P})"),
+        ("kernel/swar_tpu_projection", 0.0,
+         f"rows_per_s={tpu_rows_per_s:.4g}"
+         f" intensity={ops/bytes_hbm:.1f}op/B"
+         f" bound={'compute' if t_compute > t_mem else 'memory'}"),
+        ("kernel/mxu_tpu_projection", 0.0,
+         f"row_pattern_pairs_per_s={mxu_rows_per_s:.4g} (Q={Q} batched)"
+         f" bound={'compute' if t_c > t_m else 'memory'}"),
+        ("kernel/crampm_substrate", 0.0,
+         f"rows_per_s={cram_rows_per_s:.4g} (near-term OracularOpt array)"),
+        ("kernel/tpu_vs_crampm", 0.0,
+         f"swar={tpu_rows_per_s/cram_rows_per_s:.3g}x"
+         f" mxu={mxu_rows_per_s/cram_rows_per_s:.3g}x"
+         " per chip vs per array"),
+    ]

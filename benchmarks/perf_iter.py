@@ -1,0 +1,74 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration driver (EXPERIMENTS §Perf hillclimb).
+
+Lowers one (arch x shape) cell with config overrides, re-derives the
+roofline terms, and appends a tagged record -- the measure step of each
+hypothesis -> change -> measure -> validate cycle.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch mamba2-130m \
+      --shape train_4k --tag bf16_intra --set ssd_bf16_intra=True
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+from repro.configs import get_config
+from repro.launch.dryrun import lower_cell
+from repro.models.config import SHAPES
+
+
+def parse_value(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="config overrides key=value")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--out", default="experiments/perf/iters.jsonl")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    rec = lower_cell(args.arch, args.shape, args.multipod, cfg=cfg)
+    rec["tag"] = args.tag
+    rec["overrides"] = overrides
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    with out.open("a") as f:
+        f.write(json.dumps(rec) + "\n")
+    keys = ("tag", "status", "compute_s", "memory_s", "collective_s",
+            "dominant", "compile_s")
+    print(json.dumps({k: rec.get(k) for k in keys}))
+    if rec.get("status") == "ok":
+        bound = max(rec["compute_s"], rec["memory_s"], rec["collective_s"])
+        mfu = rec["model_flops_global"] / rec["n_devices"] / 197e12 / bound
+        print(f"bound={bound:.4g}s mfu_bound={mfu:.4f} "
+              f"coll={{{', '.join(f'{k}:{v/1e9:.1f}GB' for k, v in rec['collectives'].items() if v)}}}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Roofline tables from the dry-run records (assignment deliverable g).
+
+Loads ``experiments/dryrun/*.jsonl`` (last record wins per cell), computes
+the three terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the
+roofline fraction:
+
+    mfu_bound = (MODEL_FLOPS / n_dev / peak) / max(compute, memory, collective)
+
+i.e. what fraction of the step-time *bound* is useful model compute -- the
+score §Perf hillclimbs.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+PEAK = 197e12
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def load(path: str | pathlib.Path = None) -> Dict[tuple, dict]:
+    path = pathlib.Path(path) if path else REPO / "experiments/dryrun/full.jsonl"
+    cells: Dict[tuple, dict] = {}
+    if not path.exists():
+        return cells
+    for line in path.open():
+        r = json.loads(line)
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return cells
+
+
+def enrich(r: dict) -> dict:
+    if r.get("status") != "ok":
+        return r
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    bound = max(terms.values())
+    model_term = r["model_flops_global"] / r["n_devices"] / PEAK
+    r = dict(r)
+    r["bound_s"] = bound
+    r["mfu_bound"] = model_term / bound if bound else None
+    r["compute_fraction"] = terms["compute"] / bound if bound else None
+    return r
+
+
+def table(mesh: str = "16x16", path=None) -> List[dict]:
+    cells = load(path)
+    out = []
+    for (arch, shape, m), r in sorted(cells.items()):
+        if m != mesh:
+            continue
+        out.append(enrich(r))
+    return out
+
+
+def markdown(mesh: str = "16x16", path=None) -> str:
+    rows = table(mesh, path)
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| model/HLO flops | MFU@bound |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
+                         f"skip | -- | -- |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['mfu_bound']:.4f} |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = []
+    cells = table("16x16")
+    ok = [r for r in cells if r.get("status") == "ok"]
+    if not ok:
+        return [("roofline/missing", 0.0,
+                 "run python -m repro.launch.dryrun --all first")]
+    for r in ok:
+        rows.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                     f"compute={r['compute_s']:.3g}s memory={r['memory_s']:.3g}s"
+                     f" collective={r['collective_s']:.3g}s dom={r['dominant']}"
+                     f" mfu_bound={r['mfu_bound']:.4f}"))
+    worst = min(ok, key=lambda r: r["mfu_bound"])
+    collb = max(ok, key=lambda r: r["collective_s"] / max(r["bound_s"], 1e-12))
+    rows.append(("roofline/worst_fraction", 0.0,
+                 f"{worst['arch']}/{worst['shape']} mfu={worst['mfu_bound']:.4f}"))
+    rows.append(("roofline/most_collective_bound", 0.0,
+                 f"{collb['arch']}/{collb['shape']}"
+                 f" coll_share={collb['collective_s']/collb['bound_s']:.3f}"))
+    return rows

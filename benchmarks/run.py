@@ -1,0 +1,50 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--only X]``.
+
+Modules (one per paper table/figure + assignment deliverables):
+  table1_gates      -- Table 1/3 gate windows + truth tables
+  fig5_throughput   -- Fig. 5 Naive/Oracular x Opt throughput/energy
+  fig6_breakdown    -- Fig. 6 stage breakdown
+  fig7_patlen       -- Fig. 7 pattern-length sensitivity
+  fig8_tech         -- Fig. 8 MTJ technology sensitivity
+  fig9_10_nmp       -- Figs. 9/10 vs NMP / NMP-Hyp
+  fig11_gates       -- Fig. 11 bulk bitwise vs Ambit/Pinatubo
+  table4_apps       -- Table 4 benchmark apps
+  kernel_bench      -- TPU-adapted kernel engine (beyond paper)
+  roofline          -- dry-run roofline table (assignment)
+"""
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "table1_gates", "fig5_throughput", "fig6_breakdown", "fig7_patlen",
+    "fig8_tech", "fig9_10_nmp", "fig11_gates", "table4_apps",
+    "sec5_5_variation", "kernel_bench", "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,{traceback.format_exc(limit=1).splitlines()[-1]}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Table 4: benchmark applications -- per-app CRAM-PM op census and
+absolute run characteristics on both technology points."""
+
+import time
+
+from repro.core import costmodel as cm
+from repro.core.tech import LONG_TERM, NEAR_TERM
+
+
+def run():
+    rows = []
+    for name, app in cm.table4_apps().items():
+        t0 = time.perf_counter()
+        near = cm.app_cram_run(app, NEAR_TERM)
+        longt = cm.app_cram_run(app, LONG_TERM)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"table4/{name}", round(us, 1),
+                     f"items={app.n_items:.4g} logic_ops={app.cram_logic_ops}"
+                     f" presets={app.cram_presets}"
+                     f" rate_near={near.match_rate:.4g}/s"
+                     f" rate_long={longt.match_rate:.4g}/s"))
+    return rows

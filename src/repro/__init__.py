@@ -1,0 +1,9 @@
+"""CRAM-PM reproduction framework.
+
+Layers: core (paper functional+cost reproduction) / kernels (TPU-adapted
+Pallas) / models + configs (assigned architecture pool) / distributed +
+launch (multi-pod pjit) / optim + checkpoint + data + runtime + serving
+(production substrate).  See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,13 @@
+"""CRAM-PM core: the paper's contribution as a composable library.
+
+Layers (bottom-up): device/tech model -> analog gate model -> array
+interpreter -> ISA/codegen -> matcher (Algorithm 1) -> scheduling -> cost
+model.  See DESIGN.md for the full inventory.
+"""
+
+from . import array, costmodel, encoding, gates, isa, matcher, scheduler, tech
+
+__all__ = [
+    "array", "costmodel", "encoding", "gates", "isa", "matcher",
+    "scheduler", "tech",
+]

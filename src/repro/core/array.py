@@ -1,0 +1,203 @@
+"""CRAM-PM array: state + row-parallel micro-instruction interpreter.
+
+The array is a 2-D grid of cells (``uint8`` logic states).  Per the paper
+(Sec. 2.4) a *single* gate may be active per row at a time, but every row
+executes that same gate on the same columns simultaneously -- i.e. each
+micro-instruction is a column-wise SIMD operation across all rows.  That
+execution model maps 1:1 onto a JAX array program: one micro-op = gather the
+input columns, apply the gate function, scatter the output column.
+
+The interpreter is written as a ``lax.scan`` over an encoded program so a
+whole micro-program JIT-compiles into a single XLA computation; this is the
+reproduction's "array simulator" and also what the data-pipeline dedup filter
+runs on.  Cost accounting is done on the *program* (host side), never inside
+the traced computation -- see ``costmodel.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAX_ARITY = 5
+
+# Opcode table. PRESET0/PRESET1 write a constant into the output column;
+# whether a preset is issued as a gang preset (one op, Sec. 3.4) or as
+# row-sequential writes is a *scheduling* attribute (MicroOp.gang) consumed by
+# the cost model -- the functional result is identical.
+OPCODES: Tuple[str, ...] = (
+    "PRESET0", "PRESET1", "NOR", "OR", "NAND", "AND", "INV", "COPY",
+    "MAJ3", "MAJ5", "TH",
+)
+OPCODE_ID: Dict[str, int] = {name: i for i, name in enumerate(OPCODES)}
+ARITY: Dict[str, int] = {
+    "PRESET0": 0, "PRESET1": 0, "NOR": 2, "OR": 2, "NAND": 2, "AND": 2,
+    "INV": 1, "COPY": 1, "MAJ3": 3, "MAJ5": 5, "TH": 4,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MicroOp:
+    """One CRAM-PM micro-instruction (Sec. 3.3 code generation)."""
+
+    op: str
+    ins: Tuple[int, ...] = ()
+    out: int = 0
+    gang: bool = True  # presets only: gang preset vs row-sequential write
+
+    def __post_init__(self):
+        if self.op not in OPCODE_ID:
+            raise ValueError(f"unknown opcode {self.op}")
+        if len(self.ins) != ARITY[self.op]:
+            raise ValueError(
+                f"{self.op} expects {ARITY[self.op]} inputs, got {len(self.ins)}")
+
+
+class Program:
+    """A straight-line micro-program plus scheduling statistics."""
+
+    def __init__(self, ops: Iterable[MicroOp] = ()):  # noqa: D401
+        self.ops: List[MicroOp] = list(ops)
+
+    def append(self, op: MicroOp) -> None:
+        self.ops.append(op)
+
+    def extend(self, ops: Iterable[MicroOp]) -> None:
+        self.ops.extend(ops)
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    def __iter__(self):
+        return iter(self.ops)
+
+    def op_counts(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for op in self.ops:
+            key = op.op
+            if key.startswith("PRESET"):
+                key = "PRESET_GANG" if op.gang else "PRESET_ROW"
+            counts[key] = counts.get(key, 0) + 1
+        return counts
+
+    def n_logic_ops(self) -> int:
+        return sum(1 for op in self.ops if not op.op.startswith("PRESET"))
+
+    def n_presets(self) -> Tuple[int, int]:
+        """(gang, row-sequential) preset counts."""
+        gang = sum(1 for o in self.ops if o.op.startswith("PRESET") and o.gang)
+        row = sum(1 for o in self.ops if o.op.startswith("PRESET") and not o.gang)
+        return gang, row
+
+    # -- encoding for the JAX interpreter ---------------------------------
+    def encode(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        n = len(self.ops)
+        opc = np.zeros((n,), np.int32)
+        ins = np.zeros((n, MAX_ARITY), np.int32)
+        out = np.zeros((n,), np.int32)
+        for i, op in enumerate(self.ops):
+            opc[i] = OPCODE_ID[op.op]
+            for j, c in enumerate(op.ins):
+                ins[i, j] = c
+            out[i] = op.out
+        return opc, ins, out
+
+
+def _apply_gate(opc: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """vals: (rows, MAX_ARITY) uint8 gathered inputs -> (rows,) uint8 output."""
+    v = vals.astype(jnp.int32)
+    s2 = v[:, 0] + v[:, 1]
+    s3 = s2 + v[:, 2]
+    s4 = s3 + v[:, 3]
+    s5 = s4 + v[:, 4]
+    one = jnp.ones_like(v[:, 0])
+    zero = jnp.zeros_like(v[:, 0])
+    branches = [
+        zero,                       # PRESET0
+        one,                        # PRESET1
+        (s2 == 0).astype(jnp.int32),  # NOR
+        (s2 > 0).astype(jnp.int32),   # OR
+        (s2 < 2).astype(jnp.int32),   # NAND
+        (s2 == 2).astype(jnp.int32),  # AND
+        1 - v[:, 0],                # INV
+        v[:, 0],                    # COPY
+        (s3 >= 2).astype(jnp.int32),  # MAJ3
+        (s5 >= 3).astype(jnp.int32),  # MAJ5
+        (s4 <= 1).astype(jnp.int32),  # TH
+    ]
+    stacked = jnp.stack(branches, axis=0)        # (n_ops_kinds, rows)
+    return jnp.take(stacked, opc, axis=0).astype(jnp.uint8)
+
+
+def _interp_step(state, instr):
+    opc, ins, out = instr
+    vals = jnp.take(state, ins, axis=1)          # (rows, MAX_ARITY)
+    res = _apply_gate(opc, vals)
+    state = state.at[:, out].set(res)
+    return state, None
+
+
+@jax.jit
+def execute(state: jnp.ndarray, opc: jnp.ndarray, ins: jnp.ndarray,
+            out: jnp.ndarray) -> jnp.ndarray:
+    """Run an encoded micro-program on array ``state`` (rows, cols) uint8."""
+    state, _ = jax.lax.scan(_interp_step, state, (opc, ins, out))
+    return state
+
+
+def run_program(state: jnp.ndarray, program: Program) -> jnp.ndarray:
+    opc, ins, out = program.encode()
+    if len(program) == 0:
+        return state
+    return execute(state, jnp.asarray(opc), jnp.asarray(ins), jnp.asarray(out))
+
+
+class CRAMArray:
+    """Convenience stateful wrapper (functional core above).
+
+    Memory-configuration operations (read/write, Sec. 2.1) are host-mediated
+    and tracked in ``mem_stats`` for the cost model; logic-configuration
+    operations come in as ``Program``s.
+    """
+
+    def __init__(self, n_rows: int, n_cols: int):
+        self.n_rows = n_rows
+        self.n_cols = n_cols
+        self.state = jnp.zeros((n_rows, n_cols), jnp.uint8)
+        self.mem_stats = {"row_writes": 0, "bits_written": 0,
+                          "row_reads": 0, "bits_read": 0}
+
+    # -- memory configuration ---------------------------------------------
+    def write_row(self, row: int, col0: int, bits: Sequence[int]) -> None:
+        bits = np.asarray(bits, np.uint8)
+        self.state = self.state.at[row, col0:col0 + len(bits)].set(bits)
+        self.mem_stats["row_writes"] += 1
+        self.mem_stats["bits_written"] += int(len(bits))
+
+    def write_column_rows(self, col0: int, bits2d: np.ndarray) -> None:
+        """Write the same column range of every row (counted as per-row writes,
+        since at most one row can be written at a time, Sec. 3.3)."""
+        bits2d = np.asarray(bits2d, np.uint8)
+        assert bits2d.shape[0] == self.n_rows
+        self.state = self.state.at[:, col0:col0 + bits2d.shape[1]].set(bits2d)
+        self.mem_stats["row_writes"] += int(bits2d.shape[0])
+        self.mem_stats["bits_written"] += int(bits2d.size)
+
+    def read_row(self, row: int, col0: int, n: int) -> np.ndarray:
+        self.mem_stats["row_reads"] += 1
+        self.mem_stats["bits_read"] += n
+        return np.asarray(self.state[row, col0:col0 + n])
+
+    def read_columns(self, col0: int, n: int) -> np.ndarray:
+        """Read-out of the same columns in all rows (score buffer drain)."""
+        self.mem_stats["row_reads"] += self.n_rows
+        self.mem_stats["bits_read"] += n * self.n_rows
+        return np.asarray(self.state[:, col0:col0 + n])
+
+    # -- logic configuration ------------------------------------------------
+    def run(self, program: Program) -> None:
+        self.state = run_program(self.state, program)

@@ -1,0 +1,193 @@
+"""CRAM-PM pattern matching: Fig. 3 data layout + Algorithm 1.
+
+Each array row holds ``| fragment | pattern | match-string | score/scratch |``
+(2 bits per character).  For every alignment location ``loc``:
+
+* **Phase 1 (match)** -- per character: two bit-level XORs (each the 3-step
+  NOR/COPY/TH sequence) + one NOR produce one match bit (Fig. 4a).
+* **Phase 2 (score)** -- a reduction tree of MAJ-gate full adders pops the
+  match string into an N-bit similarity score (Fig. 4b).
+
+One gate executes per row at a time; all rows run in lock step (Sec. 2.4) --
+which is exactly what the array interpreter in ``array.py`` implements.
+
+``sliding_scores`` is the NumPy oracle used by tests; the TPU fast path lives
+in ``repro.kernels`` (same semantics, packed SWAR / MXU one-hot).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from . import encoding
+from .array import CRAMArray, Program
+from .isa import CodeGen, ColumnAllocator
+
+
+@dataclasses.dataclass(frozen=True)
+class RowLayout:
+    """Column map of one CRAM-PM row (Fig. 3)."""
+
+    fragment_chars: int
+    pattern_chars: int
+    n_cols: int
+
+    @property
+    def frag_lo(self) -> int:
+        return 0
+
+    @property
+    def pat_lo(self) -> int:
+        return 2 * self.fragment_chars
+
+    @property
+    def match_lo(self) -> int:
+        return self.pat_lo + 2 * self.pattern_chars
+
+    @property
+    def scratch_lo(self) -> int:
+        return self.match_lo + self.pattern_chars
+
+    @property
+    def score_bits(self) -> int:
+        return int(np.floor(np.log2(self.pattern_chars))) + 1
+
+    @property
+    def n_alignments(self) -> int:
+        return self.fragment_chars - self.pattern_chars + 1
+
+    def frag_bit_cols(self, char_idx: int) -> Tuple[int, int]:
+        return (2 * char_idx, 2 * char_idx + 1)
+
+    def pat_bit_cols(self, char_idx: int) -> Tuple[int, int]:
+        return (self.pat_lo + 2 * char_idx, self.pat_lo + 2 * char_idx + 1)
+
+
+def plan_layout(n_cols: int, pattern_chars: int,
+                scratch_budget: int = 48) -> RowLayout:
+    """Maximal fragment length for a given row width (Sec. 3.1: fragment
+    length is the design parameter bounded by the ~2K-cell row limit)."""
+    score = int(np.floor(np.log2(pattern_chars))) + 1
+    avail = n_cols - 2 * pattern_chars - pattern_chars - score - scratch_budget
+    frag = avail // 2
+    if frag < pattern_chars:
+        raise ValueError("row too narrow for this pattern length")
+    return RowLayout(frag, pattern_chars, n_cols)
+
+
+def compile_alignment(layout: RowLayout, loc: int, opt: bool = False
+                      ) -> Tuple[Program, List[int]]:
+    """Micro-program for one iteration of Algorithm 1 at location ``loc``.
+
+    Returns (program, score_columns little-endian).  ``opt`` selects the
+    gang-preset schedule (NaiveOpt/OracularOpt) -- functionally identical,
+    priced differently by the cost model.
+    """
+    if not 0 <= loc < layout.n_alignments:
+        raise ValueError("loc out of range")
+    # Consumed match-string columns may be recycled by the reduction tree
+    # (reuse_lo = match_lo): that is how Phase 2 fits in the ~2K-cell row.
+    scratch = ColumnAllocator(layout.scratch_lo, layout.n_cols,
+                              reuse_lo=layout.match_lo)
+    cg = CodeGen(scratch, opt=opt)
+    # Phase 1: aligned comparison -> match string.
+    for i in range(layout.pattern_chars):
+        f0, f1 = layout.frag_bit_cols(loc + i)
+        p0, p1 = layout.pat_bit_cols(i)
+        m = cg.char_match(f0, f1, p0, p1)
+        # Move the match bit to its dedicated compartment column.
+        cg.gate("COPY", (m,), layout.match_lo + i)
+        cg.scratch.release([m])
+    # Phase 2: similarity score = popcount of the match string.
+    match_cols = [layout.match_lo + i for i in range(layout.pattern_chars)]
+    score_cols = cg.popcount_tree(match_cols)
+    return cg.prog, score_cols
+
+
+def count_alignment_ops(pattern_chars: int, n_cols: int = 2048,
+                        opt: bool = False) -> dict:
+    """Static op-count census of one alignment (drives the cost model)."""
+    layout = plan_layout(n_cols, pattern_chars)
+    prog, score_cols = compile_alignment(layout, 0, opt=opt)
+    counts = prog.op_counts()
+    counts["TOTAL_LOGIC"] = prog.n_logic_ops()
+    gang, row = prog.n_presets()
+    counts["PRESETS"] = gang + row
+    counts["SCORE_BITS"] = len(score_cols)
+    counts["FA_COUNT"] = counts.get("MAJ3", 0)
+    return counts
+
+
+class Matcher:
+    """Run Algorithm 1 on a functional CRAM-PM array."""
+
+    def __init__(self, fragments: np.ndarray, pattern_chars: int,
+                 n_cols: int | None = None, opt: bool = True):
+        fragments = np.asarray(fragments, np.uint8)
+        n_rows, frag_chars = fragments.shape
+        if n_cols is None:
+            # Tight layout: just enough room for this fragment length.
+            score = int(np.floor(np.log2(pattern_chars))) + 1
+            n_cols = 2 * frag_chars + 3 * pattern_chars + score + 48
+        self.layout = RowLayout(frag_chars, pattern_chars, n_cols)
+        self.opt = opt
+        self.array = CRAMArray(n_rows, n_cols)
+        self.array.write_column_rows(0, encoding.codes_to_bits(fragments))
+        self._programs: dict[int, Tuple[Program, List[int]]] = {}
+
+    def load_pattern(self, pattern: np.ndarray) -> None:
+        """Same pattern distributed across all rows (paper's default)."""
+        bits = encoding.codes_to_bits(np.asarray(pattern, np.uint8)[None, :])
+        self.array.write_column_rows(
+            self.layout.pat_lo, np.repeat(bits, self.array.n_rows, axis=0))
+
+    def load_patterns_per_row(self, patterns: np.ndarray) -> None:
+        """Oracular-style: a (possibly) different pattern per row."""
+        assert patterns.shape[0] == self.array.n_rows
+        self.array.write_column_rows(
+            self.layout.pat_lo, encoding.codes_to_bits(patterns))
+
+    def _program_for(self, loc: int) -> Tuple[Program, List[int]]:
+        if loc not in self._programs:
+            self._programs[loc] = compile_alignment(self.layout, loc, self.opt)
+        return self._programs[loc]
+
+    def run(self, locs: range | None = None) -> np.ndarray:
+        """Execute Algorithm 1; returns scores (n_rows, n_locs) uint16."""
+        locs = locs if locs is not None else range(self.layout.n_alignments)
+        scores = np.zeros((self.array.n_rows, len(locs)), np.uint16)
+        for j, loc in enumerate(locs):
+            prog, score_cols = self._program_for(loc)
+            self.array.run(prog)
+            bits = np.stack(
+                [self.array.read_columns(c, 1)[:, 0] for c in score_cols], -1)
+            weights = (1 << np.arange(len(score_cols))).astype(np.uint16)
+            scores[:, j] = (bits.astype(np.uint16) * weights).sum(-1)
+        return scores
+
+
+def sliding_scores(fragments: np.ndarray, patterns: np.ndarray) -> np.ndarray:
+    """NumPy oracle: per-row, per-alignment character-match counts.
+
+    fragments: (R, F) uint8 codes; patterns: (P,) shared or (R, P) per-row.
+    Returns (R, F-P+1) int32.
+    """
+    fragments = np.asarray(fragments)
+    patterns = np.asarray(patterns)
+    if patterns.ndim == 1:
+        patterns = np.broadcast_to(patterns, (fragments.shape[0],) + patterns.shape)
+    R, F = fragments.shape
+    P = patterns.shape[1]
+    n_locs = F - P + 1
+    windows = np.lib.stride_tricks.sliding_window_view(fragments, P, axis=1)
+    # windows: (R, n_locs, P)
+    return (windows == patterns[:, None, :]).sum(-1).astype(np.int32)[:, :n_locs]
+
+
+def best_alignment(scores: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row (best_loc, best_score) -- what the host extracts (Sec. 3.2)."""
+    locs = scores.argmax(axis=1)
+    return locs, scores[np.arange(scores.shape[0]), locs]

@@ -1,0 +1,49 @@
+"""Activation-sharding context: logical constraints inside model code.
+
+Model code calls ``constrain(x, ("batch", None, "vocab"))`` at layout-
+critical points (residual stream, logits).  When a mesh has been installed
+via ``activation_sharding(mesh)`` (the dry-run / production launchers do
+this around tracing), the logical axes resolve through the same rule table
+as parameters and become ``with_sharding_constraint``s -- pinning XLA's
+propagation so it never gathers the batch.  Without an installed mesh
+(unit tests, single-device smoke runs) it is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from . import sharding
+
+_MESH: contextvars.ContextVar[Optional[tuple]] = contextvars.ContextVar(
+    "activation_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules=None):
+    token = _MESH.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    cur = _MESH.get()
+    return cur[0] if cur else None
+
+
+def constrain(x, axes: Tuple[Optional[str], ...]):
+    cur = _MESH.get()
+    if cur is None:
+        return x
+    mesh, rules = cur
+    if getattr(x, "ndim", None) != len(axes):
+        return x
+    spec = sharding.spec_for(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,471 @@
+"""Post-SPMD HLO analysis: flops / bytes / collective traffic with
+while-loop trip-count multiplication.
+
+XLA's built-in ``cost_analysis()`` counts each while-loop *body once*, which
+silently drops ~all of the compute in scan-over-layers / microbatch /
+flash-attention programs.  This module re-derives the three roofline terms
+by walking the optimized HLO text:
+
+* computations are parsed into instruction lists,
+* ``while`` ops multiply their body+condition cost by the trip count
+  recovered from the loop condition's comparison constant,
+* ``fusion``/``call`` recurse into their called computations for FLOPs
+  (internal traffic stays on-chip and is excluded from the bytes term;
+  the fusion's own operands+outputs are the HBM traffic),
+* collective operand bytes are accumulated by kind, also trip-multiplied.
+
+The result feeds the roofline terms of EXPERIMENTS.md; XLA's own numbers
+are retained as a cross-check field by the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "sign", "floor", "ceil", "round",
+    "sine", "cosine", "logistic", "atan2", "remainder", "and", "or", "xor",
+    "not", "select", "compare", "clamp", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "erf", "cbrt",
+}
+
+MOVEMENT = {
+    "copy", "transpose", "reshape", "dynamic-slice", "dynamic-update-slice",
+    "gather", "scatter", "slice", "concatenate", "pad", "broadcast",
+    "convert", "reverse", "reduce-window", "select-and-scatter", "sort",
+    "copy-start", "copy-done",
+}
+
+# Movement ops whose real traffic is the *slice*, not the full operand
+# (a dynamic-slice of a stacked scan parameter reads one layer, not all).
+_SLICE_LIKE = {"dynamic-slice", "gather", "slice"}
+# Ops that a TPU compile fuses into consumers: charge strict only.
+_FUSED_AWAY = {"broadcast", "convert", "reshape", "iota", "pad"}
+
+FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "iota", "after-all", "partition-id", "replica-id",
+    "rng", "rng-bit-generator", "rng-get-and-update-state", "domain",
+    "opt-barrier", "custom-call", "infeed", "outfeed", "send", "recv",
+    "send-done", "recv-done", "add-dependency",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.groups()
+        if dtype not in DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    # scalars like f32[] are matched with empty dims; bare "f32" (no
+    # brackets) appears only in operand annotations we don't need.
+    return out
+
+
+def _shape_bytes(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dtype, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    args: str
+    attrs: str
+
+
+def _split_rhs(rhs: str) -> Optional[Tuple[str, str, str, str]]:
+    """rhs of '=' -> (type_str, opcode, args, attrs)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for j, c in enumerate(rhs):
+            depth += c == "("
+            depth -= c == ")"
+            if depth == 0:
+                break
+        type_str, rest = rhs[:j + 1], rhs[j + 1:].strip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rhs[:sp], rhs[sp + 1:].strip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    depth = 0
+    for j in range(par, len(rest)):
+        depth += rest[j] == "("
+        depth -= rest[j] == ")"
+        if depth == 0:
+            break
+    args = rest[par + 1:j]
+    attrs = rest[j + 1:]
+    return type_str, opcode, args, attrs
+
+
+_COMP_HDR = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{")
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_HDR.match(line)
+                if m:
+                    cur = m.group(2)
+                    self.computations[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            s = line.strip()
+            if s.startswith("ROOT "):
+                s = s[5:]
+            eq = s.find(" = ")
+            if eq < 0:
+                continue
+            name = s[:eq].strip().lstrip("%")
+            parsed = _split_rhs(s[eq + 3:])
+            if not parsed:
+                continue
+            type_str, opcode, args, attrs = parsed
+            self.computations[cur].append(
+                Instr(name, type_str, opcode, args, attrs))
+
+        # name -> parsed output shapes, per computation (names are unique
+        # module-wide in post-opt HLO, so a flat dict is fine).
+        self.shapes: Dict[str, List[Tuple[str, List[int]]]] = {}
+        for comp in self.computations.values():
+            for ins in comp:
+                self.shapes[ins.name] = _parse_shapes(ins.type_str)
+
+    # -- helpers ----------------------------------------------------------
+    def operand_names(self, ins: Instr) -> List[str]:
+        return re.findall(r"%([\w.\-]+)", ins.args)
+
+    def operand_bytes(self, ins: Instr) -> int:
+        return sum(_shape_bytes(self.shapes.get(o, [])) for o in
+                   self.operand_names(ins))
+
+    def _called(self, ins: Instr, key: str) -> List[str]:
+        return [m.lstrip("%") for m in
+                re.findall(key + r"=\s*%?([\w.\-]+)", ins.attrs)]
+
+    def trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name, [])
+        consts = []
+        for ins in comp:
+            if ins.opcode == "constant":
+                m = re.match(r"^\s*(-?\d+)\s*$", ins.args)
+                if m:
+                    consts.append(int(m.group(1)))
+        return max(consts) if consts else 1
+
+
+@dataclasses.dataclass
+class Cost:
+    """``bytes`` is the TPU-proxy traffic (dot/movement/reduce boundaries --
+    elementwise chains are assumed fused as a TPU compile would);
+    ``bytes_strict`` additionally charges every CPU-fusion boundary
+    (upper bound; recorded for the cross-check column)."""
+
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_strict: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_strict += other.bytes_strict * mult
+        for k in COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _dot_flops(mod: HloModule, ins: Instr) -> float:
+    out_elems = _shape_elems(mod.shapes.get(ins.name, []))
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    ops = mod.operand_names(ins)
+    if not m or not ops:
+        return 2.0 * out_elems
+    lhs_shapes = mod.shapes.get(ops[0], [])
+    if not lhs_shapes:
+        return 2.0 * out_elems
+    dims = lhs_shapes[0][1]
+    contract = 1
+    for d in m.group(1).split(","):
+        if d and int(d) < len(dims):
+            contract *= dims[int(d)]
+    return 2.0 * out_elems * contract
+
+
+def _flops_only(mod: HloModule, comp_name: str,
+                memo: Dict[str, float]) -> float:
+    """FLOPs inside a fusion computation (recursive, bytes-free)."""
+    if comp_name in memo:
+        return memo[comp_name]
+    total = 0.0
+    for ins in mod.computations.get(comp_name, []):
+        if ins.opcode == "dot":
+            total += _dot_flops(mod, ins)
+        elif ins.opcode == "convolution":
+            total += 2.0 * _shape_elems(mod.shapes.get(ins.name, []))
+        elif ins.opcode in ELEMENTWISE:
+            total += _shape_elems(mod.shapes.get(ins.name, []))
+        elif ins.opcode == "reduce":
+            total += sum(_shape_elems(mod.shapes.get(o, []))
+                         for o in mod.operand_names(ins))
+        elif ins.opcode in ("fusion", "call", "map"):
+            for c in mod._called(ins, "calls") + mod._called(ins, "to_apply"):
+                total += _flops_only(mod, c, memo)
+    memo[comp_name] = total
+    return total
+
+
+HEAVY_OPS = {"dot", "convolution", "reduce", "gather", "scatter",
+             "dynamic-slice", "dynamic-update-slice", "sort"}
+
+
+def _comp_has_heavy(mod: HloModule, comp_name: str,
+                    memo: Dict[str, bool]) -> bool:
+    """Does this (fusion) computation contain non-elementwise work?  Pure
+    elementwise fusions would be fused into neighbors by a TPU compile, so
+    their boundary traffic is excluded from the TPU-proxy bytes term."""
+    if comp_name in memo:
+        return memo[comp_name]
+    memo[comp_name] = False
+    heavy = False
+    for ins in mod.computations.get(comp_name, []):
+        if ins.opcode in HEAVY_OPS:
+            heavy = True
+            break
+        if ins.opcode in ("fusion", "call", "map"):
+            for c in mod._called(ins, "calls") + mod._called(ins, "to_apply"):
+                if _comp_has_heavy(mod, c, memo):
+                    heavy = True
+                    break
+        if heavy:
+            break
+    memo[comp_name] = heavy
+    return heavy
+
+
+@functools.lru_cache(maxsize=8)
+def analyze_hlo(text: str) -> Cost:
+    mod = HloModule(text)
+    fmemo: Dict[str, float] = {}
+    hmemo: Dict[str, bool] = {}
+    cmemo: Dict[str, Cost] = {}
+
+    def walk(comp_name: str) -> Cost:
+        if comp_name in cmemo:
+            return cmemo[comp_name]
+        cost = Cost()
+        for ins in mod.computations.get(comp_name, []):
+            op = ins.opcode
+            out_b = _shape_bytes(mod.shapes.get(ins.name, []))
+            base = op.replace("-start", "").replace("-done", "")
+            if op == "while":
+                conds = mod._called(ins, "condition")
+                bodies = mod._called(ins, "body")
+                trip = mod.trip_count(conds[0]) if conds else 1
+                for b in bodies:
+                    cost.add(walk(b), trip)
+                for c in conds:
+                    cost.add(walk(c), trip)
+            elif base in COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                ob = mod.operand_bytes(ins)
+                cost.coll_bytes[base] += ob or out_b
+                cost.coll_counts[base] += 1
+            elif op == "fusion":
+                heavy = False
+                for c in mod._called(ins, "calls"):
+                    cost.flops += _flops_only(mod, c, fmemo)
+                    heavy |= _comp_has_heavy(mod, c, hmemo)
+                io = mod.operand_bytes(ins) + out_b
+                cost.bytes_strict += io
+                if heavy:
+                    cost.bytes += io
+            elif op in ("call", "map"):
+                for c in mod._called(ins, "to_apply"):
+                    cost.add(walk(c))
+            elif op == "conditional":
+                branches = mod._called(ins, "branch_computations") or \
+                    mod._called(ins, "true_computation") + \
+                    mod._called(ins, "false_computation")
+                sub = [walk(b) for b in branches]
+                if sub:
+                    best = max(sub, key=lambda c: c.flops + c.bytes)
+                    cost.add(best)
+            elif op == "dot":
+                cost.flops += _dot_flops(mod, ins)
+                cost.bytes += mod.operand_bytes(ins) + out_b
+                cost.bytes_strict += mod.operand_bytes(ins) + out_b
+            elif op == "convolution":
+                cost.flops += 2.0 * _shape_elems(mod.shapes.get(ins.name, []))
+                cost.bytes += mod.operand_bytes(ins) + out_b
+                cost.bytes_strict += mod.operand_bytes(ins) + out_b
+            elif op in ELEMENTWISE:
+                cost.flops += _shape_elems(mod.shapes.get(ins.name, []))
+                cost.bytes_strict += mod.operand_bytes(ins) + out_b
+            elif op == "reduce":
+                cost.flops += sum(_shape_elems(mod.shapes.get(o, []))
+                                  for o in mod.operand_names(ins))
+                cost.bytes += mod.operand_bytes(ins) + out_b
+                cost.bytes_strict += mod.operand_bytes(ins) + out_b
+            elif op in MOVEMENT:
+                if op in _SLICE_LIKE:
+                    io = 2 * out_b                     # read slice + write
+                elif op == "dynamic-update-slice":
+                    ops_ = mod.operand_names(ins)
+                    upd = (_shape_bytes(mod.shapes.get(ops_[1], []))
+                           if len(ops_) > 1 else out_b)
+                    io = 2 * upd                       # read + write the slice
+                elif op == "scatter":
+                    ops_ = mod.operand_names(ins)
+                    upd = (_shape_bytes(mod.shapes.get(ops_[2], []))
+                           if len(ops_) > 2 else out_b)
+                    io = 2 * upd
+                else:
+                    io = mod.operand_bytes(ins) + out_b
+                cost.bytes_strict += io
+                if op not in _FUSED_AWAY:
+                    cost.bytes += io
+            # FREE ops: no cost.
+        cmemo[comp_name] = cost
+        return cost
+
+    if mod.entry is None:
+        return Cost()
+    return walk(mod.entry)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    """Per-device roofline terms in seconds (assignment Sec. ROOFLINE)."""
+
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    collectives: Dict[str, float]
+    collective_counts: Dict[str, float]
+
+
+def top_bytes_contributors(text: str, n: int = 15) -> List[Tuple[str, float]]:
+    """Debug/profile helper for the perf loop: heaviest byte contributors
+    (opcode + output type), trip-multiplied, TPU-proxy rules."""
+    mod = HloModule(text)
+    hmemo: Dict[str, bool] = {}
+    contrib: Dict[str, float] = {}
+
+    def walk(comp_name: str, mult: float) -> None:
+        for ins in mod.computations.get(comp_name, []):
+            op = ins.opcode
+            out_b = _shape_bytes(mod.shapes.get(ins.name, []))
+            if op == "while":
+                conds = mod._called(ins, "condition")
+                trip = mod.trip_count(conds[0]) if conds else 1
+                for b in mod._called(ins, "body"):
+                    walk(b, mult * trip)
+                continue
+            if op in ("call", "map"):
+                for c in mod._called(ins, "to_apply"):
+                    walk(c, mult)
+                continue
+            io = 0.0
+            if op == "fusion":
+                if any(_comp_has_heavy(mod, c, hmemo)
+                       for c in mod._called(ins, "calls")):
+                    io = mod.operand_bytes(ins) + out_b
+            elif op in ("dot", "convolution", "reduce"):
+                io = mod.operand_bytes(ins) + out_b
+            elif op in _SLICE_LIKE:
+                io = 2 * out_b
+            elif op == "dynamic-update-slice":
+                ops_ = mod.operand_names(ins)
+                io = 2 * (_shape_bytes(mod.shapes.get(ops_[1], []))
+                          if len(ops_) > 1 else out_b)
+            elif op in MOVEMENT and op not in _FUSED_AWAY:
+                io = mod.operand_bytes(ins) + out_b
+            if io:
+                key = f"{op}:{ins.type_str.split('{')[0]}"
+                contrib[key] = contrib.get(key, 0.0) + io * mult
+
+    if mod.entry:
+        walk(mod.entry, 1.0)
+    return sorted(contrib.items(), key=lambda kv: -kv[1])[:n]
+
+
+def roofline_from_cost(cost: Cost, peak_flops: float = 197e12,
+                       hbm_bw: float = 819e9,
+                       link_bw: float = 50e9) -> Roofline:
+    terms = {
+        "compute": cost.flops / peak_flops,
+        "memory": cost.bytes / hbm_bw,
+        "collective": cost.total_coll_bytes / link_bw,
+    }
+    dom = max(terms, key=terms.get)
+    return Roofline(cost.flops, cost.bytes, cost.total_coll_bytes,
+                    terms["compute"], terms["memory"], terms["collective"],
+                    dom, cost.coll_bytes, cost.coll_counts)

@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules -> NamedShardings (DP/FSDP/TP/EP + pod).
+
+Every parameter/cache/activation dimension carries a *logical* axis name
+(declared in ``models.spec.P``); the table below maps logical names onto
+mesh axes.  Resolution enforces divisibility: a dimension that does not
+divide evenly over its mapped mesh axes silently falls back to replication
+(e.g. mamba2's 24 SSD heads on a 16-way model axis) -- the fallback is the
+documented behaviour, not an error, so one rule table serves every arch.
+
+Default layout (production mesh (data, model) or (pod, data, model)):
+  batch   -> (pod, data)     activations/caches: pure DP
+  embed   -> data            FSDP shard of the non-TP parameter dim
+  vocab / ff / heads / kv_heads / heads_inner / experts -> model (TP / EP)
+  layers  -> None            (scanned stacking dim)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),
+    "vocab": ("model",),
+    "ff": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "heads_inner": ("model",),
+    "experts": ("model",),
+    "layers": (),
+    "seq": (),          # sequence sharding is a hillclimb lever (see perf/)
+}
+
+# ZeRO-3/FSDP-only profile (§Perf lever): weights shard 256-way on their
+# d_model dim and are all-gathered per layer (tens of MB), instead of
+# row-parallel TP all-reducing half-GB activations.  Wins whenever
+# weight-gather bytes << activation-reduce bytes (hybrid/recurrent archs).
+FSDP_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data", "model"),   # pure DP: batch over every axis
+    "embed": ("data", "model"),
+    "vocab": ("model",),
+    "ff": (),
+    "heads": (),
+    "kv_heads": (),
+    "heads_inner": (),
+    "experts": ("model",),
+    "layers": (),
+    "seq": (),
+}
+
+RULE_PROFILES = {"2d": LOGICAL_RULES, "fsdp": FSDP_RULES}
+
+
+def resolve_axis(name: Optional[str], dim: int, mesh: Mesh,
+                 rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    """Mesh axes for one dimension, with divisibility fallback."""
+    if name is None:
+        return None
+    rules = rules or LOGICAL_RULES
+    want = [a for a in rules.get(name, ()) if a in mesh.axis_names]
+    if not want:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in want]))
+    if size <= 1:
+        return None
+    if dim % size != 0:
+        # Try dropping leading axes until it divides (partial sharding).
+        for i in range(1, len(want)):
+            sub = want[i:]
+            s = int(np.prod([mesh.shape[a] for a in sub]))
+            if dim % s == 0:
+                return tuple(sub) if len(sub) > 1 else sub[0]
+        return None
+    return tuple(want) if len(want) > 1 else want[0]
+
+
+def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             mesh: Mesh, rules=None) -> PartitionSpec:
+    used: set = set()
+    out = []
+    for name, dim in zip(axes, shape):
+        r = resolve_axis(name, dim, mesh, rules)
+        flat = (r if isinstance(r, tuple) else (r,)) if r else ()
+        if any(a in used for a in flat):
+            r = None            # a mesh axis may appear once per spec
+        else:
+            used.update(flat)
+        out.append(r)
+    return PartitionSpec(*out)
+
+
+def shardings_for(tree_axes: Any, tree_abstract: Any, mesh: Mesh,
+                  rules=None) -> Any:
+    """Pytree of NamedShardings matching (axes, abstract-shapes)."""
+    def mk(axes, aval):
+        return NamedSharding(mesh, spec_for(axes, aval.shape, mesh, rules))
+    return jax.tree.map(
+        mk, tree_axes, tree_abstract,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return NamedSharding(mesh, PartitionSpec(axes if len(axes) > 1 else axes[0]))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def batch_specs(batch_abstract: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    """Shardings for an input batch dict: leading dim = batch, rest
+    replicated; scalars replicated."""
+    bs = batch_sharding(mesh)
+
+    def mk(aval):
+        if getattr(aval, "ndim", 0) == 0:
+            return replicated(mesh)
+        if aval.shape[0] % total_dp(mesh) == 0:
+            spec = [bs.spec[0]] + [None] * (aval.ndim - 1)
+            return NamedSharding(mesh, PartitionSpec(*spec))
+        return replicated(mesh)
+
+    return jax.tree.map(mk, batch_abstract)
+
+
+def total_dp(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                        if a in mesh.axis_names]))

@@ -1,0 +1,12 @@
+"""CRAM-PM TPU kernels: Pallas implementations + jnp oracles.
+
+Perf-critical compute hot-spots of the paper's workload, adapted to the TPU
+memory hierarchy (see DESIGN.md Sec. 2):
+
+* ``match_swar``  -- VPU bit-parallel sliding match (2-bit packed SWAR).
+* ``match_mxu``   -- MXU one-hot correlation matcher (batched patterns).
+* ``popcount``    -- bulk bitcount (the Fig. 4b adder tree, SWAR form).
+* ``bitwise``     -- bulk NOT/OR/NAND/XOR (Fig. 11 gate-level analogue).
+
+``ops`` is the public wrapper layer; ``ref`` holds the pure-jnp oracles.
+"""

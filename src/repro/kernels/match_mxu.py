@@ -1,0 +1,86 @@
+"""One-hot correlation string match on the MXU -- Pallas TPU kernel.
+
+Hardware-codesign variant (DESIGN.md Sec. 2b): score(r, o, q) =
+sum_i sum_c ref1h[r, o+i, c] * pat1h[q, i, c] is a sliding contraction.
+Where CRAM-PM spends 7 gate steps per character, the systolic array
+contracts 128 character-channels of 128+ alignments against Q patterns per
+pass.  The trick that makes it MXU-shaped: in char-major one-hot layout the
+im2col window matrix is a *stride-4 view* of the flat reference row,
+
+    A[l, k] = flat[(o0 + i0 + l) * 4 + k],   k in [0, 128)
+
+so a (L_TILE, 128) operand tile is assembled from 32 static slices, and the
+whole alignment tile reduces to ceil(4P/128) MXU matmuls of
+(L_TILE, 128) @ (128, Q).
+
+Inputs:
+  ref_flat (R, F4)      bf16 -- one-hot reference rows, char-major flattened
+                                (F4 = 4*F_padded), zero padded.
+  pat_mat  (P4, Q)      bf16 -- one-hot patterns, (i*4+c, q), zero padded to
+                                a multiple of 128 rows.
+  out      (R, L_pad, Q) f32 -- scores (caller trims to L).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+L_TILE = 256
+K_CHUNK = 128            # = 32 characters * 4 channels
+CHARS_PER_CHUNK = K_CHUNK // 4
+
+
+def _mxu_kernel(ref_ref, pat_ref, out_ref, *, n_chunks: int, q: int):
+    loc0 = pl.program_id(1) * L_TILE
+    acc = jnp.zeros((L_TILE, q), jnp.float32)
+    for chunk in range(n_chunks):
+        start = (loc0 + chunk * CHARS_PER_CHUNK) * 4
+        seg = ref_ref[0, pl.ds(start, (L_TILE + CHARS_PER_CHUNK) * 4)]
+        seg2 = seg.reshape(L_TILE + CHARS_PER_CHUNK, 4)
+        # A[l, j*4+c] = seg2[l+j, c] -- 32 static slices, no data movement
+        # beyond VMEM shuffles.
+        a = jnp.concatenate(
+            [seg2[j:j + L_TILE] for j in range(CHARS_PER_CHUNK)], axis=1)
+        b = pat_ref[pl.ds(chunk * K_CHUNK, K_CHUNK), :]
+        acc += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    out_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("l_pad", "interpret"))
+def match_mxu(ref_flat: jnp.ndarray, pat_mat: jnp.ndarray, *, l_pad: int,
+              interpret: bool = False) -> jnp.ndarray:
+    """ref_flat (R, F4) bf16, pat_mat (P4, Q) bf16 -> (R, l_pad, Q) f32.
+
+    ``l_pad`` (multiple of L_TILE) alignment rows are produced; the caller
+    must pad ref_flat so every window read stays in bounds
+    (F4 >= (l_pad + P4/4) * 4) -- use ``ops.match_scores`` which handles all
+    padding and trimming.
+    """
+    R, F4 = ref_flat.shape
+    P4, Q = pat_mat.shape
+    if P4 % K_CHUNK or Q % 128:
+        raise ValueError("pattern rows must be padded to 128, Q to 128")
+    if l_pad % L_TILE:
+        raise ValueError("l_pad must be a multiple of L_TILE")
+    n_chunks = P4 // K_CHUNK
+    deepest = (l_pad - L_TILE + (n_chunks - 1) * CHARS_PER_CHUNK
+               + L_TILE + CHARS_PER_CHUNK) * 4
+    if deepest > F4:
+        raise ValueError(f"ref_flat too short: need {deepest}, have {F4}")
+    grid = (R, l_pad // L_TILE)
+    kernel = functools.partial(_mxu_kernel, n_chunks=n_chunks, q=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, F4), lambda r, t: (r, 0)),
+            pl.BlockSpec((P4, Q), lambda r, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L_TILE, Q), lambda r, t: (r, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, l_pad, Q), jnp.float32),
+        interpret=interpret,
+    )(ref_flat, pat_mat)

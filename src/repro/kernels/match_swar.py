@@ -1,0 +1,88 @@
+"""SWAR bit-parallel sliding string match -- Pallas TPU kernel.
+
+TPU adaptation of CRAM-PM Phase 1+2 (DESIGN.md Sec. 2b): 16 two-bit
+characters per uint32 lane; one VPU op compares 8x128x16 characters -- the
+analogue of a row-wide gang of XOR/NOR gates -- and the popcount reduction
+tree becomes branch-free SWAR arithmetic.  The match string never leaves
+VMEM (the CRAM analogy: the match string never leaves the row).
+
+Data layout:
+  ref_words  (R, W)  uint32 -- folded reference fragments, 16 chars/word,
+                               padded with >= 1 zero word at the end.
+  pat_words  (R, Wp) uint32 -- per-row pattern (broadcast for shared).
+  valid_mask (1, Wp) uint32 -- low-bit-of-lane mask of valid pattern chars.
+  out        (R, L)  int32  -- similarity scores per alignment.
+
+Grid: one program per row tile; the alignment loop runs inside the kernel so
+the reference tile is read from HBM exactly once per pattern block (the
+paper's data-movement-minimization objective, expressed HBM->VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+M1 = np.uint32(0x55555555)
+M2 = np.uint32(0x33333333)
+M4 = np.uint32(0x0F0F0F0F)
+MUL = np.uint32(0x01010101)
+
+ROW_TILE = 8  # sublane-aligned row tile
+
+
+def _swar_kernel(ref_ref, pat_ref, mask_ref, out_ref, *, n_locs: int,
+                 pattern_chars: int, wp: int):
+    pat = pat_ref[...]                       # (ROW_TILE, Wp)
+    mask = mask_ref[...]                     # (1, Wp)
+
+    def body(loc, _):
+        base = loc // 16
+        sh = (loc % 16).astype(jnp.uint32) * 2
+        seg = ref_ref[:, pl.ds(base, wp + 1)]            # (ROW_TILE, Wp+1)
+        lo = seg[:, :wp] >> sh
+        hi_sh = (jnp.uint32(32) - sh) & jnp.uint32(31)
+        hi = jnp.where(sh == 0, jnp.uint32(0), seg[:, 1:] << hi_sh)
+        window = lo | hi
+        diff = window ^ pat
+        mism = (diff | (diff >> jnp.uint32(1))) & M1 & mask
+        # <=1 bit per 2-bit lane: SWAR popcount starting at stage 2.
+        v = (mism & M2) + ((mism >> jnp.uint32(2)) & M2)
+        v = (v + (v >> jnp.uint32(4))) & M4
+        mismatches = ((v * MUL) >> jnp.uint32(24)).astype(jnp.int32).sum(
+            axis=-1, keepdims=True)
+        out_ref[:, pl.ds(loc, 1)] = pattern_chars - mismatches
+        return 0
+
+    jax.lax.fori_loop(0, n_locs, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_locs", "pattern_chars",
+                                             "interpret"))
+def match_swar(ref_words: jnp.ndarray, pat_words: jnp.ndarray,
+               valid_mask: jnp.ndarray, *, n_locs: int, pattern_chars: int,
+               interpret: bool = False) -> jnp.ndarray:
+    """Packed sliding match: see module docstring for layouts."""
+    R, W = ref_words.shape
+    Wp = pat_words.shape[1]
+    if R % ROW_TILE:
+        raise ValueError(f"rows must be padded to a multiple of {ROW_TILE}")
+    grid = (R // ROW_TILE,)
+    kernel = functools.partial(_swar_kernel, n_locs=n_locs,
+                               pattern_chars=pattern_chars, wp=Wp)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, W), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE, Wp), lambda i: (i, 0)),
+            pl.BlockSpec((1, Wp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, n_locs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, n_locs), jnp.int32),
+        interpret=interpret,
+    )(ref_words, pat_words, valid_mask)

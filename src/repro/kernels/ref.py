@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for the CRAM-PM TPU kernels.
+
+Every Pallas kernel in this package has its semantics defined here first;
+``tests/test_kernels_*.py`` sweep shapes/dtypes asserting bit-exact (integer
+paths) or allclose (bf16 MXU path) agreement in ``interpret=True`` mode.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+M2 = np.uint32(0x33333333)
+M4 = np.uint32(0x0F0F0F0F)
+M1 = np.uint32(0x55555555)
+MUL = np.uint32(0x01010101)
+
+
+def popcount_u32(v: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount of a uint32 array (branch-free, VPU-friendly)."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & M1)
+    v = (v & M2) + ((v >> 2) & M2)
+    v = (v + (v >> 4)) & M4
+    return ((v * MUL) >> 24).astype(jnp.int32)
+
+
+def popcount_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """(N, W) uint32 -> (N,) int32 total popcount per row (BC benchmark)."""
+    return popcount_u32(words).sum(axis=-1, dtype=jnp.int32)
+
+
+BITWISE_OPS = ("NOT", "OR", "NAND", "XOR", "AND", "NOR")
+
+
+def bitwise_ref(op: str, a: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    a = a.astype(jnp.uint32)
+    if op == "NOT":
+        return ~a
+    b = b.astype(jnp.uint32)
+    if op == "OR":
+        return a | b
+    if op == "AND":
+        return a & b
+    if op == "NAND":
+        return ~(a & b)
+    if op == "NOR":
+        return ~(a | b)
+    if op == "XOR":
+        return a ^ b
+    raise ValueError(op)
+
+
+def match_scores_ref(fragments: jnp.ndarray, patterns: jnp.ndarray) -> jnp.ndarray:
+    """Character-level sliding similarity scores (Algorithm 1 semantics).
+
+    fragments: (R, F) uint8 codes; patterns: (P,) or (R, P).
+    Returns (R, F-P+1) int32: number of character matches per alignment.
+    """
+    fragments = jnp.asarray(fragments)
+    patterns = jnp.asarray(patterns)
+    if patterns.ndim == 1:
+        patterns = jnp.broadcast_to(patterns, (fragments.shape[0], patterns.shape[0]))
+    R, F = fragments.shape
+    P = patterns.shape[1]
+    L = F - P + 1
+    cols = []
+    for o in range(L):
+        cols.append((fragments[:, o:o + P] == patterns).sum(-1, dtype=jnp.int32))
+    return jnp.stack(cols, axis=1)
+
+
+def match_scores_swar_ref(ref_words: jnp.ndarray, pat_words: jnp.ndarray,
+                          valid_mask: jnp.ndarray, n_locs: int,
+                          pattern_chars: int) -> jnp.ndarray:
+    """jnp mirror of the SWAR kernel's packed semantics.
+
+    ref_words: (R, W) uint32, 16 2-bit chars/word, padded with >=1 zero word
+    beyond the last alignment's reach.  pat_words: (R, Wp) uint32.
+    valid_mask: (Wp,) uint32 -- low bit of each valid char lane set.
+    """
+    ref_words = ref_words.astype(jnp.uint32)
+    pat_words = pat_words.astype(jnp.uint32)
+    R, W = ref_words.shape
+    Wp = pat_words.shape[1]
+    out = []
+    for loc in range(n_locs):
+        base, sh = divmod(loc, 16)
+        r = np.uint32(2 * sh)
+        seg = ref_words[:, base:base + Wp + 1]
+        lo = seg[:, :Wp] >> r
+        if sh == 0:
+            window = lo
+        else:
+            window = lo | (seg[:, 1:] << np.uint32(32 - 2 * sh))
+        diff = window ^ pat_words
+        mism = (diff | (diff >> np.uint32(1))) & M1 & valid_mask[None, :]
+        # mism has at most one bit per 2-bit lane -> start SWAR at stage 2.
+        v = (mism & M2) + ((mism >> 2) & M2)
+        v = (v + (v >> 4)) & M4
+        mismatches = ((v * MUL) >> 24).astype(jnp.int32).sum(-1)
+        out.append(pattern_chars - mismatches)
+    return jnp.stack(out, axis=1)
+
+
+def onehot_scores_ref(fragments: jnp.ndarray, patterns: jnp.ndarray) -> jnp.ndarray:
+    """Batched-pattern scores via one-hot contraction (MXU formulation).
+
+    fragments: (R, F) uint8; patterns: (Q, P) uint8.
+    Returns (R, L, Q) int32 -- score of pattern q aligned at loc o of row r.
+    """
+    fragments = jnp.asarray(fragments)
+    patterns = jnp.asarray(patterns)
+    R, F = fragments.shape
+    Q, P = patterns.shape
+    L = F - P + 1
+    f1h = jax_one_hot(fragments, 4)          # (R, F, 4)
+    p1h = jax_one_hot(patterns, 4)           # (Q, P, 4)
+    out = []
+    for o in range(L):
+        win = f1h[:, o:o + P, :].reshape(R, P * 4)
+        out.append(win @ p1h.reshape(Q, P * 4).T)
+    return jnp.stack(out, axis=1).astype(jnp.int32)
+
+
+def jax_one_hot(x: jnp.ndarray, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (x[..., None] == jnp.arange(n, dtype=x.dtype)).astype(dtype)

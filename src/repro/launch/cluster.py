@@ -1,0 +1,92 @@
+"""Multi-host cluster bootstrap (1000+ node path).
+
+On a real TPU/TRN fleet every host runs the same entry point; this module
+derives (coordinator, process_id, process_count) from the scheduler
+environment (TPU metadata, SLURM, or explicit REPRO_* variables), calls
+``jax.distributed.initialize``, and returns the host's role.  The rest of
+the stack is already multi-host-clean:
+
+* ``make_production_mesh`` builds from ``jax.devices()`` (global after
+  initialize);
+* ``data.pipeline.host_shard`` slices the deterministic batch stream by
+  (process_id, process_count) -- restarts replay identically on any host
+  count;
+* ``checkpoint.CheckpointManager`` restores onto any mesh (elastic), so a
+  job rescheduled from 2 pods to 1 resumes from the same step;
+* the straggler watchdog (runtime/loop.py) triggers the snapshot +
+  drop-and-reshard path on slow hosts.
+
+Typical driver::
+
+    from repro.launch import cluster
+    info = cluster.initialize()           # no-op on a single host
+    mesh = make_production_mesh(multi_pod=info.process_count > 1)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HostInfo:
+    coordinator: Optional[str]
+    process_id: int
+    process_count: int
+
+    @property
+    def is_coordinator(self) -> bool:
+        return self.process_id == 0
+
+
+def detect_environment(env=None) -> HostInfo:
+    """Resolve the host's role from the environment (no side effects).
+
+    Priority: explicit REPRO_* vars > SLURM > single host.
+    """
+    env = env if env is not None else os.environ
+    if "REPRO_COORDINATOR" in env:
+        return HostInfo(
+            coordinator=env["REPRO_COORDINATOR"],
+            process_id=int(env.get("REPRO_PROCESS_ID", "0")),
+            process_count=int(env.get("REPRO_NUM_PROCESSES", "1")),
+        )
+    if "SLURM_JOB_NUM_NODES" in env and int(env["SLURM_JOB_NUM_NODES"]) > 1:
+        nodelist = env.get("SLURM_STEP_NODELIST", env.get("SLURM_NODELIST", ""))
+        first = _first_slurm_node(nodelist)
+        port = env.get("REPRO_PORT", "8476")
+        return HostInfo(
+            coordinator=f"{first}:{port}" if first else None,
+            process_id=int(env.get("SLURM_PROCID", "0")),
+            process_count=int(env["SLURM_JOB_NUM_NODES"]),
+        )
+    return HostInfo(coordinator=None, process_id=0, process_count=1)
+
+
+def _first_slurm_node(nodelist: str) -> Optional[str]:
+    """First hostname of a SLURM nodelist ('a[001-004],b02' -> 'a001')."""
+    if not nodelist:
+        return None
+    head = nodelist.split(",")[0]
+    if "[" not in head:
+        return head
+    prefix, rng = head.split("[", 1)
+    rng = rng.rstrip("]")
+    first = rng.split(",")[0].split("-")[0]
+    return prefix + first
+
+
+def initialize(info: Optional[HostInfo] = None) -> HostInfo:
+    """Call jax.distributed.initialize when running multi-host; no-op on a
+    single host (this container)."""
+    info = info or detect_environment()
+    if info.process_count > 1 and info.coordinator:
+        import jax
+        jax.distributed.initialize(
+            coordinator_address=info.coordinator,
+            num_processes=info.process_count,
+            process_id=info.process_id,
+        )
+    return info

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture x input-shape x mesh) cell: build the production
+mesh from 512 placeholder host devices, lower the step function with
+ShapeDtypeStruct stand-ins (zero allocation), ``.compile()`` it, and record
+``memory_analysis()`` / ``cost_analysis()`` / the post-SPMD collective
+schedule into a JSON line.  A failure here (sharding mismatch, OOM at
+compile, unsupported collective) is a bug in the system.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.distributed import context as dist_context
+from repro.distributed import hlo_analysis, sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import SHAPES, model, shape_applicable
+from repro.models.spec import abstract, tree_axes
+from repro.optim import adamw
+from repro.runtime import steps
+
+
+def analytic_bytes_per_dev(cfg, shape, n_dev: int, tp: int = 16,
+                           dp: int | None = None) -> float:
+    """Coarse analytic HBM-traffic floor per device (documented in
+    EXPERIMENTS §Roofline): weight/grad/optimizer/activation/cache passes
+    for an ideally fused TPU program.  The HLO-walker bytes term reflects
+    CPU fusion granularity and is an upper bound; the truth for a real TPU
+    compile lies between the two."""
+    Na = cfg.n_active_params()
+    dp = dp or (n_dev // tp)
+    B, S = shape.global_batch, shape.seq_len
+    b_loc = max(B // dp, 1)
+    d = cfg.d_model
+    L = cfg.n_layers
+    if shape.kind == "train":
+        w = 3 * 2 * Na / tp                      # gather-write + fwd/bwd reads
+        g = 2 * 4 * Na / tp * max(cfg.microbatch, 1)   # f32 grad accum r/w
+        opt = 6 * 4 * Na / n_dev                 # m, v, master r+w
+        acts = L * b_loc * S * d * 2 * 4 * 2     # saved residuals w+r
+        logits = 2 * b_loc * S * (cfg.padded_vocab / tp) * 4
+        return w + g + opt + acts + logits
+    cache = 0.0
+    if shape.kind in ("prefill", "decode"):
+        # KV/state cache bytes per device (from the cache specs).
+        from repro.models.spec import abstract as _abs
+        caches = _abs(model.cache_specs(cfg, B, S))
+        total = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                    for a in jax.tree.leaves(caches))
+        cache = total / n_dev
+    if shape.kind == "prefill":
+        w = 2 * 2 * Na / tp
+        acts = L * b_loc * S * d * 2 * 2
+        return w + acts + 2 * cache
+    # decode: every parameter read once per step + cache read + write slice.
+    w = 2 * Na / tp
+    return w + cache
+
+
+import numpy as np  # noqa: E402  (used by analytic_bytes_per_dev)
+
+
+def _opt_state_abstract(params_abs):
+    f32 = lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params_abs),
+        "v": jax.tree.map(f32, params_abs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _opt_state_shardings(params_sh, mesh):
+    return {"m": params_sh, "v": params_sh, "step": sharding.replicated(mesh)}
+
+
+def _batch_shardings(cfg, shape, batch_abs, mesh, rules=None):
+    out = sharding.batch_specs(
+        {k: v for k, v in batch_abs.items() if k != "caches"}, mesh)
+    if "caches" in batch_abs:
+        cache_axes = tree_axes(model.cache_specs(
+            cfg, shape.global_batch, shape.seq_len))
+        out["caches"] = sharding.shardings_for(
+            cache_axes, batch_abs["caches"], mesh, rules)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg=None, mesh=None) -> Dict[str, Any]:
+    t0 = time.time()
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    try:
+        mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+        rules = sharding.RULE_PROFILES[cfg.sharding_profile]
+        pspecs = model.param_specs(cfg)
+        params_abs = abstract(pspecs)
+        params_sh = sharding.shardings_for(tree_axes(pspecs), params_abs,
+                                           mesh, rules)
+        batch_abs = model.input_specs(cfg, shape)
+        batch_sh = _batch_shardings(cfg, shape, batch_abs, mesh, rules)
+        step_fn = steps.make_step(cfg, shape.kind, adamw.OptConfig())
+
+        with dist_context.activation_sharding(mesh, rules):
+            if shape.kind == "train":
+                opt_abs = _opt_state_abstract(params_abs)
+                opt_sh = _opt_state_shardings(params_sh, mesh)
+                jitted = jax.jit(step_fn,
+                                 in_shardings=(params_sh, opt_sh, batch_sh),
+                                 out_shardings=(params_sh, opt_sh, None),
+                                 donate_argnums=(0, 1))
+                lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            else:
+                jitted = jax.jit(step_fn,
+                                 in_shardings=(params_sh, batch_sh),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(params_abs, batch_abs)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        cost = dict(cost or {})
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            }
+        except Exception as e:  # pragma: no cover
+            mem_rec = {"error": str(e)}
+        text = compiled.as_text()
+        walk = hlo_analysis.analyze_hlo(text)
+        roof = hlo_analysis.roofline_from_cost(walk)
+
+        n = cfg.n_params()
+        na = cfg.n_active_params()
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 6.0 * na * tokens
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * na * tokens
+        else:
+            tokens = shape.global_batch
+            model_flops = 2.0 * na * tokens
+        n_dev = mesh.devices.size
+        ana_bytes = analytic_bytes_per_dev(cfg, shape, n_dev)
+        rec.update({
+            "analytic_bytes_per_dev": ana_bytes,
+            "memory_s_analytic": ana_bytes / 819e9,
+            "status": "ok",
+            "n_devices": int(n_dev),
+            "lower_s": round(t_lower - t0, 2),
+            "compile_s": round(t_compile - t_lower, 2),
+            "params": n, "active_params": na, "tokens": tokens,
+            "model_flops_global": model_flops,
+            "hlo_flops_per_dev": roof.flops,
+            "hlo_bytes_per_dev": roof.hbm_bytes,
+            "hlo_bytes_strict_per_dev": walk.bytes_strict,
+            "collective_bytes_per_dev": roof.collective_bytes,
+            # XLA's own cost_analysis (loop bodies counted once) kept as a
+            # cross-check against the trip-multiplied walker numbers above.
+            "xla_flops_per_dev": float(cost.get("flops", 0.0) or 0.0),
+            "xla_bytes_per_dev": float(cost.get("bytes accessed", 0.0) or 0.0),
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "dominant": roof.dominant,
+            "useful_flops_ratio": (model_flops / n_dev) / roof.flops
+            if roof.flops else None,
+            "collectives": roof.collectives,
+            "collective_counts": roof.collective_counts,
+            "memory": mem_rec,
+        })
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="append JSONL records to this file")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    out_path = pathlib.Path(args.out) if args.out else None
+    if out_path:
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                rec = lower_cell(arch, shape_name, multi_pod, cfg=cfg,
+                                 mesh=mesh)
+                line = json.dumps(rec)
+                summary = {k: rec.get(k) for k in
+                           ("arch", "shape", "mesh", "status", "dominant",
+                            "compile_s", "error")}
+                print(json.dumps(summary), flush=True)
+                if out_path:
+                    with out_path.open("a") as f:
+                        f.write(line + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""LM model stack: config, param specs, layers, and assembly."""
+
+from . import config, layers, model, rglru, spec, ssm
+from .config import SHAPES, InputShape, ModelConfig, shape_applicable
+
+__all__ = ["config", "layers", "model", "rglru", "spec", "ssm",
+           "SHAPES", "InputShape", "ModelConfig", "shape_applicable"]

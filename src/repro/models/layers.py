@@ -1,0 +1,460 @@
+"""Core LM layers: norms, RoPE, memory-bounded attention, MLP, MoE.
+
+All attention paths are *chunked online-softmax* (flash-style, pure JAX
+``lax.scan`` over KV blocks) so the S x S score matrix is never materialized
+-- required for the 32k prefill cells to fit, and the natural thing XLA
+overlaps with collectives under pjit.
+
+Every ``*_specs`` function returns a pytree of ``spec.P`` declarations whose
+logical axes drive sharding: "embed" (d_model), "ff", "heads", "kv_heads",
+"vocab", "experts" -> model axis (TP/EP); batch/seq axes are activation-side.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .spec import P
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig) -> Dict[str, P]:
+    if cfg.norm == "rms":
+        return {"scale": P((cfg.d_model,), ("embed",), "ones")}
+    return {"scale": P((cfg.d_model,), ("embed",), "ones"),
+            "bias": P((cfg.d_model,), ("embed",), "zeros")}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "rms":
+        var = jnp.mean(jnp.square(x32), -1, keepdims=True)
+        out = x32 * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    else:
+        mu = jnp.mean(x32, -1, keepdims=True)
+        var = jnp.var(x32, -1, keepdims=True)
+        out = (x32 - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return out.astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, H, S, D); positions: (B, S) int32."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, K = cfg.padded_heads, cfg.padded_kv_heads
+    specs: Dict[str, Any] = {
+        "wq": P((d, H, hd), ("embed", "heads", None)),
+        "wk": P((d, K, hd), ("embed", "kv_heads", None)),
+        "wv": P((d, K, hd), ("embed", "kv_heads", None)),
+        "wo": P((H, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        specs["bq"] = P((H, hd), ("heads", None), "zeros")
+        specs["bk"] = P((K, hd), ("kv_heads", None), "zeros")
+        specs["bv"] = P((K, hd), ("kv_heads", None), "zeros")
+    return specs
+
+
+def _pick_block(skv: int, max_blk: int) -> int:
+    """Largest divisor of skv that is <= max_blk (whisper's 1500 frames)."""
+    b = min(max_blk, skv)
+    while skv % b:
+        b -= 1
+    return b
+
+
+def _online_softmax_scan(q, k, v, *, causal: bool, window: Optional[int],
+                         q_offset, block_kv: int, bidir: bool = False):
+    """q (B,H,Sq,D); k,v (B,K,Skv,D) -> (B,H,Sq,D).  Never materializes the
+    full score matrix; scans KV blocks with a running (max, denom, acc)."""
+    B, H, Sq, D = q.shape
+    _, K, Skv, _ = k.shape
+    G = H // K
+    scale = 1.0 / math.sqrt(D)
+    nb = Skv // block_kv
+    assert nb * block_kv == Skv, "Skv must be divisible by block_kv"
+    qg = q.reshape(B, K, G, Sq, D)
+    kb = jnp.moveaxis(k.reshape(B, K, nb, block_kv, D), 2, 0)
+    vb = jnp.moveaxis(v.reshape(B, K, nb, block_kv, D), 2, 0)
+    q_pos = q_offset[:, None] + jnp.arange(Sq)[None, :]      # (B, Sq)
+
+    def body(carry, blk):
+        m, l, acc, j = carry
+        k_j, v_j = blk
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, k_j,
+                       preferred_element_type=jnp.float32) * scale
+        kv_pos = j * block_kv + jnp.arange(block_kv)          # (C,)
+        if not bidir:
+            mask = q_pos[:, None, None, :, None] >= kv_pos[None, None, None, None, :]
+            if window is not None:
+                mask &= (q_pos[:, None, None, :, None]
+                         - kv_pos[None, None, None, None, :]) < window
+            s = jnp.where(mask, s, -1e30)
+        new_m = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - new_m)
+        p = jnp.exp(s - new_m[..., None])
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p.astype(v_j.dtype), v_j,
+            preferred_element_type=jnp.float32)
+        return (new_m, l, acc, j + 1), None
+
+    m0 = jnp.full((B, K, G, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, 0), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def _local_block_attention(q, k, v, *, window: int):
+    """Sliding-window causal attention in block-local form: each query chunk
+    of size `window` attends to (previous, self) chunks only -- linear in S,
+    scanned over chunks so only one (w x 2w) score tile is live at a time.
+    Shapes as in _online_softmax_scan; requires Sq == Skv divisible by
+    window."""
+    B, H, S, D = q.shape
+    _, K, _, _ = k.shape
+    G = H // K
+    w = window
+    nc = S // w
+    assert nc * w == S
+    scale = 1.0 / math.sqrt(D)
+    qg = jnp.moveaxis(q.reshape(B, K, G, nc, w, D), 3, 0)   # (nc,B,K,G,w,D)
+    kc = jnp.moveaxis(k.reshape(B, K, nc, w, D), 2, 0)      # (nc,B,K,w,D)
+    vc = jnp.moveaxis(v.reshape(B, K, nc, w, D), 2, 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kc[:1]), kc[:-1]], 0)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:1]), vc[:-1]], 0)
+    qi = jnp.arange(w)[:, None] + w                # position within 2w window
+    ki = jnp.arange(2 * w)[None, :]
+    mask = (qi >= ki) & ((qi - ki) < w)            # (w, 2w)
+    mask0 = mask & (jnp.arange(2 * w)[None, :] >= w)
+
+    def body(_, blk):
+        qi_, kp, kk, vp, vv, is_first = blk
+        k2 = jnp.concatenate([kp, kk], 2)          # (B,K,2w,D)
+        v2 = jnp.concatenate([vp, vv], 2)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qi_, k2,
+                       preferred_element_type=jnp.float32) * scale
+        m = jnp.where(is_first, mask0, mask)
+        s = jnp.where(m[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqc,bkcd->bkgqd", p.astype(v2.dtype), v2,
+                       preferred_element_type=jnp.float32)
+        return 0, o.astype(qi_.dtype)
+
+    is_first = jnp.arange(nc) == 0
+    _, outs = jax.lax.scan(body, 0, (qg, kprev, kc, vprev, vc, is_first))
+    out = jnp.moveaxis(outs, 0, 3)                 # (B,K,G,nc,w,D)
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+def attention_apply(cfg: ModelConfig, p, x, *, positions, mode: str,
+                    cache: Optional[Dict] = None, cache_index=None,
+                    local: bool = False, bidir: bool = False,
+                    xa: Optional[jnp.ndarray] = None):
+    """Full attention sub-layer (projections + mixing + out projection).
+
+    mode: "full" (train/prefill over the whole sequence) or "decode"
+    (one new token against the cache).  Returns (out, new_cache).
+    cache: {"k","v": (B, K, S_max, hd)} -- updated functionally.
+    ``xa``: encoder output for cross-attention (whisper); cross-attn caches
+    are precomputed K/V over xa.
+    """
+    B = x.shape[0]
+    H, K, hd = cfg.padded_heads, cfg.padded_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)[None, :, None, :]
+    if mode == "decode" and xa is not None:
+        k = v = None    # cross-attn decode reads precomputed enc K/V cache
+    else:
+        kv_src = xa if xa is not None else x
+        k = jnp.einsum("bsd,dhk->bhsk", kv_src, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bhsk", kv_src, p["wv"].astype(x.dtype))
+        if "bk" in p:
+            k = k + p["bk"].astype(x.dtype)[None, :, None, :]
+            v = v + p["bv"].astype(x.dtype)[None, :, None, :]
+
+    use_rope = cfg.rope_theta > 0 and xa is None
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+
+    window = cfg.local_window if local else None
+
+    if mode == "full":
+        if use_rope:
+            k = apply_rope(k, positions, cfg.rope_theta)
+        new_cache = None
+        offset = cache_index if cache_index is not None else 0
+        if cache is not None and xa is None:
+            if cfg.kv_quant:
+                kq, ks = _kv_quantize(k)
+                vq, vs = _kv_quantize(v)
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(
+                        cache["k"], kq, (0, 0, offset, 0)),
+                    "v": jax.lax.dynamic_update_slice(
+                        cache["v"], vq, (0, 0, offset, 0)),
+                    "k_scale": jax.lax.dynamic_update_slice(
+                        cache["k_scale"], ks, (0, 0, offset)),
+                    "v_scale": jax.lax.dynamic_update_slice(
+                        cache["v_scale"], vs, (0, 0, offset)),
+                }
+            else:
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(
+                        cache["k"], k.astype(cache["k"].dtype),
+                        (0, 0, offset, 0)),
+                    "v": jax.lax.dynamic_update_slice(
+                        cache["v"], v.astype(cache["v"].dtype),
+                        (0, 0, offset, 0)),
+                }
+        elif cache is not None:
+            # cross-attention: cache precomputed encoder K/V (full length).
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+            }
+
+        # Chunked continuation (speculative verify / chunked prefill): when
+        # writing at a nonzero offset, queries must attend the cached
+        # context too, so the KV source becomes the updated cache; the
+        # causal mask (q_pos = offset + i) hides stale higher positions.
+        continuation = (cache is not None and xa is None
+                        and cache_index is not None)
+        if continuation:
+            if cfg.kv_quant:
+                kk = (new_cache["k"].astype(COMPUTE_DTYPE)
+                      * new_cache["k_scale"][..., None].astype(COMPUTE_DTYPE))
+                vv = (new_cache["v"].astype(COMPUTE_DTYPE)
+                      * new_cache["v_scale"][..., None].astype(COMPUTE_DTYPE))
+            else:
+                kk, vv = new_cache["k"], new_cache["v"]
+            kk = kk.astype(q.dtype)
+            vv = vv.astype(q.dtype)
+        else:
+            kk, vv = k, v
+        q_off = (offset + jnp.zeros((B,), jnp.int32)
+                 if continuation else jnp.zeros((B,), jnp.int32))
+
+        blk = _pick_block(kk.shape[2], cfg.attn_block_kv)
+        if xa is not None or bidir:
+            out = _online_softmax_scan(
+                q, k, v, causal=False, window=None,
+                q_offset=jnp.zeros((B,), jnp.int32),
+                block_kv=_pick_block(k.shape[2], cfg.attn_block_kv),
+                bidir=True)
+        elif local and not continuation and kk.shape[2] % cfg.local_window == 0:
+            out = _local_block_attention(q, kk, vv, window=cfg.local_window)
+        elif local:
+            out = _online_softmax_scan(
+                q, kk, vv, causal=True, window=cfg.local_window,
+                q_offset=q_off, block_kv=blk)
+        else:
+            out = _online_softmax_scan(
+                q, kk, vv, causal=True, window=window,
+                q_offset=q_off, block_kv=blk)
+    elif mode == "decode":
+        assert cache is not None
+        k_scale = v_scale = None
+        if xa is None:
+            if use_rope:
+                k = apply_rope(k, positions, cfg.rope_theta)
+            if cfg.kv_quant:
+                kq, ks = _kv_quantize(k)
+                vq, vs = _kv_quantize(v)
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], kq, (0, 0, cache_index, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], vq, (0, 0, cache_index, 0))
+                cks = jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, (0, 0, cache_index))
+                cvs = jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, (0, 0, cache_index))
+                new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+                k_scale, v_scale = cks, cvs
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype),
+                    (0, 0, cache_index, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype),
+                    (0, 0, cache_index, 0))
+                new_cache = {"k": ck, "v": cv}
+            kk, vv = ck, cv
+            S_max = kk.shape[2]
+            kv_pos = jnp.arange(S_max)
+            valid = kv_pos[None, :] <= (cache_index + jnp.zeros((B,), jnp.int32))[:, None]
+            if window is not None:
+                valid &= (cache_index - kv_pos[None, :]) < window
+        else:
+            # cross-attention decode: cache holds precomputed enc K/V.
+            kk, vv = cache["k"], cache["v"]
+            if cfg.kv_quant:
+                k_scale, v_scale = cache["k_scale"], cache["v_scale"]
+            new_cache = cache
+            valid = jnp.ones((B, kk.shape[2]), bool)
+        G = H // K
+        qg = q.reshape(B, K, G, 1, hd)
+        # int8 cache: the per-(b,k,s) scale is constant over hd, so it folds
+        # *outside* the dots -- the MXU operands stay quantized and the
+        # dequantized bf16 cache is never materialized (exact algebra).
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qg, kk.astype(q.dtype),
+                       preferred_element_type=jnp.float32) / math.sqrt(hd)
+        if k_scale is not None:
+            s = s * k_scale[:, :, None, None, :]
+        s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        if v_scale is not None:
+            pr = pr * v_scale[:, :, None, None, :]
+        out = jnp.einsum("bkgqs,bksd->bkgqd", pr.astype(COMPUTE_DTYPE),
+                         vv.astype(COMPUTE_DTYPE),
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(B, H, 1, hd).astype(x.dtype)
+    else:
+        raise ValueError(mode)
+
+    y = jnp.einsum("bhsk,hkd->bsd", out.astype(x.dtype),
+                   p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def attn_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, P]:
+    K, hd = cfg.padded_kv_heads, cfg.head_dim
+    ax = ("batch", "kv_heads", None, None)
+    if cfg.kv_quant:
+        sax = ("batch", "kv_heads", None)
+        return {
+            "k": P((batch, K, seq_len, hd), ax, "zeros", jnp.int8),
+            "v": P((batch, K, seq_len, hd), ax, "zeros", jnp.int8),
+            "k_scale": P((batch, K, seq_len), sax, "zeros", jnp.float32),
+            "v_scale": P((batch, K, seq_len), sax, "zeros", jnp.float32),
+        }
+    return {"k": P((batch, K, seq_len, hd), ax, "zeros", COMPUTE_DTYPE),
+            "v": P((batch, K, seq_len, hd), ax, "zeros", COMPUTE_DTYPE)}
+
+
+def _kv_quantize(x: jnp.ndarray):
+    """(B,K,S,hd) -> (int8 values, f32 scale (B,K,S)).  Symmetric per-token
+    per-head scaling; exact dequant is x_q * scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig) -> Dict[str, P]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "silu":
+        return {"wg": P((d, f), ("embed", "ff")),
+                "wu": P((d, f), ("embed", "ff")),
+                "wd": P((f, d), ("ff", "embed"))}
+    return {"wi": P((d, f), ("embed", "ff")),
+            "bi": P((f,), ("ff",), "zeros"),
+            "wo": P((f, d), ("ff", "embed")),
+            "bo": P((d,), ("embed",), "zeros")}
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    if cfg.act == "silu":
+        g = jax.nn.silu(x @ p["wg"].astype(x.dtype))
+        u = x @ p["wu"].astype(x.dtype)
+        return (g * u) @ p["wd"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["wi"].astype(x.dtype) + p["bi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype) + p["bo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (GShard-style grouped capacity dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, P]:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    return {
+        "router": P((d, E), ("embed", "experts")),
+        "wg": P((E, d, f), ("experts", "embed", "ff")),
+        "wu": P((E, d, f), ("experts", "embed", "ff")),
+        "wd": P((E, f, d), ("experts", "ff", "embed")),
+    }
+
+
+def moe_apply(cfg: ModelConfig, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) -> (out, aux_loss).  Token-choice top-k with per-group
+    capacity; dispatch/combine as einsums so EP sharding lowers to
+    all-to-alls under pjit (DESIGN.md sharding map)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    Sg = min(cfg.moe_group_size, B * S)
+    T = B * S
+    G = T // Sg
+    assert G * Sg == T, "tokens must divide the MoE group size"
+    xt = x.reshape(G, Sg, d)
+    logits = jnp.einsum("gsd,de->gse", xt, p["router"].astype(x.dtype))
+    gates = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    probs, idx = jax.lax.top_k(gates, k)                    # (G,Sg,k)
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
+    C = max(int(k * Sg * cfg.capacity_factor / E), 4)
+
+    dispatch = jnp.zeros((G, Sg, E, C), COMPUTE_DTYPE)
+    combine = jnp.zeros((G, Sg, E, C), jnp.float32)
+    counts = jnp.zeros((G, 1, E), jnp.int32)
+    for slot in range(k):
+        mask = jax.nn.one_hot(idx[:, :, slot], E, dtype=jnp.int32)  # (G,Sg,E)
+        pos = jnp.cumsum(mask, axis=1) - 1 + counts
+        keep = (pos < C) & (mask > 0)
+        pos1h = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                               dtype=COMPUTE_DTYPE)[..., :C]       # (G,Sg,E,C)
+        dispatch = dispatch + pos1h
+        combine = combine + pos1h.astype(jnp.float32) * probs[:, :, slot][..., None, None]
+        counts = counts + mask.sum(axis=1, keepdims=True)
+
+    ein = jnp.einsum("gsec,gsd->gecd", dispatch, xt,
+                     preferred_element_type=COMPUTE_DTYPE)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ein, p["wg"].astype(ein.dtype)))
+    u = jnp.einsum("gecd,edf->gecf", ein, p["wu"].astype(ein.dtype))
+    eo = jnp.einsum("gecf,efd->gecd", h * u, p["wd"].astype(ein.dtype))
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(eo.dtype), eo)
+
+    # Load-balance aux loss (Switch): E * sum_e f_e * P_e.
+    f_e = jax.nn.one_hot(idx[:, :, 0], E).mean(axis=(0, 1))
+    p_e = gates.mean(axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e)
+    return out.reshape(B, S, d), aux.astype(jnp.float32)

@@ -1,0 +1,433 @@
+"""Model assembly: param specs, scanned layer stacks, train/prefill/decode.
+
+The layer stack is organized as repeating *units* (= cfg.block_pattern), with
+all full units stacked and executed under one ``jax.lax.scan`` (flat HLO,
+depth-independent compile time) and any remainder layers unrolled.  Caches
+are stacked the same way and threaded through the scan as per-unit xs/ys.
+
+Three entry points (what the dry-run lowers):
+  * ``loss_fn``      -- train forward + next-token CE (+ MoE aux)
+  * ``prefill``      -- full-sequence forward filling a decode cache
+  * ``decode_step``  -- one token against the cache
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.context import constrain
+
+from . import layers, rglru, ssm
+from .config import InputShape, ModelConfig
+from .layers import COMPUTE_DTYPE
+from .spec import P, abstract, initialize, stack, tree_axes
+
+
+# ---------------------------------------------------------------------------
+# Block-level dispatch
+# ---------------------------------------------------------------------------
+
+def block_specs(cfg: ModelConfig, kind: str, cross: bool = False) -> Dict[str, Any]:
+    if kind in ("attn", "local_attn"):
+        d: Dict[str, Any] = {
+            "ln1": layers.norm_specs(cfg),
+            "attn": layers.attention_specs(cfg),
+            "ln2": layers.norm_specs(cfg),
+            "mlp": layers.mlp_specs(cfg),
+        }
+        if cross:
+            d["lnx"] = layers.norm_specs(cfg)
+            d["xattn"] = layers.attention_specs(cfg, cross=True)
+        return d
+    if kind == "moe":
+        return {
+            "ln1": layers.norm_specs(cfg),
+            "attn": layers.attention_specs(cfg),
+            "ln2": layers.norm_specs(cfg),
+            "moe": layers.moe_specs(cfg),
+        }
+    if kind == "ssd":
+        return {"ln1": layers.norm_specs(cfg), "ssd": ssm.ssd_specs(cfg)}
+    if kind == "rglru":
+        return {
+            "ln1": layers.norm_specs(cfg),
+            "rglru": rglru.rglru_specs(cfg),
+            "ln2": layers.norm_specs(cfg),
+            "mlp": layers.mlp_specs(cfg),
+        }
+    raise ValueError(kind)
+
+
+def block_cache_specs(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                      cross_len: int = 0) -> Dict[str, Any]:
+    if kind in ("attn", "local_attn", "moe"):
+        d = {"attn": layers.attn_cache_specs(cfg, batch, seq_len)}
+        if cross_len:
+            d["xattn"] = layers.attn_cache_specs(cfg, batch, cross_len)
+        return d
+    if kind == "ssd":
+        return {"ssd": ssm.ssd_cache_specs(cfg, batch)}
+    if kind == "rglru":
+        return {"rglru": rglru.rglru_cache_specs(cfg, batch)}
+    raise ValueError(kind)
+
+
+def block_apply(cfg: ModelConfig, kind: str, p, x, *, positions, mode: str,
+                cache=None, cache_index=None, xa=None, bidir=False):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    if kind in ("attn", "local_attn", "moe"):
+        h = layers.apply_norm(cfg, p["ln1"], x)
+        a, c = layers.attention_apply(
+            cfg, p["attn"], h, positions=positions, mode=mode,
+            cache=cache.get("attn") if cache else None,
+            cache_index=cache_index, local=(kind == "local_attn"),
+            bidir=bidir)
+        if c is not None:
+            new_cache["attn"] = c
+        x = x + a
+        if "xattn" in p:
+            h = layers.apply_norm(cfg, p["lnx"], x)
+            # cross-attn: full mode computes enc K/V; decode uses cache.
+            xc, cc = layers.attention_apply(
+                cfg, p["xattn"], h, positions=positions,
+                mode=mode, cache=cache.get("xattn") if cache else None,
+                cache_index=cache_index, xa=xa)
+            if cc is not None:
+                new_cache["xattn"] = cc
+            x = x + xc
+        h = layers.apply_norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            m, aux = layers.moe_apply(cfg, p["moe"], h)
+        else:
+            m = layers.mlp_apply(cfg, p["mlp"], h)
+        x = x + m
+    elif kind == "ssd":
+        h = layers.apply_norm(cfg, p["ln1"], x)
+        s, c = ssm.ssd_apply(cfg, p["ssd"], h, mode=mode,
+                             cache=cache.get("ssd") if cache else None)
+        if c is not None:
+            new_cache["ssd"] = c
+        x = x + s
+    elif kind == "rglru":
+        h = layers.apply_norm(cfg, p["ln1"], x)
+        r, c = rglru.rglru_apply(cfg, p["rglru"], h, mode=mode,
+                                 cache=cache.get("rglru") if cache else None)
+        if c is not None:
+            new_cache["rglru"] = c
+        x = x + r
+        h = layers.apply_norm(cfg, p["ln2"], x)
+        x = x + layers.mlp_apply(cfg, p["mlp"], h)
+    else:
+        raise ValueError(kind)
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# Stack layout: full units scanned, remainder unrolled
+# ---------------------------------------------------------------------------
+
+def _unit_layout(cfg: ModelConfig, n_layers: int) -> Tuple[int, Tuple[str, ...]]:
+    unit = cfg.block_pattern
+    n_units = n_layers // len(unit)
+    rest = tuple(cfg.layer_pattern[n_units * len(unit): n_layers])
+    return n_units, rest
+
+
+def _stack_param_specs(cfg: ModelConfig, n_layers: int,
+                       cross: bool = False) -> Dict[str, Any]:
+    n_units, rest = _unit_layout(cfg, n_layers)
+    unit_specs = {str(i): block_specs(cfg, kind, cross=cross)
+                  for i, kind in enumerate(cfg.block_pattern)}
+    out: Dict[str, Any] = {}
+    if n_units:
+        out["units"] = stack(n_units, unit_specs)
+    if rest:
+        out["rest"] = {str(i): block_specs(cfg, kind, cross=cross)
+                       for i, kind in enumerate(rest)}
+    return out
+
+
+def _stack_cache_specs(cfg: ModelConfig, n_layers: int, batch: int,
+                       seq_len: int, cross_len: int = 0) -> Dict[str, Any]:
+    n_units, rest = _unit_layout(cfg, n_layers)
+    unit = {str(i): block_cache_specs(cfg, kind, batch, seq_len, cross_len)
+            for i, kind in enumerate(cfg.block_pattern)}
+    out: Dict[str, Any] = {}
+    if n_units:
+        out["units"] = stack(n_units, unit)
+    if rest:
+        out["rest"] = {str(i): block_cache_specs(cfg, kind, batch, seq_len,
+                                                 cross_len)
+                       for i, kind in enumerate(rest)}
+    return out
+
+
+def _apply_stack(cfg: ModelConfig, stack_params, x, *, positions, mode,
+                 caches=None, cache_index=None, xa=None, bidir=False,
+                 pattern: Optional[Tuple[str, ...]] = None):
+    """Run the (scanned units + unrolled rest) stack.
+
+    Returns (x, new_caches, aux_total)."""
+    pattern = pattern or cfg.block_pattern
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def unit_fn(carry, unit_in):
+        xx, aux = carry
+        u_params, u_cache = unit_in
+        new_u_cache = {}
+        for i, kind in enumerate(pattern):
+            c_i = u_cache[str(i)] if u_cache is not None else None
+            xx, nc, a = block_apply(cfg, kind, u_params[str(i)], xx,
+                                    positions=positions, mode=mode,
+                                    cache=c_i, cache_index=cache_index,
+                                    xa=xa, bidir=bidir)
+            xx = constrain(xx, ("batch", None, None))
+            if nc is not None:
+                new_u_cache[str(i)] = nc
+            aux = aux + a
+        return (xx, aux), (new_u_cache or None)
+
+    new_caches: Dict[str, Any] = {}
+    if "units" in stack_params:
+        u_caches = caches.get("units") if caches else None
+        fn = unit_fn
+        if cfg.remat and mode == "full" and caches is None:
+            fn = jax.checkpoint(unit_fn,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (stack_params["units"], u_caches)
+        (x, aux_total), ys = jax.lax.scan(fn, (x, aux_total), xs)
+        if ys is not None:
+            new_caches["units"] = ys
+    if "rest" in stack_params:
+        # Remainder layers continue the repeating pattern from a unit
+        # boundary, so kind i is pattern[i % len(pattern)].
+        new_rest = {}
+        for i, key in enumerate(sorted(stack_params["rest"], key=int)):
+            kind = pattern[i % len(pattern)]
+            c_i = caches["rest"][key] if caches else None
+            x, nc, a = block_apply(cfg, kind, stack_params["rest"][key], x,
+                                   positions=positions, mode=mode, cache=c_i,
+                                   cache_index=cache_index, xa=xa, bidir=bidir)
+            if nc is not None:
+                new_rest[key] = nc
+            aux_total = aux_total + a
+        if new_rest:
+            new_caches["rest"] = new_rest
+    return x, (new_caches or None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Whole-model specs
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.padded_vocab
+    out: Dict[str, Any] = {}
+    # The token embedding always exists (stub-frontend archs still decode
+    # text tokens); stub modalities feed precomputed embeddings instead of
+    # using it on the way in.
+    out["embed"] = P((V, d), ("vocab", "embed"), "embed")
+    if cfg.is_encdec:
+        out["encoder"] = {
+            "blocks": _stack_param_specs_enc(cfg),
+            "ln_f": layers.norm_specs(cfg),
+        }
+        out["decoder"] = {
+            "blocks": _stack_param_specs(cfg, cfg.n_layers, cross=True),
+            "ln_f": layers.norm_specs(cfg),
+        }
+    else:
+        out["blocks"] = _stack_param_specs(cfg, cfg.n_layers)
+        out["ln_f"] = layers.norm_specs(cfg)
+    if not cfg.tie_embeddings:
+        out["unembed"] = P((d, V), ("embed", "vocab"))
+    if cfg.param_dtype == "bf16":
+        # Serving deployments hold weights in bf16 (halves decode weight
+        # traffic; training keeps f32 master copies in the optimizer).
+        out = jax.tree.map(
+            lambda s: P(s.shape, s.axes, s.init, jnp.bfloat16), out,
+            is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+def _stack_param_specs_enc(cfg: ModelConfig) -> Dict[str, Any]:
+    unit = {"0": block_specs(cfg, "attn")}
+    return {"units": stack(cfg.n_enc_layers, unit)}
+
+
+def init_params(cfg: ModelConfig, rng) -> Any:
+    return initialize(param_specs(cfg), rng)
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return abstract(param_specs(cfg))
+
+
+def param_axes(cfg: ModelConfig) -> Any:
+    return tree_axes(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _sinusoid(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], -1).astype(np.float32)
+
+
+def _sinusoid_at(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Sinusoidal embedding at traced positions (B, S) -> (B, S, d)."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, None, :]
+    ang = positions[..., None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def encode(cfg: ModelConfig, params, frames) -> jnp.ndarray:
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    x = frames.astype(COMPUTE_DTYPE)
+    x = x + jnp.asarray(_sinusoid(x.shape[1], cfg.d_model),
+                        COMPUTE_DTYPE)[None]
+    B = x.shape[0]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], (B, x.shape[1]))
+    x, _, _ = _apply_stack(cfg, params["encoder"]["blocks"], x,
+                           positions=positions, mode="full", bidir=True,
+                           pattern=("attn",))
+    return layers.apply_norm(cfg, params["encoder"]["ln_f"], x)
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
+            *, mode: str = "full", caches=None, cache_index=None):
+    """Returns (logits_f32, new_caches, aux)."""
+    if cfg.is_encdec:
+        xa = encode(cfg, params, batch["frames"]) if "frames" in batch \
+            else batch.get("enc_out")
+    else:
+        xa = None
+
+    if cfg.input_mode == "embeddings" and "embeds" in batch:
+        x = batch["embeds"].astype(COMPUTE_DTYPE)
+        B, S = x.shape[0], x.shape[1]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    x = constrain(x, ("batch", None, None))
+
+    if cache_index is not None:
+        positions = jnp.broadcast_to(
+            (jnp.asarray(cache_index) + jnp.arange(S))[None], (B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    if cfg.is_encdec and cfg.rope_theta <= 0:
+        x = x + _sinusoid_at(positions, cfg.d_model).astype(COMPUTE_DTYPE)
+
+    blocks = params["decoder"]["blocks"] if cfg.is_encdec else params["blocks"]
+    ln_f = params["decoder"]["ln_f"] if cfg.is_encdec else params["ln_f"]
+    x, new_caches, aux = _apply_stack(
+        cfg, blocks, x, positions=positions, mode=mode, caches=caches,
+        cache_index=cache_index, xa=xa)
+    x = layers.apply_norm(cfg, ln_f, x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(x.dtype))
+    else:
+        logits = x @ params["unembed"].astype(x.dtype)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits.astype(jnp.float32), new_caches, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    """Next-token CE over the batch (+ MoE aux loss)."""
+    logits, _, aux = forward(cfg, params, batch, mode="full")
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Caches / serving entry points
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    cross_len = cfg.n_audio_frames if cfg.is_encdec else 0
+    return _stack_cache_specs(cfg, cfg.n_layers, batch, seq_len, cross_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Any:
+    return initialize(cache_specs(cfg, batch, seq_len),
+                      jax.random.PRNGKey(0))
+
+
+def prefill(cfg: ModelConfig, params, batch, caches):
+    """Full-sequence forward that fills the decode cache; returns
+    (last_logits (B, V), caches)."""
+    logits, new_caches, _ = forward(cfg, params, batch, mode="full",
+                                    caches=caches, cache_index=0)
+    return logits[:, -1], new_caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, cache_index,
+                enc_out=None):
+    """One decode step: tokens (B, 1) -> (logits (B, V), new caches)."""
+    batch = {"tokens": tokens}
+    if cfg.is_encdec:
+        batch["enc_out"] = enc_out
+    logits, new_caches, _ = forward(cfg, params, batch, mode="decode",
+                                    caches=caches, cache_index=cache_index)
+    return logits[:, -1], new_caches
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for the dry-run
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract inputs for (arch x shape) -- no allocation (dry-run)."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            return {"frames": jax.ShapeDtypeStruct(
+                        (B, cfg.n_audio_frames, cfg.d_model), COMPUTE_DTYPE),
+                    "tokens": tok, "labels": tok}
+        if cfg.input_mode == "embeddings":
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   COMPUTE_DTYPE),
+                    "labels": tok}
+        return {"tokens": tok, "labels": tok}
+    if shape.kind == "prefill":
+        base = {"caches": abstract(cache_specs(cfg, B, S))}
+        if cfg.is_encdec:
+            base.update({"frames": jax.ShapeDtypeStruct(
+                (B, cfg.n_audio_frames, cfg.d_model), COMPUTE_DTYPE),
+                "tokens": tok})
+        elif cfg.input_mode == "embeddings":
+            base["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                  COMPUTE_DTYPE)
+        else:
+            base["tokens"] = tok
+        return base
+    if shape.kind == "decode":
+        base = {
+            "caches": abstract(cache_specs(cfg, B, S)),
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache_index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if cfg.is_encdec:
+            base["enc_out"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_audio_frames, cfg.d_model), COMPUTE_DTYPE)
+        return base
+    raise ValueError(shape.kind)

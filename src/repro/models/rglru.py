@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Recurrence: with r_t = sigma(W_a x_t + b_a), i_t = sigma(W_x x_t + b_x),
+
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t     = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill runs the recurrence as a ``jax.lax.associative_scan`` over
+time (log-depth, shardable); decode is the O(1) per-step update.  The full
+recurrent block is: x -> [linear -> conv1d(4) -> RG-LRU] * gelu(linear) ->
+out projection.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import COMPUTE_DTYPE
+from .spec import P
+from .ssm import _causal_conv
+
+
+def rglru_specs(cfg: ModelConfig) -> Dict[str, P]:
+    d = cfg.d_model
+    r = cfg.rnn_width or d
+    nb = cfg.rglru_block_diag
+    if nb:
+        # Block-diagonal gates: blocks shard over the model axis, so the
+        # whole branch (projection -> conv -> gates -> recurrence) stays
+        # within one shard -- no activation collectives until wo.
+        gate = lambda: P((nb, r // nb, r // nb), ("ff", None, None))
+    else:
+        gate = lambda: P((r, r), ("ff", None))
+    return {
+        "wx": P((d, r), ("embed", "ff")),
+        "wy": P((d, r), ("embed", "ff")),
+        "conv": P((4, r), (None, "ff"), "normal"),
+        "w_a": gate(),
+        "b_a": P((r,), ("ff",), "zeros"),
+        "w_i": gate(),
+        "b_i": P((r,), ("ff",), "zeros"),
+        "lam": P((r,), ("ff",), "ones"),
+        "wo": P((r, d), ("ff", "embed")),
+    }
+
+
+def _gate_matmul(cfg: ModelConfig, x, w):
+    """x (B,S,r) @ w, dense or block-diagonal."""
+    if cfg.rglru_block_diag:
+        nb = cfg.rglru_block_diag
+        B, S, r = x.shape
+        xb = x.reshape(B, S, nb, r // nb)
+        out = jnp.einsum("bsnk,nkj->bsnj", xb, w.astype(x.dtype))
+        return out.reshape(B, S, r)
+    return x @ w.astype(x.dtype)
+
+
+def _rglru_core(cfg, p, x, h0: Optional[jnp.ndarray], c: float, mode: str):
+    """x (B,S,r) branch input; returns (h (B,S,r), h_last)."""
+    r_gate = jax.nn.sigmoid(
+        _gate_matmul(cfg, x, p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i_gate = jax.nn.sigmoid(
+        _gate_matmul(cfg, x, p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -c * jax.nn.softplus(p["lam"]) * r_gate          # (B,S,r) f32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i_gate * x.astype(jnp.float32)
+
+    if mode == "decode":
+        h = a[:, 0] * (h0 if h0 is not None else 0.0) + gated[:, 0]
+        return h[:, None].astype(x.dtype), h
+
+    if h0 is not None:
+        # Fold the carried state in as a virtual step 0.
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None], gated], axis=1)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_apply(cfg: ModelConfig, p, x, *, mode: str,
+                cache: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full recurrent block.  x (B,S,d) -> (y (B,S,d), new_cache)."""
+    xb = x @ p["wx"].astype(x.dtype)
+    yb = jax.nn.gelu(x @ p["wy"].astype(x.dtype))
+    conv_state = cache.get("conv") if cache else None
+    xb, new_conv = _causal_conv(xb, p["conv"], conv_state)
+    h0 = cache["h"].astype(jnp.float32) if cache and "h" in cache else None
+    hh, h_last = _rglru_core(cfg, p, xb, h0, cfg.rglru_c, mode)
+    out = (hh * yb) @ p["wo"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": h_last.astype(COMPUTE_DTYPE)}
+    return out, new_cache
+
+
+def rglru_cache_specs(cfg: ModelConfig, batch: int) -> Dict[str, P]:
+    r = cfg.rnn_width or cfg.d_model
+    return {
+        "conv": P((batch, 3, r), ("batch", None, "ff"), "zeros", COMPUTE_DTYPE),
+        "h": P((batch, r), ("batch", "ff"), "zeros", COMPUTE_DTYPE),
+    }

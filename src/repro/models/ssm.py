@@ -1,0 +1,170 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+contraction *within* chunks + a linear recurrence *across* chunks -- the
+same compute shape as the paper's reduction tree (local combine, global
+carry), which is why it scans/shards cleanly.  Decode is the O(1) recurrent
+state update.
+
+Head count is padded to the TP width (cfg.ssd_heads); d_inner follows as
+heads * head_dim.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import COMPUTE_DTYPE
+from .spec import P
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssd_heads * cfg.ssm_head_dim
+
+
+def ssd_specs(cfg: ModelConfig) -> Dict[str, P]:
+    d, N, H = cfg.d_model, cfg.ssm_state, cfg.ssd_heads
+    di = _d_inner(cfg)
+    kc = cfg.ssm_conv
+    return {
+        "wz": P((d, di), ("embed", "heads_inner")),
+        "wx": P((d, di), ("embed", "heads_inner")),
+        "wB": P((d, N), ("embed", None)),
+        "wC": P((d, N), ("embed", None)),
+        "wdt": P((d, H), ("embed", "heads")),
+        "dt_bias": P((H,), ("heads",), "zeros"),
+        "A_log": P((H,), ("heads",), "zeros"),
+        "D": P((H,), ("heads",), "ones"),
+        "conv_x": P((kc, di), (None, "heads_inner"), "normal"),
+        "conv_B": P((kc, N), (None, None), "normal"),
+        "conv_C": P((kc, N), (None, None), "normal"),
+        "norm": P((di,), ("heads_inner",), "ones"),
+        "wo": P((di, d), ("heads_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, kernel k.  x (B,S,C), w (k,C).
+    state (B,k-1,C) holds the trailing context for decode; returns
+    (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return y, new_state
+
+
+def ssd_apply(cfg: ModelConfig, p, x, *, mode: str,
+              cache: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x (B,S,d) -> (y (B,S,d), new_cache)."""
+    B, S, d = x.shape
+    H, N, Pd = cfg.ssd_heads, cfg.ssm_state, cfg.ssm_head_dim
+    di = _d_inner(cfg)
+    z = x @ p["wz"].astype(x.dtype)
+    xs = x @ p["wx"].astype(x.dtype)
+    Bv = x @ p["wB"].astype(x.dtype)
+    Cv = x @ p["wC"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        (x @ p["wdt"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"]).astype(jnp.float32)                       # (B,S,H)
+    conv_state = cache.get("conv") if cache else None
+    packed = jnp.concatenate([xs, Bv, Cv], -1)
+    wconv = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], -1)
+    packed, new_conv = _causal_conv(packed, wconv, conv_state)
+    packed = jax.nn.silu(packed)
+    xs, Bv, Cv = jnp.split(packed, [di, di + N], axis=-1)
+
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    log_a = dt * A                                                # (B,S,H) <= 0
+
+    if mode == "decode":
+        assert S == 1 and cache is not None
+        h = cache["state"]                                        # (B,H,Pd,N)
+        a = jnp.exp(log_a[:, 0])                                  # (B,H)
+        xh = xs[:, 0].reshape(B, H, Pd)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], Bv[:, 0], xh)
+        h = h * a[:, :, None, None] + dBx.astype(h.dtype)
+        y = jnp.einsum("bhpn,bn->bhp", h, Cv[:, 0])
+        y = y + p["D"].astype(y.dtype)[None, :, None] * xh
+        y = y.reshape(B, 1, di).astype(x.dtype)
+        new_cache = {"conv": new_conv, "state": h}
+    else:
+        c = min(cfg.ssm_chunk, S)
+        nc = S // c
+        assert nc * c == S, "seq must divide ssm_chunk"
+        xc = xs.reshape(B, nc, c, H, Pd)
+        Bc = Bv.reshape(B, nc, c, N)
+        Cc = Cv.reshape(B, nc, c, N)
+        dtc = dt.reshape(B, nc, c, H)
+        lac = log_a.reshape(B, nc, c, H)
+        La = jnp.cumsum(lac, axis=2)                              # (B,nc,c,H)
+        # Intra-chunk (the "duality" quadratic form).  n = chunk, m = state.
+        intra_dt = COMPUTE_DTYPE if cfg.ssd_bf16_intra else jnp.float32
+        G = jnp.einsum("bnim,bnjm->bnij",
+                       Cc.astype(jnp.float32),
+                       Bc.astype(jnp.float32)).astype(intra_dt)
+        decay = jnp.exp(La[:, :, :, None, :]
+                        - La[:, :, None, :, :]).astype(intra_dt)
+        ii = jnp.arange(c)
+        causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+        M = jnp.where(causal, G[..., None] * decay
+                      * dtc[:, :, None, :, :].astype(intra_dt),
+                      jnp.zeros((), intra_dt))
+        y_intra = jnp.einsum("bnijh,bnjhp->bnihp", M.astype(COMPUTE_DTYPE),
+                             xc.astype(COMPUTE_DTYPE))
+        # Chunk states + inter-chunk linear recurrence.
+        tail = jnp.exp(La[:, :, -1:, :] - La)                     # (B,nc,c,H)
+        chunk_state = jnp.einsum(
+            "bnch,bncm,bnchp->bnhpm",
+            (tail * dtc).astype(COMPUTE_DTYPE), Bc.astype(COMPUTE_DTYPE),
+            xc.astype(COMPUTE_DTYPE))
+        a_chunk = jnp.exp(La[:, :, -1, :])                        # (B,nc,H)
+
+        h0 = (cache["state"].astype(jnp.float32) if cache and "state" in cache
+              else jnp.zeros((B, H, Pd, N), jnp.float32))
+
+        def scan_fn(h, inp):
+            s_n, a_n = inp  # (B,H,Pd,N), (B,H)
+            out_h = h
+            h = h * a_n[:, :, None, None] + s_n
+            return h, out_h
+
+        cs = jnp.moveaxis(chunk_state.astype(jnp.float32), 1, 0)  # (nc,B,H,Pd,N)
+        ac = jnp.moveaxis(a_chunk, 1, 0)                          # (nc,B,H)
+        h_final, h_prevs = jax.lax.scan(scan_fn, h0, (cs, ac))
+        h_prevs = jnp.moveaxis(h_prevs, 0, 1)                     # (B,nc,H,Pd,N)
+        y_inter = jnp.einsum(
+            "bncm,bnch,bnhpm->bnchp",
+            Cc.astype(jnp.float32), jnp.exp(La), h_prevs)
+        y = (y_intra.astype(jnp.float32) + y_inter)
+        y = y + p["D"][None, None, None, :, None] * xc.astype(jnp.float32)
+        y = y.reshape(B, S, di).astype(x.dtype)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv, "state": h_final.astype(COMPUTE_DTYPE)}
+
+    # Gated RMSNorm + output projection (Mamba-2 block epilogue).
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    y = (y32 * jax.lax.rsqrt(jnp.mean(jnp.square(y32), -1, keepdims=True)
+                             + 1e-6) * p["norm"]).astype(x.dtype)
+    return y @ p["wo"].astype(x.dtype), new_cache
+
+
+def ssd_cache_specs(cfg: ModelConfig, batch: int) -> Dict[str, P]:
+    H, N, Pd = cfg.ssd_heads, cfg.ssm_state, cfg.ssm_head_dim
+    di = _d_inner(cfg)
+    ch = di + 2 * N
+    return {
+        "conv": P((batch, cfg.ssm_conv - 1, ch), ("batch", None, None),
+                  "zeros", COMPUTE_DTYPE),
+        "state": P((batch, H, Pd, N), ("batch", "heads", None, None),
+                   "zeros", COMPUTE_DTYPE),
+    }

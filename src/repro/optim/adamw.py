@@ -1,0 +1,112 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping (pure JAX).
+
+Functional: ``init`` builds the (m, v, step) state with the same sharding
+axes as the parameters (the state pytree mirrors params), ``update`` returns
+new (params, state).  Optional gradient compression (bf16 cast before the
+cross-replica reduction) is applied in the train step, not here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_compression: str = "none"      # none | bf16 | int8
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = cfg.peak_lr * jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init(params) -> dict:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(cfg: OptConfig, grads, state, params) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = schedule(cfg, step.astype(jnp.float32))
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+def compress(cfg: OptConfig, grads):
+    """Gradient-compression hook applied before the cross-replica reduce.
+
+    bf16: plain down-cast (2x wire traffic reduction).  int8: per-leaf
+    symmetric quantization with f32 scale (error feedback handled by Adam's
+    v-normalization; good enough for DP all-reduce traffic studies)."""
+    if cfg.grad_compression == "none":
+        return grads
+    if cfg.grad_compression == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    if cfg.grad_compression == "int8":
+        def q(g):
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-9) / 127.0
+            return (jnp.round(g / scale).astype(jnp.int8), scale)
+        return jax.tree.map(q, grads)
+    raise ValueError(cfg.grad_compression)
+
+
+def decompress(cfg: OptConfig, grads):
+    if cfg.grad_compression == "int8":
+        return jax.tree.map(
+            lambda t: t[0].astype(jnp.float32) * t[1], grads,
+            is_leaf=lambda x: isinstance(x, tuple))
+    return grads

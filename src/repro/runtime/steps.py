@@ -1,0 +1,94 @@
+"""Step functions: train_step (with microbatch grad accumulation),
+prefill_step, decode step -- the three programs the dry-run lowers.
+
+The microbatch loop is a ``lax.scan`` accumulating f32 grads; with
+reduce-scatter-friendly output shardings XLA overlaps the cross-replica
+grad reduction with the next microbatch's backward pass (the
+compute/communication overlap lever recorded in EXPERIMENTS §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def _split_microbatches(batch: Dict[str, Any], n: int) -> Dict[str, Any]:
+    def sp(x):
+        if getattr(x, "ndim", 0) == 0:
+            return x
+        b = x.shape[0]
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig
+                    ) -> Callable[[Any, dict, Dict[str, Any]],
+                                  Tuple[Any, dict, dict]]:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def grads_of(params, mb):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, mb))(params)
+        return loss, grads
+
+    def train_step(params, opt_state, batch):
+        n_mb = max(cfg.microbatch, 1)
+        if n_mb > 1:
+            mbs = _split_microbatches(batch, n_mb)
+
+            def body(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = grads_of(params, mb)
+                grad_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss_sum / n_mb
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        grads = adamw.decompress(opt_cfg, adamw.compress(opt_cfg, grads))
+        new_params, new_opt, metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        caches = batch["caches"]
+        inputs = {k: v for k, v in batch.items() if k != "caches"}
+        return model.prefill(cfg, params, inputs, caches)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch):
+        return model.decode_step(
+            cfg, params, batch["caches"], batch["tokens"],
+            batch["cache_index"], enc_out=batch.get("enc_out"))
+    return decode_step
+
+
+def make_step(cfg: ModelConfig, kind: str, opt_cfg=None):
+    if kind == "train":
+        return make_train_step(cfg, opt_cfg or adamw.OptConfig())
+    if kind == "prefill":
+        return make_prefill_step(cfg)
+    if kind == "decode":
+        return make_decode_step(cfg)
+    raise ValueError(kind)

@@ -1,0 +1,126 @@
+"""Serving engine: batched prefill + decode with slot management.
+
+Continuous-batching-lite: a fixed pool of decode slots; finished requests
+free their slot and queued prompts are prefilled into it (cache rows are
+per-slot, so admission is a cache write, not a recompile).  Greedy sampling
+(argmax) keeps the engine deterministic for tests; the sampler is
+pluggable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int,
+                 n_slots: int,
+                 sampler: Optional[Callable] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.n_slots = n_slots
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        self.caches = model.init_cache(cfg, n_slots, max_seq)
+        self._decode = jax.jit(
+            lambda p, c, t, i: model.decode_step(cfg, p, c, t, i))
+        self.slot_pos = np.zeros(n_slots, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+
+    # -- admission -----------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    def add(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        # Per-slot prefill: decode the prompt token by token into the slot's
+        # cache rows (keeps a single compiled decode program; a batched
+        # prefill program is used by the launcher for cold starts).
+        for t, tok in enumerate(req.prompt):
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            toks[slot, 0] = tok
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.int32(int(self.slot_pos[slot])))
+            self.slot_pos[slot] += 1
+        self.slot_req[slot] = req
+        req._last_logits = np.asarray(logits[slot])  # type: ignore
+        return True
+
+    # -- decode --------------------------------------------------------------
+    def step(self) -> None:
+        """One batched decode step across all active slots."""
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        active = []
+        for i, r in enumerate(self.slot_req):
+            if r is None or r.done:
+                continue
+            last = r.out[-1] if r.out else int(
+                np.argmax(r._last_logits))  # type: ignore
+            if not r.out:
+                r.out.append(last)
+            toks[i, 0] = r.out[-1]
+            active.append(i)
+        if not active:
+            return
+        pos = int(max(self.slot_pos[i] for i in active))
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(toks), jnp.int32(pos))
+        nxt = np.asarray(self.sampler(logits))
+        for i in active:
+            r = self.slot_req[i]
+            r.out.append(int(nxt[i]))
+            self.slot_pos[i] += 1
+            if len(r.out) >= r.max_new or self.slot_pos[i] >= self.max_seq - 1:
+                r.done = True
+                self.slot_req[i] = None
+
+    def run(self, requests: List[Request], max_steps: int = 10_000) -> None:
+        queue = list(requests)
+        steps = 0
+        while (queue or any(self.slot_req)) and steps < max_steps:
+            while queue and self.add(queue[0]):
+                queue.pop(0)
+            self.step()
+            steps += 1
+
+
+def generate_greedy(cfg: ModelConfig, params, prompts: np.ndarray,
+                    max_new: int, max_seq: int) -> np.ndarray:
+    """Simple batched prefill+decode generation (examples/tests).
+
+    prompts: (B, S) int32 -> (B, max_new) int32 greedy continuations.
+    """
+    B, S = prompts.shape
+    caches = model.init_cache(cfg, B, max_seq)
+    logits, caches = model.prefill(
+        cfg, params, {"tokens": jnp.asarray(prompts)}, caches)
+    out = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    decode = jax.jit(lambda p, c, t, i: model.decode_step(cfg, p, c, t, i))
+    for t in range(max_new):
+        out.append(np.asarray(tok)[:, 0])
+        logits, caches = decode(params, caches, tok, jnp.int32(S + t))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return np.stack(out, 1)

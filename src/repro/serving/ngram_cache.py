@@ -1,0 +1,77 @@
+"""N-gram speculative proposer backed by the CRAM-PM matcher (serving-plane
+integration of the paper's technique; DESIGN.md Sec. 4).
+
+Token history is transcoded to the 2-bit alphabet (each token id -> 8
+crumbs) and folded across rows like the paper's reference (Fig. 3).  To
+propose continuations for the current suffix, the suffix is matched
+row-parallel against the history; the characters following the best-scoring
+alignment are proposed as speculative tokens (exactly the paper's
+"map a short pattern to the most similar substring of a long reference",
+repurposed as prompt-cache lookup / n-gram speculation).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import encoding
+from repro.kernels import ops
+
+CRUMBS_PER_TOKEN = 8    # 16-bit token ids -> 8 two-bit crumbs
+
+
+def tokens_to_crumbs(tokens: np.ndarray) -> np.ndarray:
+    tokens = np.asarray(tokens, np.uint32)
+    shifts = (2 * np.arange(CRUMBS_PER_TOKEN, dtype=np.uint32))
+    return ((tokens[..., None] >> shifts) & 3).astype(np.uint8).reshape(
+        tokens.shape[:-1] + (-1,))
+
+
+class NgramSpeculator:
+    def __init__(self, suffix_tokens: int = 4, fragment_tokens: int = 128,
+                 method: str = "swar"):
+        self.suffix_tokens = suffix_tokens
+        self.fragment_tokens = fragment_tokens
+        self.method = method
+        self.history: List[int] = []
+
+    def feed(self, tokens: List[int] | np.ndarray) -> None:
+        self.history.extend(int(t) for t in np.asarray(tokens).reshape(-1))
+
+    def propose(self, suffix: List[int] | np.ndarray,
+                k: int = 4) -> Tuple[np.ndarray, float]:
+        """Speculative continuation of length k after the best match of
+        ``suffix`` in the history.  Returns (tokens (<=k,), confidence)."""
+        suffix = np.asarray(suffix, np.int64).reshape(-1)[-self.suffix_tokens:]
+        hist = np.asarray(self.history, np.int64)
+        if len(hist) < len(suffix) + 1:
+            return np.zeros((0,), np.int64), 0.0
+        # Work in crumbs so arbitrary token ids are exact.
+        crumbs = tokens_to_crumbs(hist)
+        pat = tokens_to_crumbs(suffix)
+        frag_len = min(self.fragment_tokens * CRUMBS_PER_TOKEN, len(crumbs))
+        frags = encoding.fold_reference(crumbs, frag_len, len(pat))
+        scores = np.asarray(ops.match_scores(frags, pat, method=self.method))
+        r, loc = np.unravel_index(scores.argmax(), scores.shape)
+        conf = float(scores[r, loc]) / len(pat)
+        # Token index right after the matched suffix in the original stream.
+        step = frag_len - (len(pat) - 1)
+        crumb_pos = r * step + loc + len(pat)
+        tok_pos = crumb_pos // CRUMBS_PER_TOKEN
+        if crumb_pos % CRUMBS_PER_TOKEN:
+            tok_pos += 1
+        prop = hist[tok_pos: tok_pos + k]
+        return prop, conf
+
+
+def verify(proposed: np.ndarray, actual: np.ndarray) -> int:
+    """Speculation acceptance: length of the agreeing prefix."""
+    n = min(len(proposed), len(actual))
+    agree = 0
+    for i in range(n):
+        if proposed[i] != actual[i]:
+            break
+        agree += 1
+    return agree

@@ -1,0 +1,193 @@
+"""Array interpreter + ISA codegen tests (paper Secs. 2.4, 3.3)."""
+
+import numpy as np
+import pytest
+
+from repro.core.array import CRAMArray, MicroOp, Program, run_program
+from repro.core.isa import CodeGen, ColumnAllocator
+
+import jax.numpy as jnp
+
+
+def make_cg(n_cols=256, lo=0, opt=False):
+    return CodeGen(ColumnAllocator(lo, n_cols), opt=opt)
+
+
+class TestInterpreter:
+    def test_row_parallelism(self):
+        """One micro-op applies to the same columns of every row at once."""
+        arr = CRAMArray(8, 16)
+        data = np.random.default_rng(0).integers(0, 2, (8, 2), np.uint8)
+        arr.write_column_rows(0, data)
+        prog = Program([MicroOp("PRESET0", (), 5), MicroOp("NOR", (0, 1), 5)])
+        arr.run(prog)
+        got = np.asarray(arr.state[:, 5])
+        want = 1 - (data[:, 0] | data[:, 1])
+        np.testing.assert_array_equal(got, want)
+
+    def test_preset_values(self):
+        arr = CRAMArray(4, 8)
+        arr.run(Program([MicroOp("PRESET1", (), 3), MicroOp("PRESET0", (), 2)]))
+        assert np.asarray(arr.state[:, 3]).tolist() == [1, 1, 1, 1]
+        assert np.asarray(arr.state[:, 2]).tolist() == [0, 0, 0, 0]
+
+    def test_output_usable_as_input(self):
+        """Sec. 2.6: an output cell serves as an input in later steps."""
+        state = jnp.zeros((2, 8), jnp.uint8).at[:, 0].set(jnp.array([0, 1], jnp.uint8))
+        prog = Program([
+            MicroOp("PRESET0", (), 4), MicroOp("INV", (0,), 4),   # c4 = !c0
+            MicroOp("PRESET0", (), 5), MicroOp("INV", (4,), 5),   # c5 = c0
+        ])
+        out = run_program(state, prog)
+        np.testing.assert_array_equal(np.asarray(out[:, 5]), np.array([0, 1]))
+
+    def test_all_gates_on_array(self):
+        rng = np.random.default_rng(1)
+        v = rng.integers(0, 2, (32, 5), np.uint8)
+        arr = CRAMArray(32, 16)
+        arr.write_column_rows(0, v)
+        cases = {
+            "NOR": 1 - (v[:, 0] | v[:, 1]),
+            "OR": v[:, 0] | v[:, 1],
+            "NAND": 1 - (v[:, 0] & v[:, 1]),
+            "AND": v[:, 0] & v[:, 1],
+            "INV": 1 - v[:, 0],
+            "COPY": v[:, 0],
+            "MAJ3": (v[:, :3].sum(1) >= 2).astype(np.uint8),
+            "MAJ5": (v.sum(1) >= 3).astype(np.uint8),
+            "TH": (v[:, :4].sum(1) <= 1).astype(np.uint8),
+        }
+        from repro.core.array import ARITY
+        for op, want in cases.items():
+            prog = Program([
+                MicroOp("PRESET0", (), 10),
+                MicroOp(op, tuple(range(ARITY[op])), 10),
+            ])
+            arr.run(prog)
+            np.testing.assert_array_equal(np.asarray(arr.state[:, 10]), want, op)
+
+    def test_memory_stats_tracking(self):
+        arr = CRAMArray(4, 16)
+        arr.write_row(0, 0, [1, 0, 1])
+        arr.read_row(0, 0, 3)
+        assert arr.mem_stats["row_writes"] == 1
+        assert arr.mem_stats["bits_written"] == 3
+        assert arr.mem_stats["row_reads"] == 1
+
+
+class TestCodeGen:
+    def run_rows(self, cg, inputs):
+        """Execute the emitted program with given input column values."""
+        n_rows = inputs.shape[0]
+        arr = CRAMArray(n_rows, cg.scratch.hi)
+        arr.write_column_rows(0, inputs)
+        arr.run(cg.prog)
+        return arr
+
+    def test_xor(self):
+        inputs = np.array([[0, 0], [0, 1], [1, 0], [1, 1]], np.uint8)
+        cg = make_cg(lo=2)
+        out = cg.xor(0, 1)
+        arr = self.run_rows(cg, inputs)
+        np.testing.assert_array_equal(
+            np.asarray(arr.state[:, out]), np.array([0, 1, 1, 0]))
+
+    def test_full_adder_all_inputs(self):
+        inputs = np.array(
+            [[a, b, c] for a in (0, 1) for b in (0, 1) for c in (0, 1)],
+            np.uint8)
+        cg = make_cg(lo=3)
+        s, cout = cg.full_adder(0, 1, 2)
+        arr = self.run_rows(cg, inputs)
+        total = inputs.sum(1)
+        np.testing.assert_array_equal(np.asarray(arr.state[:, s]), total & 1)
+        np.testing.assert_array_equal(np.asarray(arr.state[:, cout]), total >> 1)
+
+    def test_full_adder_is_four_gates(self):
+        """Fig. 2: the MAJ-based FA is exactly 4 logic steps."""
+        cg = make_cg(lo=3)
+        cg.full_adder(0, 1, 2)
+        assert cg.prog.n_logic_ops() == 4
+        counts = cg.prog.op_counts()
+        assert counts["MAJ3"] == 1 and counts["MAJ5"] == 1
+        assert counts["INV"] == 1 and counts["COPY"] == 1
+
+    @pytest.mark.parametrize("n_bits", [1, 2, 3, 5, 8, 16, 33, 100])
+    def test_popcount_tree(self, n_bits):
+        rng = np.random.default_rng(n_bits)
+        data = rng.integers(0, 2, (16, n_bits), np.uint8)
+        cg = make_cg(n_cols=max(256, 6 * n_bits + 64), lo=n_bits)
+        score_cols = cg.popcount_tree(list(range(n_bits)))
+        arr = self.run_rows(cg, data)
+        weights = 1 << np.arange(len(score_cols))
+        got = (np.stack([np.asarray(arr.state[:, c]) for c in score_cols], -1)
+               * weights).sum(-1)
+        np.testing.assert_array_equal(got, data.sum(1))
+
+    def test_popcount_score_width(self):
+        """Paper Sec. 3.2: N = floor(log2 len) + 1 bits."""
+        cg = make_cg(n_cols=1024, lo=100)
+        cols = cg.popcount_tree(list(range(100)))
+        assert len(cols) == 7
+
+    def test_popcount_fa_count_matches_paper(self):
+        """Paper: ~188 1-bit additions for a 100-bit match string."""
+        cg = make_cg(n_cols=1024, lo=100)
+        cg.popcount_tree(list(range(100)))
+        assert 180 <= cg.fa_count() <= 200
+
+    def test_char_match(self):
+        """Fig. 4a: 2-bit compare -> 1 iff characters equal."""
+        cases = []
+        for fa in range(4):
+            for pa in range(4):
+                cases.append([fa & 1, fa >> 1, pa & 1, pa >> 1])
+        inputs = np.array(cases, np.uint8)
+        cg = make_cg(lo=4)
+        out = cg.char_match(0, 1, 2, 3)
+        arr = self.run_rows(cg, inputs)
+        want = np.array([1 if i // 4 == i % 4 else 0 for i in range(16)])
+        np.testing.assert_array_equal(np.asarray(arr.state[:, out]), want)
+
+    def test_every_gate_preceded_by_its_preset(self):
+        """Invariant: each logic op's output column was preset to the gate's
+        required value more recently than any earlier write to it."""
+        from repro.core.isa import PRESET_FOR
+        cg = make_cg(lo=3)
+        cg.char_match(0, 1, 2, 3) if False else None
+        cg.full_adder(0, 1, 2)
+        cg.xor(0, 1)
+        last_preset = {}
+        for op in cg.prog:
+            if op.op.startswith("PRESET"):
+                last_preset[op.out] = int(op.op[-1])
+            else:
+                assert last_preset.get(op.out) == PRESET_FOR[op.op], op
+
+    def test_scratch_reuse_is_safe(self):
+        """Released columns may be recycled; presets make reuse safe."""
+        rng = np.random.default_rng(3)
+        data = rng.integers(0, 2, (8, 6), np.uint8)
+        cg = make_cg(n_cols=64, lo=6)
+        o1 = cg.xor(0, 1)
+        o2 = cg.xor(2, 3)   # reuses released scratch from o1
+        o3 = cg.xor(4, 5)
+        arr = self.run_rows(cg, data)
+        np.testing.assert_array_equal(
+            np.asarray(arr.state[:, o1]), data[:, 0] ^ data[:, 1])
+        np.testing.assert_array_equal(
+            np.asarray(arr.state[:, o2]), data[:, 2] ^ data[:, 3])
+        np.testing.assert_array_equal(
+            np.asarray(arr.state[:, o3]), data[:, 4] ^ data[:, 5])
+
+    def test_allocator_overflow_raises(self):
+        alloc = ColumnAllocator(0, 4)
+        alloc.alloc(4)
+        with pytest.raises(RuntimeError):
+            alloc.alloc(1)
+
+    def test_allocator_reuse_floor(self):
+        alloc = ColumnAllocator(10, 20, reuse_lo=5)
+        alloc.release([3, 7])      # 3 below reuse floor -> ignored
+        assert alloc.alloc(1) == [7]
+        assert alloc.alloc(1) == [10]

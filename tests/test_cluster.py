@@ -1,0 +1,44 @@
+"""Multi-host bootstrap tests (environment detection is pure)."""
+
+from repro.launch import cluster
+
+
+class TestDetectEnvironment:
+    def test_single_host_default(self):
+        info = cluster.detect_environment({})
+        assert info.process_count == 1
+        assert info.coordinator is None
+        assert info.is_coordinator
+
+    def test_explicit_env(self):
+        info = cluster.detect_environment({
+            "REPRO_COORDINATOR": "10.0.0.1:8476",
+            "REPRO_PROCESS_ID": "3",
+            "REPRO_NUM_PROCESSES": "8",
+        })
+        assert info.coordinator == "10.0.0.1:8476"
+        assert info.process_id == 3
+        assert info.process_count == 8
+        assert not info.is_coordinator
+
+    def test_slurm_nodelist_parsing(self):
+        info = cluster.detect_environment({
+            "SLURM_JOB_NUM_NODES": "4",
+            "SLURM_NODELIST": "tpu[001-004]",
+            "SLURM_PROCID": "2",
+        })
+        assert info.coordinator == "tpu001:8476"
+        assert info.process_count == 4
+        assert info.process_id == 2
+
+    def test_slurm_plain_hostname(self):
+        info = cluster.detect_environment({
+            "SLURM_JOB_NUM_NODES": "2",
+            "SLURM_NODELIST": "nodeA,nodeB",
+            "SLURM_PROCID": "0",
+        })
+        assert info.coordinator == "nodeA:8476"
+
+    def test_initialize_single_host_noop(self):
+        info = cluster.initialize(cluster.HostInfo(None, 0, 1))
+        assert info.process_count == 1

@@ -1,0 +1,88 @@
+"""Dry-run machinery tests.
+
+The production dry-run needs 512 forced host devices, which must be set
+before jax initializes -- so these tests exercise it via subprocesses
+(exactly how the real launcher runs).  The multi-device sharding tests in
+test_sharding.py are also driven here under a forced-device environment.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+ENV_BASE = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+
+
+def run(cmd, env=None, timeout=560):
+    return subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, cwd=REPO, env=env or ENV_BASE)
+
+
+class TestShardingUnderForcedDevices:
+    def test_sharding_suite_with_8_devices(self):
+        env = dict(ENV_BASE,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8")
+        r = run([sys.executable, "-m", "pytest", "tests/test_sharding.py",
+                 "-q", "-p", "no:cacheprovider"], env=env)
+        assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-2000:]
+
+
+class TestProductionDryrun:
+    @pytest.mark.parametrize("arch,shape", [
+        ("llama3.2-1b", "decode_32k"),
+        ("mamba2-130m", "long_500k"),
+    ])
+    def test_single_cell_compiles(self, tmp_path, arch, shape):
+        out = tmp_path / "cell.jsonl"
+        r = run([sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", arch, "--shape", shape, "--mesh", "pod",
+                 "--out", str(out)])
+        assert r.returncode == 0, r.stderr[-2000:]
+        rec = json.loads(out.read_text().strip())
+        assert rec["status"] == "ok", rec
+        assert rec["n_devices"] == 256
+        assert rec["hlo_flops_per_dev"] > 0
+        assert rec["dominant"] in ("compute", "memory", "collective")
+
+    def test_multipod_mesh_cell(self, tmp_path):
+        out = tmp_path / "cell.jsonl"
+        r = run([sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", "llama3.2-1b", "--shape", "decode_32k",
+                 "--mesh", "multipod", "--out", str(out)])
+        assert r.returncode == 0, r.stderr[-2000:]
+        rec = json.loads(out.read_text().strip())
+        assert rec["status"] == "ok"
+        assert rec["n_devices"] == 512
+        assert rec["mesh"] == "2x16x16"
+
+    def test_skip_recorded_for_full_attention_long(self, tmp_path):
+        out = tmp_path / "cell.jsonl"
+        r = run([sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", "llama3.2-1b", "--shape", "long_500k",
+                 "--mesh", "pod", "--out", str(out)])
+        assert r.returncode == 0
+        rec = json.loads(out.read_text().strip())
+        assert rec["status"] == "skipped"
+        assert "sub-quadratic" in rec["reason"]
+
+
+class TestBaselineSweepRecords:
+    """Validates the committed baseline sweep (experiments/dryrun)."""
+
+    def test_all_cells_present_and_ok(self):
+        path = REPO / "experiments/dryrun/full.jsonl"
+        if not path.exists():
+            pytest.skip("baseline sweep not yet generated")
+        cells = {}
+        for line in path.open():
+            r = json.loads(line)
+            cells[(r["arch"], r["shape"], r["mesh"])] = r
+        for mesh in ("16x16", "2x16x16"):
+            stats = [r["status"] for k, r in cells.items() if k[2] == mesh]
+            assert stats.count("ok") == 32, mesh
+            assert stats.count("skipped") == 8, mesh

@@ -1,0 +1,110 @@
+"""Gate-level tests: truth tables emerge from device physics (paper Sec. 2)."""
+
+import itertools
+
+import pytest
+
+from repro.core import gates
+from repro.core.tech import LONG_TERM, NEAR_TERM, PAPER_VGATE_V, TECHS
+
+
+@pytest.mark.parametrize("tech", [NEAR_TERM, LONG_TERM], ids=lambda t: t.name)
+@pytest.mark.parametrize("gate", sorted(gates.GATES))
+def test_truth_table_emerges_from_analog_model(tech, gate):
+    """Every gate's truth table must emerge from the resistive-divider +
+    threshold model at the center of its derived V_gate window."""
+    spec = gates.GATES[gate]
+    for bits in itertools.product((0, 1), repeat=spec.arity):
+        assert gates.analog_gate_output(gate, bits, tech) == spec.truth(bits)
+
+
+@pytest.mark.parametrize("tech", [NEAR_TERM, LONG_TERM], ids=lambda t: t.name)
+@pytest.mark.parametrize("gate", sorted(gates.GATES))
+def test_window_nonempty(tech, gate):
+    lo, hi = gates.vgate_window(gate, tech)
+    assert 0 < lo < hi
+
+
+def test_near_term_windows_match_paper_table3():
+    """Near-term windows land on the paper's Table 3 (within 100 mV)."""
+    tech = NEAR_TERM
+    for gate, (plo, phi) in PAPER_VGATE_V["near-term"].items():
+        lo, hi = gates.vgate_window(gate, tech)
+        assert abs(lo - plo) < 0.1, (gate, lo, plo)
+        assert abs(hi - phi) < 0.1, (gate, hi, phi)
+
+
+def test_inv_copy_windows_identical():
+    """Paper Table 3 lists identical V ranges for INV and COPY."""
+    for tech in TECHS.values():
+        assert gates.vgate_window("INV", tech) == gates.vgate_window("COPY", tech)
+
+
+def test_window_ordering_matches_paper():
+    """V_INV > V_NOR > V_MAJ3 > V_MAJ5 ~ V_TH (both technologies)."""
+    for tech in TECHS.values():
+        c = {g: gates.vgate_center(g, tech) for g in gates.PM_GATE_SET}
+        assert c["INV"] > c["NOR"] > c["MAJ3"] > c["MAJ5"]
+        assert c["NOR"] > c["TH"]
+
+
+def test_xor_impossible_as_single_gate():
+    """Sec. 2.2: no single V window can realize XOR (I_00 > I_01 > I_11
+    forbids switching on 00 and 11 but not 01)."""
+    tech = NEAR_TERM
+    for preset in (0, 1):
+        want = {(0, 0): 0, (0, 1): 1, (1, 0): 1, (1, 1): 0}
+        switch_cases = [b for b, o in want.items() if o != preset]
+        hold_cases = [b for b, o in want.items() if o == preset]
+        v_min = max(
+            tech.i_crit_ua * 1e-6 / gates.output_current_slope(b, preset, tech)
+            for b in switch_cases)
+        v_max = min(
+            tech.i_crit_ua * 1e-6 / gates.output_current_slope(b, preset, tech)
+            for b in hold_cases)
+        assert v_min >= v_max  # empty window
+
+
+def test_more_zeros_means_more_current():
+    """The current ordering I_00 > I_01 = I_10 > I_11 (paper Table 1)."""
+    tech = NEAR_TERM
+    s00 = gates.output_current_slope((0, 0), 0, tech)
+    s01 = gates.output_current_slope((0, 1), 0, tech)
+    s10 = gates.output_current_slope((1, 0), 0, tech)
+    s11 = gates.output_current_slope((1, 1), 0, tech)
+    assert s00 > s01 == s10 > s11
+
+
+@pytest.mark.parametrize("tech", [NEAR_TERM, LONG_TERM], ids=lambda t: t.name)
+def test_variation_study(tech):
+    """Sec. 5.5: PM gates are structurally distinct (arity, preset) so
+    variation cannot alias one used gate into another; wide-window gates
+    tolerate the paper's +/-20% swing without recalibration."""
+    study = gates.variation_study(tech)
+    assert study["pm_gates_structurally_distinct"]
+    tol = study["tolerance_interval"]
+    # INV/COPY have the widest windows -> largest tolerance.
+    assert tol["INV"][0] < 0.9 and tol["INV"][1] > 1.1
+    # Tolerance interval always brackets 1 (nominal point is valid).
+    for g, (lo, hi) in tol.items():
+        assert lo < 1.0 < hi
+    # Narrow MAJ windows (paper's own Table 3 shows ~10 mV) tolerate less.
+    assert (tol["MAJ5"][1] - tol["MAJ5"][0]) < (tol["NOR"][1] - tol["NOR"][0])
+
+
+@pytest.mark.parametrize("gate", sorted(gates.GATES))
+def test_gate_energy_positive_and_scales_down_longterm(gate):
+    e_near = gates.gate_energy_pj(gate, NEAR_TERM)
+    e_long = gates.gate_energy_pj(gate, LONG_TERM)
+    assert e_near > 0 and e_long > 0
+    assert e_long < e_near  # smaller devices, lower switching energy
+
+
+def test_functional_gates_match_specs():
+    """Vectorized GATE_FNS agree with the GateSpec truth tables."""
+    import numpy as np
+    for name, spec in gates.GATES.items():
+        fn = gates.GATE_FNS[name]
+        for bits in itertools.product((0, 1), repeat=spec.arity):
+            arrs = [np.array([b], dtype=np.uint8) for b in bits]
+            assert int(fn(*arrs)[0]) == spec.truth(bits), (name, bits)

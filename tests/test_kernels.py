@@ -1,0 +1,193 @@
+"""Pallas kernel tests: shape sweeps + property tests vs the jnp oracles.
+
+All kernels run in interpret=True mode on CPU (the kernel body executes in
+Python); integer paths must be bit-exact, the bf16 MXU path exact after
+rounding (one-hot dot products are small integers, exactly representable).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matcher import sliding_scores
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+RNG = np.random.default_rng(1234)
+
+
+def random_case(r, f, p, per_row=False, q=None, seed=0):
+    rng = np.random.default_rng(seed)
+    frags = rng.integers(0, 4, (r, f), np.uint8)
+    if q is not None:
+        pats = rng.integers(0, 4, (q, p), np.uint8)
+    elif per_row:
+        pats = rng.integers(0, 4, (r, p), np.uint8)
+    else:
+        pats = rng.integers(0, 4, p, np.uint8)
+    return frags, pats
+
+
+class TestMatchSwar:
+    @pytest.mark.parametrize("r,f,p", [
+        (1, 20, 5), (3, 33, 16), (8, 64, 17), (10, 300, 100),
+        (5, 128, 1), (2, 40, 32), (7, 257, 31), (16, 2000, 100),
+    ])
+    def test_shape_sweep_shared_pattern(self, r, f, p):
+        frags, pat = random_case(r, f, p, seed=r * f + p)
+        got = np.asarray(ops.match_scores(frags, pat, method="swar"))
+        np.testing.assert_array_equal(got, sliding_scores(frags, pat))
+
+    @pytest.mark.parametrize("r,f,p", [(4, 50, 10), (9, 120, 48)])
+    def test_per_row_patterns(self, r, f, p):
+        frags, pats = random_case(r, f, p, per_row=True, seed=7)
+        got = np.asarray(ops.match_scores(frags, pats, method="swar"))
+        np.testing.assert_array_equal(got, sliding_scores(frags, pats))
+
+    def test_word_boundary_alignments(self):
+        """Alignments crossing uint32 word boundaries (loc % 16 != 0)."""
+        rng = np.random.default_rng(3)
+        frags = rng.integers(0, 4, (2, 64), np.uint8)
+        pat = rng.integers(0, 4, 16, np.uint8)
+        for loc in (0, 1, 15, 16, 17, 31, 48):
+            frags[1, loc:loc + 16] = pat
+            got = np.asarray(ops.match_scores(frags, pat, method="swar"))
+            assert got[1, loc] == 16, loc
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 6), st.integers(2, 80), st.data())
+    def test_property_matches_oracle(self, r, f, data):
+        p = data.draw(st.integers(1, f))
+        seed = data.draw(st.integers(0, 2**31))
+        frags, pat = random_case(r, f, p, seed=seed)
+        got = np.asarray(ops.match_scores(frags, pat, method="swar"))
+        np.testing.assert_array_equal(got, sliding_scores(frags, pat))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_score_bounds_and_exact_hit(self, seed):
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (4, 60), np.uint8)
+        pat = rng.integers(0, 4, 12, np.uint8)
+        loc = int(rng.integers(0, 49))
+        frags[2, loc:loc + 12] = pat
+        s = np.asarray(ops.match_scores(frags, pat, method="swar"))
+        assert (s >= 0).all() and (s <= 12).all()
+        assert s[2, loc] == 12
+
+
+class TestMatchMXU:
+    @pytest.mark.parametrize("r,f,p,q", [
+        (2, 40, 8, 1), (3, 100, 33, 4), (5, 300, 100, 3),
+        (1, 64, 32, 130), (4, 600, 100, 8),
+    ])
+    def test_shape_sweep_batched(self, r, f, p, q):
+        frags, pats = random_case(r, f, p, q=q, seed=r + f + p + q)
+        got = np.asarray(ops.match_scores(frags, pats, method="mxu"))
+        want = np.stack(
+            [sliding_scores(frags, pats[i]) for i in range(q)], -1)
+        np.testing.assert_array_equal(got, want)
+
+    def test_shared_pattern_path(self):
+        frags, pat = random_case(4, 80, 20, seed=11)
+        got = np.asarray(ops.match_scores(frags, pat, method="mxu"))
+        np.testing.assert_array_equal(got, sliding_scores(frags, pat))
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_agrees_with_swar(self, seed):
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (3, 90), np.uint8)
+        pat = rng.integers(0, 4, int(rng.integers(4, 40)), np.uint8)
+        a = np.asarray(ops.match_scores(frags, pat, method="swar"))
+        b = np.asarray(ops.match_scores(frags, pat, method="mxu"))
+        np.testing.assert_array_equal(a, b)
+
+    def test_onehot_oracle_agrees_with_char_oracle(self):
+        frags, pats = random_case(3, 50, 10, q=4, seed=5)
+        a = np.asarray(kref.onehot_scores_ref(frags, pats))
+        want = np.stack(
+            [sliding_scores(frags, pats[i]) for i in range(4)], -1)
+        np.testing.assert_array_equal(a, want)
+
+
+class TestPopcount:
+    @pytest.mark.parametrize("n,w", [(1, 1), (5, 3), (300, 7), (1000, 1)])
+    def test_shape_sweep(self, n, w):
+        rng = np.random.default_rng(n * w)
+        words = rng.integers(0, 2**32, (n, w), dtype=np.uint64).astype(np.uint32)
+        got = np.asarray(ops.popcount(words))
+        want = np.array([sum(bin(int(v)).count("1") for v in row)
+                         for row in words], np.int32)
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64))
+    def test_property_single_words(self, vals):
+        words = np.array(vals, np.uint32)[:, None]
+        got = np.asarray(ops.popcount(words))
+        want = np.array([bin(v).count("1") for v in vals], np.int32)
+        np.testing.assert_array_equal(got, want)
+
+    def test_edge_values(self):
+        words = np.array([[0], [0xFFFFFFFF], [0x55555555], [0x80000001]],
+                         np.uint32)
+        np.testing.assert_array_equal(
+            np.asarray(ops.popcount(words)), [0, 32, 16, 2])
+
+
+class TestBitwise:
+    @pytest.mark.parametrize("op", ops._bitwise.OPS)
+    @pytest.mark.parametrize("n,w", [(4, 2), (300, 5)])
+    def test_ops_sweep(self, op, n, w):
+        rng = np.random.default_rng(hash(op) % 2**31 + n)
+        a = rng.integers(0, 2**32, (n, w), dtype=np.uint64).astype(np.uint32)
+        b = rng.integers(0, 2**32, (n, w), dtype=np.uint64).astype(np.uint32)
+        got = np.asarray(ops.bitwise(op, a, b))
+        want = np.asarray(kref.bitwise_ref(op, a, b))
+        np.testing.assert_array_equal(got, want)
+
+    def test_rc4_roundtrip(self):
+        """RC4 semantics: XOR with keystream twice restores plaintext."""
+        rng = np.random.default_rng(0)
+        text = rng.integers(0, 2**32, (128, 8), dtype=np.uint64).astype(np.uint32)
+        key = rng.integers(0, 2**32, (128, 8), dtype=np.uint64).astype(np.uint32)
+        cipher = np.asarray(ops.bitwise("XOR", text, key))
+        plain = np.asarray(ops.bitwise("XOR", cipher, key))
+        np.testing.assert_array_equal(plain, text)
+
+
+class TestCrossValidation:
+    def test_swar_ref_mirror(self):
+        """The packed jnp mirror (ref.match_scores_swar_ref) agrees with the
+        Pallas kernel bit for bit (same packed semantics)."""
+        from repro.core import encoding
+        rng = np.random.default_rng(9)
+        frags = rng.integers(0, 4, (8, 70), np.uint8)
+        pat = rng.integers(0, 4, 20, np.uint8)
+        P, L = 20, 51
+        wp = 2
+        rw = encoding.pack_codes_u32(frags)
+        need = (L - 1) // 16 + wp + 1
+        rw = np.concatenate([rw, np.zeros((8, need - rw.shape[1]), np.uint32)], 1)
+        pw = encoding.pack_codes_u32(np.broadcast_to(pat, (8, P)))
+        mask_codes = np.zeros(wp * 16, np.uint32)
+        mask_codes[:P] = 1
+        mask = encoding.pack_codes_u32(mask_codes[None, :])
+        mirror = np.asarray(kref.match_scores_swar_ref(
+            rw, pw, mask[0], n_locs=L, pattern_chars=P))
+        kernel = np.asarray(ops.match_scores(frags, pat, method="swar"))
+        np.testing.assert_array_equal(mirror, kernel)
+
+    def test_matcher_cram_vs_kernels(self):
+        """End-to-end: CRAM array simulation == TPU fast path == oracle."""
+        from repro.core.matcher import Matcher
+        rng = np.random.default_rng(21)
+        frags = rng.integers(0, 4, (8, 30), np.uint8)
+        pat = rng.integers(0, 4, 7, np.uint8)
+        m = Matcher(frags, pattern_chars=7)
+        m.load_pattern(pat)
+        cram = m.run()
+        swar = np.asarray(ops.match_scores(frags, pat, method="swar"))
+        np.testing.assert_array_equal(cram, swar)

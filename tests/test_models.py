@@ -1,0 +1,336 @@
+"""Model-stack tests: chunked attention / SSD / RG-LRU / MoE vs naive
+references, per-arch smoke tests, and prefill+decode == full-forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import layers, model, rglru, ssm
+from repro.models.config import SHAPES, shape_applicable
+
+
+def naive_attention(q, k, v, causal=True, window=None, bidir=False):
+    B, H, S, D = q.shape
+    _, K, Skv, _ = k.shape
+    G = H // K
+    qg = q.reshape(B, K, G, S, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    qi = np.arange(S)[:, None]
+    ki = np.arange(Skv)[None, :]
+    if not bidir:
+        mask = qi >= ki
+        if window is not None:
+            mask &= (qi - ki) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgqc,bkcd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+class TestAttention:
+    def _qkv(self, rng, B=2, H=4, K=2, S=64, D=16):
+        q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, K, S, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, K, S, D)), jnp.float32)
+        return q, k, v
+
+    def test_chunked_equals_naive_causal(self, rng):
+        q, k, v = self._qkv(rng)
+        got = layers._online_softmax_scan(
+            q, k, v, causal=True, window=None,
+            q_offset=jnp.zeros((2,), jnp.int32), block_kv=16)
+        want = naive_attention(q, k, v)
+        np.testing.assert_allclose(got, want, atol=2e-3)
+
+    def test_chunked_equals_naive_windowed(self, rng):
+        q, k, v = self._qkv(rng)
+        got = layers._online_softmax_scan(
+            q, k, v, causal=True, window=24,
+            q_offset=jnp.zeros((2,), jnp.int32), block_kv=16)
+        want = naive_attention(q, k, v, window=24)
+        np.testing.assert_allclose(got, want, atol=2e-3)
+
+    def test_chunked_bidir(self, rng):
+        q, k, v = self._qkv(rng)
+        got = layers._online_softmax_scan(
+            q, k, v, causal=False, window=None,
+            q_offset=jnp.zeros((2,), jnp.int32), block_kv=16, bidir=True)
+        want = naive_attention(q, k, v, bidir=True)
+        np.testing.assert_allclose(got, want, atol=2e-3)
+
+    def test_local_block_equals_naive_window(self, rng):
+        q, k, v = self._qkv(rng, S=64)
+        got = layers._local_block_attention(q, k, v, window=16)
+        want = naive_attention(q, k, v, window=16)
+        np.testing.assert_allclose(got, want, atol=2e-3)
+
+
+class TestSSD:
+    def _naive_ssd(self, xs, Bv, Cv, dt, A, D):
+        """Sequential SSM recurrence: the ground truth for the chunked SSD."""
+        B, S, H, P = xs.shape
+        N = Bv.shape[-1]
+        h = np.zeros((B, H, P, N))
+        ys = np.zeros((B, S, H, P))
+        for t in range(S):
+            a = np.exp(dt[:, t] * A)                        # (B,H)
+            dBx = np.einsum("bh,bn,bhp->bhpn", dt[:, t], Bv[:, t], xs[:, t])
+            h = h * a[:, :, None, None] + dBx
+            ys[:, t] = np.einsum("bhpn,bn->bhp", h, Cv[:, t]) \
+                + D[None, :, None] * xs[:, t]
+        return ys
+
+    def test_chunked_ssd_equals_sequential(self, rng):
+        cfg = get_config("mamba2-130m", smoke=True)
+        B, S = 2, 64
+        H, P, N = cfg.ssd_heads, cfg.ssm_head_dim, cfg.ssm_state
+        xs = rng.normal(size=(B, S, H, P)).astype(np.float32)
+        Bv = rng.normal(size=(B, S, N)).astype(np.float32)
+        Cv = rng.normal(size=(B, S, N)).astype(np.float32)
+        dt = np.abs(rng.normal(size=(B, S, H))).astype(np.float32) * 0.5
+        A = -np.abs(rng.normal(size=(H,))).astype(np.float32)
+        D = rng.normal(size=(H,)).astype(np.float32)
+        want = self._naive_ssd(xs, Bv, Cv, dt, A, D)
+
+        # Drive ssd_apply's chunked math directly via its internals:
+        # reconstruct by monkey-running the full path with identity
+        # projections is messy; instead validate through ssd_apply by
+        # matching decode-vs-full below, and check the chunk math here via
+        # a 1-chunk vs multi-chunk comparison.
+        c_all = self._chunked(cfg, xs, Bv, Cv, dt, A, D, chunk=S)
+        c_split = self._chunked(cfg, xs, Bv, Cv, dt, A, D, chunk=16)
+        np.testing.assert_allclose(c_all, want, rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(c_split, want, rtol=2e-2, atol=2e-2)
+
+    def _chunked(self, cfg, xs, Bv, Cv, dt, A, D, chunk):
+        """Invoke the same chunked math as ssm.ssd_apply (extracted)."""
+        B, S, H, P = xs.shape
+        N = Bv.shape[-1]
+        log_a = dt * A
+        c = chunk
+        nc = S // c
+        xc = xs.reshape(B, nc, c, H, P)
+        Bc = Bv.reshape(B, nc, c, N)
+        Cc = Cv.reshape(B, nc, c, N)
+        dtc = dt.reshape(B, nc, c, H)
+        La = np.cumsum(log_a.reshape(B, nc, c, H), axis=2)
+        G = np.einsum("bnim,bnjm->bnij", Cc, Bc)
+        decay = np.exp(La[:, :, :, None, :] - La[:, :, None, :, :])
+        ii = np.arange(c)
+        causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+        M = np.where(causal, G[..., None] * decay * dtc[:, :, None, :, :], 0)
+        y_intra = np.einsum("bnijh,bnjhp->bnihp", M, xc)
+        tail = np.exp(La[:, :, -1:, :] - La)
+        cs = np.einsum("bnch,bncm,bnchp->bnhpm", tail * dtc, Bc, xc)
+        a_chunk = np.exp(La[:, :, -1, :])
+        h = np.zeros((B, H, P, N))
+        y_inter = np.zeros((B, nc, c, H, P))
+        for n in range(nc):
+            y_inter[:, n] = np.einsum("bcm,bch,bhpm->bchp",
+                                      Cc[:, n], np.exp(La[:, n]), h)
+            h = h * a_chunk[:, n][:, :, None, None] + cs[:, n]
+        y = y_intra + y_inter + D[None, None, None, :, None] * xc
+        return y.reshape(B, S, H, P)
+
+    def test_decode_matches_full(self, rng):
+        """ssd_apply full over S tokens == S decode steps (same params)."""
+        cfg = get_config("mamba2-130m", smoke=True)
+        params = model.init_params(cfg, jax.random.PRNGKey(1))
+        S, B = 16, 2
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+        full_logits, _, _ = model.forward(cfg, params, {"tokens": tokens})
+        caches = model.init_cache(cfg, B, S)
+        logits = None
+        for t in range(S):
+            logits, caches = model.decode_step(
+                cfg, params, caches, tokens[:, t:t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            logits, full_logits[:, -1], rtol=3e-2, atol=3e-2)
+
+
+class TestRGLRU:
+    def test_scan_equals_sequential(self, rng):
+        cfg = get_config("recurrentgemma-9b", smoke=True)
+        r = cfg.rnn_width
+        p = {k: jnp.asarray(v) for k, v in {
+            "w_a": rng.normal(size=(r, r)).astype(np.float32) * 0.1,
+            "b_a": rng.normal(size=(r,)).astype(np.float32),
+            "w_i": rng.normal(size=(r, r)).astype(np.float32) * 0.1,
+            "b_i": rng.normal(size=(r,)).astype(np.float32),
+            "lam": np.abs(rng.normal(size=(r,))).astype(np.float32),
+        }.items()}
+        x = jnp.asarray(rng.normal(size=(2, 24, r)), jnp.float32)
+        hh, h_last = rglru._rglru_core(cfg, p, x, None, cfg.rglru_c, "full")
+        # sequential reference
+        rg = jax.nn.sigmoid(x @ p["w_a"] + p["b_a"])
+        ig = jax.nn.sigmoid(x @ p["w_i"] + p["b_i"])
+        log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * rg
+        a = jnp.exp(log_a)
+        gated = jnp.sqrt(1 - jnp.exp(2 * log_a)) * ig * x
+        h = jnp.zeros((2, r))
+        for t in range(24):
+            h = a[:, t] * h + gated[:, t]
+        np.testing.assert_allclose(h, h_last, rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(h, hh[:, -1], rtol=2e-3, atol=2e-3)
+
+    def test_decode_matches_full(self, rng):
+        cfg = get_config("recurrentgemma-9b", smoke=True)
+        params = model.init_params(cfg, jax.random.PRNGKey(2))
+        S, B = 16, 2
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+        full_logits, _, _ = model.forward(cfg, params, {"tokens": tokens})
+        caches = model.init_cache(cfg, B, S)
+        logits = None
+        for t in range(S):
+            logits, caches = model.decode_step(
+                cfg, params, caches, tokens[:, t:t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            logits, full_logits[:, -1], rtol=3e-2, atol=3e-2)
+
+
+class TestMoE:
+    def test_moe_against_bruteforce(self, rng):
+        cfg = get_config("olmoe-1b-7b", smoke=True)
+        params = model.init_params(cfg, jax.random.PRNGKey(3))
+        p = jax.tree.map(lambda x: x, params)  # grab one layer's moe params
+        moe_p = jax.tree.map(lambda x: x[0], params["blocks"]["units"])["0"]["moe"]
+        B, S, d = 1, 32, cfg.d_model
+        x = jnp.asarray(rng.normal(size=(B, S, d)), jnp.bfloat16)
+        out, aux = layers.moe_apply(cfg, moe_p, x)
+        assert out.shape == (B, S, d)
+        assert float(aux) > 0
+        # brute force: same routing decisions, no capacity drop expected at
+        # this size -> outputs must match the dispatch-einsum path.
+        gates = jax.nn.softmax(
+            (x.reshape(S, d) @ moe_p["router"].astype(x.dtype)).astype(jnp.float32), -1)
+        probs, idx = jax.lax.top_k(gates, cfg.top_k)
+        probs = probs / probs.sum(-1, keepdims=True)
+        want = np.zeros((S, d), np.float32)
+        for t in range(S):
+            for s in range(cfg.top_k):
+                e = int(idx[t, s])
+                h = jax.nn.silu(x.reshape(S, d)[t] @ moe_p["wg"][e].astype(x.dtype))
+                u = x.reshape(S, d)[t] @ moe_p["wu"][e].astype(x.dtype)
+                y = (h * u) @ moe_p["wd"][e].astype(x.dtype)
+                want[t] += float(probs[t, s]) * np.asarray(y, np.float32)
+        np.testing.assert_allclose(
+            np.asarray(out).reshape(S, d), want, rtol=5e-2, atol=5e-2)
+
+
+class TestArchSmoke:
+    """Assigned-arch reduced-config smoke tests: one train step shape + no
+    NaNs (assignment deliverable f)."""
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_forward_and_loss(self, arch, rng):
+        cfg = get_config(arch, smoke=True)
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        B, S = 2, 32
+        batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))}
+        if cfg.is_encdec:
+            batch["frames"] = jnp.asarray(
+                rng.normal(size=(B, cfg.n_audio_frames, cfg.d_model)),
+                jnp.bfloat16)
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+        elif cfg.input_mode == "embeddings":
+            batch["embeds"] = jnp.asarray(
+                rng.normal(size=(B, S, cfg.d_model)), jnp.bfloat16)
+        else:
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+        logits, _, _ = model.forward(cfg, params, batch)
+        assert logits.shape == (B, S, cfg.padded_vocab)
+        assert not bool(jnp.isnan(logits).any())
+        loss = model.loss_fn(cfg, params, batch)
+        assert np.isfinite(float(loss))
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_grads_finite(self, arch, rng):
+        cfg = get_config(arch, smoke=True)
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        B, S = 2, 16
+        batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))}
+        if cfg.is_encdec:
+            batch["frames"] = jnp.asarray(
+                rng.normal(size=(B, cfg.n_audio_frames, cfg.d_model)),
+                jnp.bfloat16)
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+        elif cfg.input_mode == "embeddings":
+            batch["embeds"] = jnp.asarray(
+                rng.normal(size=(B, S, cfg.d_model)), jnp.bfloat16)
+        else:
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+        grads = jax.grad(lambda p: model.loss_fn(cfg, p, batch))(params)
+        flat = jax.tree.leaves(grads)
+        assert all(bool(jnp.isfinite(g).all()) for g in flat)
+
+
+class TestPrefillDecode:
+    @pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen1.5-32b",
+                                      "stablelm-3b", "olmoe-1b-7b"])
+    def test_prefill_plus_decode_equals_full(self, arch, rng):
+        """prefill(t<T) then decode steps reproduces the full forward."""
+        cfg = get_config(arch, smoke=True)
+        params = model.init_params(cfg, jax.random.PRNGKey(4))
+        B, S, S_pre = 2, 16, 12
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+        full_logits, _, _ = model.forward(cfg, params, {"tokens": tokens})
+        caches = model.init_cache(cfg, B, S)
+        last, caches = model.prefill(cfg, params, {"tokens": tokens[:, :S_pre],
+                                                   "caches": None} | {}, caches)
+        np.testing.assert_allclose(last, full_logits[:, S_pre - 1],
+                                   rtol=3e-2, atol=3e-2)
+        logits = last
+        for t in range(S_pre, S):
+            logits, caches = model.decode_step(
+                cfg, params, caches, tokens[:, t:t + 1], jnp.int32(t))
+        np.testing.assert_allclose(logits, full_logits[:, -1],
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_whisper_encdec_decode(self, rng):
+        cfg = get_config("whisper-tiny", smoke=True)
+        params = model.init_params(cfg, jax.random.PRNGKey(5))
+        B, S = 2, 8
+        frames = jnp.asarray(
+            rng.normal(size=(B, cfg.n_audio_frames, cfg.d_model)), jnp.bfloat16)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+        full_logits, _, _ = model.forward(
+            cfg, params, {"frames": frames, "tokens": tokens})
+        enc_out = model.encode(cfg, params, frames)
+        caches = model.init_cache(cfg, B, S)
+        # fill cross caches via prefill of the first token
+        last, caches = model.prefill(
+            cfg, params, {"enc_out": enc_out, "tokens": tokens[:, :1]}, caches)
+        np.testing.assert_allclose(last, full_logits[:, 0], rtol=4e-2, atol=4e-2)
+        logits = last
+        for t in range(1, S):
+            logits, caches = model.decode_step(
+                cfg, params, caches, tokens[:, t:t + 1], jnp.int32(t),
+                enc_out=enc_out)
+        np.testing.assert_allclose(logits, full_logits[:, -1],
+                                   rtol=4e-2, atol=4e-2)
+
+
+class TestShapeApplicability:
+    def test_long500k_runs_only_for_subquadratic(self):
+        live = [a for a in ARCHS
+                if shape_applicable(get_config(a), SHAPES["long_500k"])[0]]
+        assert sorted(live) == ["mamba2-130m", "recurrentgemma-9b"]
+
+    def test_total_cells(self):
+        """40 assigned cells = 32 live + 8 recorded skips."""
+        live = skips = 0
+        for a in ARCHS:
+            for s in SHAPES.values():
+                ok, _ = shape_applicable(get_config(a), s)
+                live += ok
+                skips += not ok
+        assert live == 32 and skips == 8

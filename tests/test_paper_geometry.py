@@ -1,0 +1,67 @@
+"""Paper-geometry integration tests: the real Sec. 4 design point
+(2400-cell rows, 100-char patterns) runs end to end on the functional
+array, and the optimized configs still smoke-run/compile.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, OPTIMIZED_OVERRIDES, get_config
+from repro.core.matcher import Matcher, plan_layout, sliding_scores
+
+
+class TestPaperGeometry:
+    def test_full_row_alignment_program(self):
+        """One Algorithm-1 iteration at the paper's real row geometry:
+        2400 columns, 100-char pattern, ~1000-char fragment."""
+        layout = plan_layout(2400, 100, scratch_budget=128)
+        rng = np.random.default_rng(0)
+        frags = rng.integers(0, 4, (4, layout.fragment_chars), np.uint8)
+        pat = rng.integers(0, 4, 100, np.uint8)
+        frags[2, 37:137] = pat
+        m = Matcher(frags, pattern_chars=100, n_cols=2400)
+        m.load_pattern(pat)
+        scores = m.run(range(30, 45))            # a window of alignments
+        oracle = sliding_scores(frags, pat)[:, 30:45]
+        np.testing.assert_array_equal(scores, oracle)
+        assert scores[2, 7] == 100               # loc 37 within window
+
+    def test_row_fits_2k_class_width(self):
+        layout = plan_layout(2400, 100, scratch_budget=128)
+        assert layout.n_cols <= 2400
+        assert layout.fragment_chars >= 900
+
+
+class TestOptimizedConfigs:
+    @pytest.mark.parametrize("arch", sorted(OPTIMIZED_OVERRIDES))
+    def test_optimized_train_config_constructs(self, arch):
+        cfg = get_config(arch, optimized=True, kind="train")
+        assert cfg.n_params() > 0
+
+    def test_optimized_serve_smoke_decode(self):
+        """int8-KV + padded-KV smoke decode matches the bf16 baseline."""
+        import jax
+        import jax.numpy as jnp
+        from repro.models import model
+        base = get_config("llama3.2-1b", smoke=True)
+        opt = dataclasses.replace(base, kv_quant=True, pad_kv_heads=True)
+        params = model.init_params(base, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(rng.integers(0, base.vocab, (2, 10)))
+        full, _, _ = model.forward(base, params, {"tokens": tokens})
+        caches = model.init_cache(opt, 2, 10)
+        logits = None
+        for t in range(10):
+            logits, caches = model.decode_step(
+                opt, params, caches, tokens[:, t:t + 1], jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, -1]), rtol=0.1,
+                                   atol=0.1 * float(jnp.abs(full).max()))
+
+    def test_blockdiag_param_shapes(self):
+        cfg = get_config("recurrentgemma-9b", optimized=True, kind="train")
+        from repro.models import rglru
+        specs = rglru.rglru_specs(cfg)
+        assert specs["w_a"].shape == (16, 256, 256)

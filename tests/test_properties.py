@@ -1,0 +1,145 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+from repro.core import encoding
+from repro.core.isa import CodeGen, ColumnAllocator
+from repro.core.matcher import sliding_scores
+from repro.core.scheduler import expected_candidates, schedule_oracular
+from repro.core.tech import NEAR_TERM
+
+
+dna = st.integers(0, 3)
+
+
+class TestEncodingProperties:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(dna, min_size=1, max_size=200))
+    def test_pack_roundtrip(self, codes):
+        arr = np.array([codes], np.uint8)
+        words = encoding.pack_codes_u32(arr)
+        np.testing.assert_array_equal(
+            encoding.unpack_codes_u32(words, len(codes)), arr)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(dna, min_size=1, max_size=100))
+    def test_bits_roundtrip(self, codes):
+        arr = np.array([codes], np.uint8)
+        np.testing.assert_array_equal(
+            encoding.bits_to_codes(encoding.codes_to_bits(arr)), arr)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(10, 300), st.integers(2, 9), st.integers(0, 2**31))
+    def test_fold_preserves_every_window(self, ref_len, p, seed):
+        rng = np.random.default_rng(seed)
+        ref = rng.integers(0, 4, ref_len, np.uint8)
+        frag_len = min(ref_len, max(3 * p, 16))
+        frags = encoding.fold_reference(ref, frag_len, p)
+        step = frag_len - (p - 1)
+        # every window of ref is fully contained in some fragment
+        for loc in range(0, ref_len - p + 1, max((ref_len - p) // 10, 1)):
+            assert any(
+                r * step <= loc and loc + p <= r * step + frag_len
+                for r in range(frags.shape[0]))
+
+
+class TestMatcherProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 5), st.integers(4, 60), st.integers(0, 2**31),
+           st.data())
+    def test_score_bounds(self, r, f, seed, data):
+        p = data.draw(st.integers(1, f))
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (r, f), np.uint8)
+        pat = rng.integers(0, 4, p, np.uint8)
+        s = sliding_scores(frags, pat)
+        assert s.shape == (r, f - p + 1)
+        assert (s >= 0).all() and (s <= p).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_shift_invariance(self, seed):
+        """Prepending one char shifts all alignment scores by one."""
+        rng = np.random.default_rng(seed)
+        frag = rng.integers(0, 4, (1, 40), np.uint8)
+        pat = rng.integers(0, 4, 8, np.uint8)
+        shifted = np.concatenate(
+            [rng.integers(0, 4, (1, 1), np.uint8), frag], axis=1)
+        a = sliding_scores(frag, pat)
+        b = sliding_scores(shifted, pat)
+        np.testing.assert_array_equal(b[:, 1:], a)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_reverse_complement_symmetry(self, seed):
+        """Scores are invariant under relabeling the alphabet (matching is
+        equality-based, not value-based)."""
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (2, 30), np.uint8)
+        pat = rng.integers(0, 4, 6, np.uint8)
+        perm = rng.permutation(4).astype(np.uint8)
+        np.testing.assert_array_equal(
+            sliding_scores(frags, pat),
+            sliding_scores(perm[frags], perm[pat]))
+
+
+class TestAdderTreeProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 64), st.integers(0, 2**31))
+    def test_popcount_tree_any_width(self, n_bits, seed):
+        rng = np.random.default_rng(seed)
+        data = rng.integers(0, 2, (4, n_bits), np.uint8)
+        cg = CodeGen(ColumnAllocator(n_bits, n_bits + 512, reuse_lo=0))
+        cols = cg.popcount_tree(list(range(n_bits)))
+        from repro.core.array import CRAMArray
+        arr = CRAMArray(4, n_bits + 512)
+        arr.write_column_rows(0, data)
+        arr.run(cg.prog)
+        weights = 1 << np.arange(len(cols))
+        got = (np.stack([np.asarray(arr.state[:, c]) for c in cols], -1)
+               * weights).sum(-1)
+        np.testing.assert_array_equal(got, data.sum(1))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 128))
+    def test_fa_count_near_optimal(self, n_bits):
+        """FA count of the reduction tree stays within 2.2x of n (the
+        paper's 188-for-100 implies ~1.9x)."""
+        cg = CodeGen(ColumnAllocator(n_bits, n_bits + 1024, reuse_lo=0))
+        cg.popcount_tree(list(range(n_bits)))
+        assert cg.fa_count() <= max(2.2 * n_bits, 6)
+
+
+class TestCostModelProperties:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(20, 400))
+    def test_per_alignment_energy_monotone_in_pattern_length(self, plen):
+        """Longer patterns do strictly more work *per alignment* (whole-pass
+        energy can shrink because the fragment compartment shrinks)."""
+        d1 = cm.Design(tech=NEAR_TERM, opt=True, pattern_chars=plen)
+        d2 = cm.Design(tech=NEAR_TERM, opt=True, pattern_chars=plen + 50)
+        p1, p2 = cm.pass_cost(d1), cm.pass_cost(d2)
+        assert (p2.energy_j / p2.n_alignments
+                > p1.energy_j / p1.n_alignments)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(12, 18))
+    def test_longer_seeds_fewer_candidates(self, k):
+        a = expected_candidates(3e9, 100, k)
+        b = expected_candidates(3e9, 100, k + 1)
+        assert b < a
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_oracular_never_misses_planted_pattern(self, seed):
+        """Soundness of the k-mer filter: a pattern planted in a fragment is
+        always scheduled onto that row."""
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (8, 40), np.uint8)
+        row = int(rng.integers(0, 8))
+        pat = frags[row, 5:25].copy()
+        s = schedule_oracular(frags, pat[None, :], k=8)
+        # schedule maps row -> pattern index per pass
+        assert any(assign.get(row) == 0 for assign in s.passes)
