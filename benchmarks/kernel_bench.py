@@ -6,8 +6,15 @@ math, XLA-compiled for CPU) and derive the TPU v5e roofline projection for
 both kernels from their exact op/byte counts.  The projection is compared
 against the CRAM-PM substrate's match rate from the paper cost model --
 the adaptation target the hillclimb in EXPERIMENTS §Perf works against.
+
+The end-to-end engine bench (cold pack + first query vs. warm repeated
+queries on the resident corpus) runs the real ``repro.match`` stack and
+emits ``BENCH_match_engine.json`` at the repo root so later PRs have a
+perf trajectory; it also asserts the steady-state no-repacking invariant.
 """
 
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -18,6 +25,12 @@ from repro.core.tech import NEAR_TERM, TPU_V5E
 from repro.kernels import ref as kref
 
 R, F, P = 512, 1024, 100
+
+# Engine end-to-end shape: sized so interpret-mode Pallas stays sub-second
+# per query while still exercising chunked streaming (2 chunks).
+ER, EF, EP, EQUERIES = 64, 512, 96, 5
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_match_engine.json"
 
 
 def _setup():
@@ -34,6 +47,47 @@ def _setup():
     mask_codes[:P] = 1
     mask = encoding.pack_codes_u32(mask_codes[None, :])[0]
     return rw, pw, mask, L
+
+
+def bench_engine():
+    """Cold-pack vs. warm repeated-query path through the real engine."""
+    from repro.match import MatchEngine
+
+    rng = np.random.default_rng(42)
+    frags = rng.integers(0, 4, (ER, EF), np.uint8)
+    pats = [rng.integers(0, 4, EP, np.uint8) for _ in range(EQUERIES)]
+
+    eng = MatchEngine(frags)
+    chunk = ER // 2                       # force streaming (2 chunks)
+    t0 = time.perf_counter()
+    res = eng.match(pats[0], backend="swar", reduction="best",
+                    chunk_rows=chunk)
+    cold_s = time.perf_counter() - t0
+    assert eng.corpus.host_pack_count == 1
+
+    t0 = time.perf_counter()
+    for p in pats[1:]:
+        res = eng.match(p, backend="swar", reduction="best",
+                        chunk_rows=chunk)
+    warm_s = (time.perf_counter() - t0) / (EQUERIES - 1)
+    # Steady state: the corpus was packed exactly once, ever.
+    assert eng.corpus.host_pack_count == 1, "corpus repacked on warm query"
+
+    plan = eng.plan(pats[0])
+    record = {
+        "shape": {"R": ER, "F": EF, "P": EP, "chunk_rows": chunk,
+                  "n_chunks": res.n_chunks},
+        "cold_s": round(cold_s, 6),
+        "warm_s_per_query": round(warm_s, 6),
+        "warm_rows_per_s": round(ER / warm_s, 1),
+        "cold_over_warm": round(cold_s / warm_s, 2),
+        "host_pack_count": eng.corpus.host_pack_count,
+        "auto_backend": plan.backend,
+        "planner_est_s": plan.est_seconds,
+        "interpret": eng.interpret,
+    }
+    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    return record
 
 
 def run():
@@ -76,7 +130,15 @@ def run():
     pc = cm.pass_cost(d)
     cram_rows_per_s = d.n_rows / pc.latency_s
 
+    er = bench_engine()
     return [
+        ("engine/cold_pack_query", round(er["cold_s"] * 1e6, 1),
+         f"R={ER} F={EF} P={EP} chunks={er['shape']['n_chunks']}"
+         f" backend=swar (pack + first query)"),
+        ("engine/warm_query", round(er["warm_s_per_query"] * 1e6, 1),
+         f"rows_per_s={er['warm_rows_per_s']:.4g}"
+         f" cold/warm={er['cold_over_warm']}x"
+         f" host_packs={er['host_pack_count']} (resident corpus)"),
         ("kernel/swar_cpu", round(dt / R * 1e6, 3),
          f"rows_per_s={rows_per_s:.4g} (CPU jnp mirror, R={R} F={F} P={P})"),
         ("kernel/swar_tpu_projection", 0.0,

@@ -1,9 +1,11 @@
-"""Training-data near-dup filtering with the CRAM-PM matcher.
+"""Training-data near-dup filtering with the CRAM-PM match engine.
 
 The paper's row-parallel string matcher doing production data-plane work:
-documents are fingerprinted into the 2-bit alphabet and matched against the
-store with the bit-parallel kernel; near-duplicates (including shifted
-copies) are dropped before they reach the tokenizer.
+documents are fingerprinted into the 2-bit alphabet and matched against a
+device-resident store through the match engine; near-duplicates (including
+shifted copies) are dropped before they reach the tokenizer.  Each add is
+an incremental packed-row write (no host repacking of the resident store);
+repacking happens only on capacity doubling.
 
 Run:  PYTHONPATH=src python examples/dedup_pipeline.py
 """
@@ -37,6 +39,11 @@ def main() -> None:
     # every base doc survives; the large majority of injected dups drop
     assert len(base_docs) <= len(kept) <= len(base_docs) + 5
     print("store rows (one fingerprint per CRAM row):", len(dedup))
+    print(f"engine store: capacity {dedup.capacity} rows, "
+          f"{dedup.total_host_packs} full pack(s), "
+          f"{dedup.total_row_writes} incremental row writes, "
+          f"planner backend for queries: "
+          f"{dedup.engine.plan(np.zeros(dedup.pattern_len, np.uint8)).backend}")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,8 @@
 1. Gates emerge from device physics (V_gate windows).
 2. A micro-program runs row-parallel on the array interpreter.
 3. Algorithm 1 (match + score) on the functional array.
-4. The same search on the TPU-adapted bit-parallel kernel.
+4. The same search through the match engine (planner-selected TPU kernel,
+   device-resident packed corpus).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +14,7 @@ import numpy as np
 from repro.core import encoding, gates, matcher
 from repro.core.array import CRAMArray, MicroOp, Program
 from repro.core.tech import NEAR_TERM
-from repro.kernels import ops
+from repro.match import MatchEngine
 
 
 def main() -> None:
@@ -42,10 +43,19 @@ def main() -> None:
     print(f"  best alignment per row: locs={locs.tolist()} "
           f"scores={best.tolist()} (pattern planted at row 4, loc 20)")
 
-    print("\n== 4. TPU bit-parallel kernel (same semantics) ==")
-    fast = np.asarray(ops.match_scores(frags, pattern, method="swar"))
+    print("\n== 4. match engine: same semantics on the TPU fast path ==")
+    engine = MatchEngine(frags)
+    plan = engine.plan(pattern)
+    print(f"  planner chose {plan.backend!r} ({plan.reason})")
+    fast = np.asarray(engine.scores(pattern))
     assert np.array_equal(fast, scores)
-    print("  SWAR kernel scores == CRAM array scores:", True)
+    print("  engine scores == CRAM array scores:", True)
+    best = engine.match(pattern, reduction="best")
+    print("  per-row best (fused reduction): locs="
+          f"{best.best_locs.tolist()} scores={best.best_scores.tolist()}")
+    print("  corpus host pack events across queries:",
+          engine.corpus.host_pack_count,
+          "(packed forms build lazily, only for kernels that need them)")
     print("  pattern:", encoding.decode_dna(pattern))
 
 

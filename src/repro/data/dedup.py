@@ -1,11 +1,15 @@
-"""Near-duplicate filtering with the CRAM-PM matcher (paper technique as a
+"""Near-duplicate filtering on the match engine (paper technique as a
 first-class data-pipeline feature; DESIGN.md Sec. 4).
 
 Documents are fingerprinted as 2-bit character streams (each byte ->
-4 crumbs), stored one-per-row exactly like the paper's folded reference
-(Fig. 3), and each incoming document's fingerprint is matched row-parallel
-against the store with the bit-parallel kernel; max similarity above
-threshold -> duplicate.  This is the paper's string-matching engine doing
+4 crumbs) and stored one-per-row exactly like the paper's folded reference
+(Fig. 3).  The store is a ``repro.match.MatchEngine`` over a capacity-
+doubling ``PackedCorpus``: adding a document writes one packed row into the
+device-resident corpus (the CRAM row-write analogue, no host repacking of
+the resident part), and each candidate query runs the engine's fused
+per-row-best reduction row-parallel against the whole store.  The corpus is
+only repacked when capacity doubles -- amortized O(1) host packing per
+document, the engine's keep-data-next-to-compute discipline doing
 production data-plane work.
 """
 
@@ -15,7 +19,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.kernels import ops
+from repro.match import MatchEngine, PackedCorpus
+
+_INITIAL_CAPACITY = 64
 
 
 def fingerprint(doc: bytes, length: int = 128) -> np.ndarray:
@@ -28,37 +34,76 @@ def fingerprint(doc: bytes, length: int = 128) -> np.ndarray:
 
 
 class CRAMDedup:
-    """Row-parallel near-dup store.
+    """Row-parallel near-dup store on the match engine.
 
     The store is the 'reference' (one fingerprint per row, all rows matched
     in lock step); the candidate is the 'pattern'.  A pattern shorter than
     the fragment slides, so prefix-shifted duplicates are caught too.
+    ``backend=None`` lets the planner pick the kernel per query size.
     """
 
     def __init__(self, fp_len: int = 128, pattern_len: int = 96,
-                 threshold: float = 0.9, method: str = "swar"):
+                 threshold: float = 0.9, backend: Optional[str] = None,
+                 method: Optional[str] = None):
         self.fp_len = fp_len
         self.pattern_len = pattern_len
         self.threshold = threshold
-        self.method = method
-        self._rows: List[np.ndarray] = []
+        self.backend = backend if backend is not None else method
+        self._n = 0
+        # Lifetime counters survive capacity doublings (each _grow replaces
+        # the corpus, whose own counters restart at zero).
+        self._prior_packs = 0
+        self._prior_row_writes = 0
+        self._engine = MatchEngine(PackedCorpus(
+            np.zeros((_INITIAL_CAPACITY, fp_len), np.uint8)))
 
     def __len__(self) -> int:
-        return len(self._rows)
+        return self._n
+
+    @property
+    def engine(self) -> MatchEngine:
+        return self._engine
+
+    @property
+    def capacity(self) -> int:
+        return self._engine.corpus.n_rows
+
+    @property
+    def total_host_packs(self) -> int:
+        """Full host packing events over the store's lifetime."""
+        return self._prior_packs + self._engine.corpus.host_pack_count
+
+    @property
+    def total_row_writes(self) -> int:
+        """Incremental packed-row writes over the store's lifetime."""
+        return self._prior_row_writes + self._engine.corpus.row_update_count
+
+    def _grow(self) -> None:
+        """Double capacity; the one place the store repacks (amortized)."""
+        old_corpus = self._engine.corpus
+        self._prior_packs += old_corpus.host_pack_count
+        self._prior_row_writes += old_corpus.row_update_count
+        buf = np.zeros((max(self.capacity * 2, _INITIAL_CAPACITY),
+                        self.fp_len), np.uint8)
+        buf[:self._n] = old_corpus.fragments[:self._n]
+        self._engine = MatchEngine(PackedCorpus(buf))
 
     def _similarity(self, doc: bytes) -> float:
-        if not self._rows:
+        if self._n == 0:
             return 0.0
-        store = np.stack(self._rows)
         pat = fingerprint(doc, self.fp_len)[: self.pattern_len]
-        scores = np.asarray(ops.match_scores(store, pat, method=self.method))
-        return float(scores.max()) / self.pattern_len
+        res = self._engine.match(pat, backend=self.backend, reduction="best")
+        # Rows beyond _n are empty capacity; trim before reducing.
+        return float(res.best_scores[:self._n].max()) / self.pattern_len
 
     def is_duplicate(self, doc: bytes) -> bool:
         return self._similarity(doc) >= self.threshold
 
     def add(self, doc: bytes) -> None:
-        self._rows.append(fingerprint(doc, self.fp_len))
+        if self._n >= self.capacity:
+            self._grow()
+        self._engine.corpus.set_rows(self._n, fingerprint(doc, self.fp_len))
+        self._n += 1
 
     def filter(self, docs: List[bytes]) -> List[bytes]:
         """Greedy near-dup filter: keep a doc iff not similar to any kept."""

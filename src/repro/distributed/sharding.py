@@ -33,6 +33,9 @@ LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
     "experts": ("model",),
     "layers": (),
     "seq": (),          # sequence sharding is a hillclimb lever (see perf/)
+    # Match-engine corpus rows (repro.match): embarrassingly parallel, the
+    # TPU analogue of the paper's independent CRAM arrays (Sec. 3.4).
+    "rows": ("data",),
 }
 
 # ZeRO-3/FSDP-only profile (§Perf lever): weights shard 256-way on their
@@ -50,6 +53,7 @@ FSDP_RULES: Dict[str, Tuple[str, ...]] = {
     "experts": ("model",),
     "layers": (),
     "seq": (),
+    "rows": ("data", "model"),   # no TP dim in a match query: rows over all
 }
 
 RULE_PROFILES = {"2d": LOGICAL_RULES, "fsdp": FSDP_RULES}

@@ -8,5 +8,8 @@ memory hierarchy (see DESIGN.md Sec. 2):
 * ``popcount``    -- bulk bitcount (the Fig. 4b adder tree, SWAR form).
 * ``bitwise``     -- bulk NOT/OR/NAND/XOR (Fig. 11 gate-level analogue).
 
-``ops`` is the public wrapper layer; ``ref`` holds the pure-jnp oracles.
+``ref`` holds the pure-jnp oracles.  Matching workloads enter through the
+engine layer ``repro.match`` (planner + device-resident packed corpus +
+streaming executor; DESIGN.md Sec. 3); ``ops`` keeps thin one-shot compat
+wrappers plus the bulk-op entry points.
 """

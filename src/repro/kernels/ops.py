@@ -1,27 +1,29 @@
-"""Public jit'd wrappers for the CRAM-PM TPU kernels.
+"""Thin compat wrappers over the match engine + bulk-bitwise kernels.
 
-Handles packing, tile padding, pattern broadcast and output trimming so
-callers deal only in character codes.  ``interpret`` defaults to True off
-TPU (kernel bodies execute in Python via the Pallas interpreter, which is
-how this CPU container validates them); on TPU it compiles to Mosaic.
+``match_scores`` is a one-shot shim over ``repro.match`` kept for callers
+that match once against a throwaway fragment set (tests, examples).  All
+host-side packing, padding and kernel selection lives in the engine layer
+(``repro.match``: PackedCorpus / Planner / MatchEngine); long-lived
+consumers hold a ``MatchEngine`` so the corpus stays device-resident
+across queries instead of being repacked per call.
+
+``popcount`` and ``bitwise`` remain direct kernel wrappers (their operands
+are query data, not a resident corpus).  ``interpret`` defaults to True off
+TPU (kernel bodies execute via the Pallas interpreter, which is how this
+CPU container validates them); on TPU it compiles to Mosaic.
 """
 
 from __future__ import annotations
 
 
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import encoding
-
 from . import bitwise as _bitwise
-from . import match_mxu as _mxu
-from . import match_swar as _swar
 from . import popcount as _popcount
-from . import ref as _ref
 
 
 def default_interpret() -> bool:
@@ -36,73 +38,25 @@ def _pad_rows(x: np.ndarray, mult: int) -> np.ndarray:
 
 
 def match_scores(fragments: np.ndarray, patterns: np.ndarray,
-                 method: Literal["swar", "mxu", "ref"] = "swar",
-                 interpret: bool | None = None) -> jnp.ndarray:
+                 method: Optional[Literal["swar", "mxu", "ref"]] = None,
+                 interpret: bool | None = None) -> np.ndarray:
     """Similarity scores for all alignments (Algorithm 1 fast path).
 
-    fragments: (R, F) uint8 codes.  patterns: (P,) shared, or (R, P) per-row
-    (swar/ref), or (Q, P) batched (mxu -> (R, L, Q)).
-    Returns (R, L) int32 (swar/ref) or (R, L, Q) int32 (mxu), L = F - P + 1.
+    fragments: (R, F) uint8 codes.  patterns: (P,) shared, (R, P) per-row,
+    or (Q, P) batched (-> (R, L, Q)).  Returns (R, L) int32 or (R, L, Q)
+    int32, L = F - P + 1.
+
+    ``method=None`` lets the planner pick the kernel from the workload
+    shape; pass an explicit name to override.  One-shot path: packs the
+    fragments for this call only -- hold a ``repro.match.MatchEngine`` to
+    amortize packing across queries.
     """
-    if interpret is None:
-        interpret = default_interpret()
-    fragments = np.asarray(fragments, np.uint8)
-    patterns = np.asarray(patterns, np.uint8)
-    R, F = fragments.shape
-    P = patterns.shape[-1]
-    L = F - P + 1
-    if L <= 0:
-        raise ValueError("pattern longer than fragment")
+    from repro.match import MatchEngine
 
-    if method == "ref":
-        return _ref.match_scores_ref(fragments, patterns)[:, :L]
-
-    if method == "swar":
-        if patterns.ndim == 1:
-            patterns = np.broadcast_to(patterns, (R, P))
-        ref_words = encoding.pack_codes_u32(fragments)
-        # Pad so every (base + Wp + 1) word read stays in bounds.
-        wp = -(-P // encoding.CHARS_PER_WORD_DNA)
-        need = (L - 1) // 16 + wp + 1
-        if ref_words.shape[1] < need:
-            ref_words = np.concatenate(
-                [ref_words,
-                 np.zeros((R, need - ref_words.shape[1]), np.uint32)], 1)
-        pat_words = encoding.pack_codes_u32(patterns)
-        mask_codes = np.zeros(wp * 16, np.uint32)
-        mask_codes[:P] = 1
-        valid_mask = encoding.pack_codes_u32(mask_codes[None, :])  # (1, wp)
-        rw = _pad_rows(ref_words, _swar.ROW_TILE)
-        pw = _pad_rows(pat_words, _swar.ROW_TILE)
-        out = _swar.match_swar(
-            jnp.asarray(rw), jnp.asarray(pw), jnp.asarray(valid_mask),
-            n_locs=L, pattern_chars=P, interpret=interpret)
-        return out[:R]
-
-    if method == "mxu":
-        shared = patterns.ndim == 1
-        if shared:
-            patterns = patterns[None, :]
-        Q = patterns.shape[0]
-        n_chunks = -(-P // _mxu.CHARS_PER_CHUNK)
-        p_chars = n_chunks * _mxu.CHARS_PER_CHUNK
-        l_pad = max(-(-L // _mxu.L_TILE) * _mxu.L_TILE, _mxu.L_TILE)
-        f_chars = l_pad + p_chars
-        f1h = np.zeros((R, f_chars, 4), np.float32)
-        f1h[np.arange(R)[:, None], np.arange(F)[None, :], fragments] = 1.0
-        ref_flat = f1h.reshape(R, f_chars * 4).astype(jnp.bfloat16)
-        q_pad = -(-Q // 128) * 128
-        pat_mat = np.zeros((p_chars * 4, q_pad), np.float32)
-        for q in range(Q):
-            for i in range(P):
-                pat_mat[i * 4 + int(patterns[q, i]), q] = 1.0
-        out = _mxu.match_mxu(jnp.asarray(ref_flat),
-                             jnp.asarray(pat_mat, jnp.bfloat16),
-                             l_pad=l_pad, interpret=interpret)
-        scores = jnp.round(out[:, :L, :Q]).astype(jnp.int32)
-        return scores[:, :, 0] if shared else scores
-
-    raise ValueError(method)
+    eng = MatchEngine(np.asarray(fragments, np.uint8), interpret=interpret)
+    # The streaming executor materializes on host; hand that array back
+    # rather than re-uploading (every caller consumes it as numpy).
+    return eng.scores(np.asarray(patterns, np.uint8), backend=method)
 
 
 def popcount(words: np.ndarray, interpret: bool | None = None) -> jnp.ndarray:
@@ -128,5 +82,3 @@ def bitwise(op: str, a: np.ndarray, b: np.ndarray | None = None,
     out = _bitwise.bitwise(op, jnp.asarray(ap), jnp.asarray(bp),
                            interpret=interpret)
     return out[:N]
-
-

@@ -1,0 +1,22 @@
+"""Unified match-engine subsystem (DESIGN.md Sec. 3).
+
+The single entry point for all string-matching workloads:
+
+* ``PackedCorpus`` -- fragments packed once into device-resident SWAR and
+  one-hot forms, cached across queries (the paper's keep-data-next-to-
+  compute discipline, Sec. 2-3).
+* ``Planner`` / ``Plan`` -- roofline-arithmetic kernel selection (swar /
+  mxu / ref) + all tile/pad geometry for one query.
+* ``MatchEngine`` / ``MatchResult`` -- sharded streaming executor with
+  fused best / top-k / threshold reductions per row-chunk.
+
+``repro.kernels.ops.match_scores`` is the thin one-shot compat shim over
+this package; long-lived consumers (dedup, serving-scale workloads) hold a
+``MatchEngine`` so the corpus stays resident between queries.
+"""
+
+from .corpus import PackedCorpus
+from .engine import MatchEngine, MatchResult
+from .planner import Plan, Planner
+
+__all__ = ["PackedCorpus", "Planner", "Plan", "MatchEngine", "MatchResult"]

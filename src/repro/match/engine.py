@@ -1,0 +1,378 @@
+"""Sharded streaming match executor (DESIGN.md Sec. 3c).
+
+Single entry point for all string-matching workloads: owns a
+``PackedCorpus`` (device-resident, packed once), asks the ``Planner`` for a
+kernel + geometry, then streams corpus row-chunks through the chosen Pallas
+kernel with a fused per-chunk reduction, so the full (R, L, Q) score tensor
+is never materialized unless explicitly requested.
+
+Reductions (fused per chunk):
+  best      -- per-row argmax over alignments (the paper's host extract,
+               Sec. 3.2): (R,[Q]) locs + scores.
+  topk      -- global top-k rows by best score (running merge across
+               chunks): which corpus rows match best.
+  threshold -- all (row, loc[, q]) hits with score >= threshold.
+  full      -- materialized score tensor (small problems / compat path).
+
+Sharding: with a ``jax.sharding.Mesh`` the corpus rows distribute over the
+mesh axes mapped by the ``rows`` logical axis (``distributed.sharding``),
+and each chunk executes under ``shard_map`` -- rows are embarrassingly
+parallel, the direct analogue of the paper's array-level parallelism
+(Sec. 3.4: arrays compute independently, the host merges scores).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.core import encoding
+from repro.distributed import sharding as _sharding
+from repro.kernels import match_mxu as _mxu
+from repro.kernels import match_swar as _swar
+from repro.kernels import ref as _kref
+
+from .corpus import PackedCorpus
+from .planner import Plan, Planner
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass
+class MatchResult:
+    """Outcome of one engine query (reduced unless ``scores`` requested)."""
+
+    plan: Plan
+    best_locs: np.ndarray                 # (R,) or (R, Q) int
+    best_scores: np.ndarray               # (R,) or (R, Q) int32
+    scores: Optional[np.ndarray] = None   # (R, L[, Q]) when reduction="full"
+    topk_rows: Optional[np.ndarray] = None     # (k,[Q]) best-matching rows
+    topk_scores: Optional[np.ndarray] = None
+    hits: Optional[np.ndarray] = None     # (n, 3|4): row, loc[, q], score
+    n_chunks: int = 0
+
+
+def _pack_pattern_swar(patterns: np.ndarray, wp: int
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-pack (tiny) pattern words + valid mask for the SWAR kernel."""
+    P = patterns.shape[-1]
+    pat_words = encoding.pack_codes_u32(patterns)
+    mask_codes = np.zeros(wp * 16, np.uint32)
+    mask_codes[:P] = 1
+    valid_mask = encoding.pack_codes_u32(mask_codes[None, :])
+    return pat_words, valid_mask
+
+
+def _pack_patterns_mxu(patterns: np.ndarray, p_chars: int, q_pad: int
+                       ) -> np.ndarray:
+    """Host-pack (tiny) one-hot pattern matrix (p_chars*4, q_pad)."""
+    Q, P = patterns.shape
+    pat_mat = np.zeros((p_chars, 4, q_pad), np.float32)
+    pat_mat[np.arange(P)[:, None], patterns.T, np.arange(Q)[None, :]] = 1.0
+    return pat_mat.reshape(p_chars * 4, q_pad)
+
+
+class MatchEngine:
+    """Planner + packed corpus + streaming executor in one object.
+
+    ``corpus`` may be a PackedCorpus or a raw (R, F) uint8 fragment matrix.
+    ``mesh`` (optional) shards corpus rows over the mesh axes the ``rows``
+    logical rule maps to; pass ``rules`` to use a non-default rule table.
+    """
+
+    def __init__(self, corpus: Union[PackedCorpus, np.ndarray], *,
+                 planner: Optional[Planner] = None,
+                 interpret: Optional[bool] = None,
+                 mesh: Optional[Mesh] = None, rules=None):
+        self.mesh = mesh
+        self.rules = rules
+        self._row_shards = 1
+        self._row_axes: Optional[Tuple[str, ...]] = None
+        row_pad = _swar.ROW_TILE
+        if mesh is not None:
+            n = (corpus.n_rows if isinstance(corpus, PackedCorpus)
+                 else np.asarray(corpus).shape[0])
+            r = _sharding.resolve_axis(
+                "rows", -(-n // _swar.ROW_TILE) * _swar.ROW_TILE, mesh, rules)
+            if r is not None:
+                self._row_axes = r if isinstance(r, tuple) else (r,)
+                self._row_shards = int(
+                    np.prod([mesh.shape[a] for a in self._row_axes]))
+                row_pad = _swar.ROW_TILE * self._row_shards
+        if isinstance(corpus, PackedCorpus):
+            if corpus.row_pad % row_pad:
+                corpus.row_pad = row_pad
+                corpus.invalidate()
+            self.corpus = corpus
+        else:
+            self.corpus = PackedCorpus(np.asarray(corpus, np.uint8),
+                                       row_pad=row_pad)
+        self.planner = planner or Planner()
+        self.interpret = default_interpret() if interpret is None else interpret
+
+    # -- planning -------------------------------------------------------------
+    def _infer_mode(self, patterns: np.ndarray, mode: Optional[str],
+                    backend: Optional[str], n_rows: int) -> str:
+        if patterns.ndim == 1:
+            if mode not in (None, "shared"):
+                raise ValueError(f"1-D patterns are 'shared', got mode={mode!r}")
+            return "shared"
+        if mode is not None:
+            if mode not in ("per_row", "batched"):
+                raise ValueError(f"2-D patterns need mode 'per_row' or "
+                                 f"'batched', got {mode!r}")
+            if mode == "per_row" and patterns.shape[0] != n_rows:
+                raise ValueError("per_row patterns must have one row per "
+                                 "corpus row")
+            return mode
+        # (Q, P) with Q == n_rows is ambiguous; resolve like the historical
+        # ops API: the mxu kernel is inherently batched, everything else
+        # reads a row-count match as per-row.  Pass mode= to be explicit.
+        if backend == "mxu":
+            return "batched"
+        return "per_row" if patterns.shape[0] == n_rows else "batched"
+
+    def plan(self, patterns: np.ndarray, *, backend: Optional[str] = None,
+             mode: Optional[str] = None, rows: Optional[np.ndarray] = None,
+             chunk_rows: Optional[int] = None) -> Plan:
+        patterns = np.asarray(patterns, np.uint8)
+        n_rows = self.corpus.n_rows if rows is None else len(rows)
+        mode = self._infer_mode(patterns, mode, backend, n_rows)
+        return self.planner.plan(
+            n_rows=n_rows,
+            fragment_chars=self.corpus.fragment_chars,
+            pattern_chars=patterns.shape[-1],
+            n_patterns=patterns.shape[0] if mode == "batched" else None,
+            per_row=mode == "per_row", backend=backend, chunk_rows=chunk_rows)
+
+    # -- kernel dispatch (one chunk, pure device) -----------------------------
+    def _swar_chunk(self, words: jnp.ndarray, pat_words: jnp.ndarray,
+                    mask: jnp.ndarray, plan: Plan) -> jnp.ndarray:
+        def call(w, p):
+            return _swar.match_swar(w, p, mask, n_locs=plan.n_locs,
+                                    pattern_chars=plan.pattern_chars,
+                                    interpret=self.interpret)
+        if self.mesh is not None and self._row_axes is not None:
+            from jax.experimental.shard_map import shard_map
+            spec = PartitionSpec(self._row_axes if len(self._row_axes) > 1
+                                 else self._row_axes[0])
+            call = shard_map(call, mesh=self.mesh, in_specs=(spec, spec),
+                             out_specs=spec, check_rep=False)
+        return call(words, pat_words)
+
+    def _mxu_chunk(self, ref_flat: jnp.ndarray, pat_mat: jnp.ndarray,
+                   plan: Plan) -> jnp.ndarray:
+        def call(r, p):
+            return _mxu.match_mxu(r, p, l_pad=plan.l_pad,
+                                  interpret=self.interpret)
+        if self.mesh is not None and self._row_axes is not None:
+            from jax.experimental.shard_map import shard_map
+            spec = PartitionSpec(self._row_axes if len(self._row_axes) > 1
+                                 else self._row_axes[0])
+            call = shard_map(call, mesh=self.mesh,
+                             in_specs=(spec, PartitionSpec(None, None)),
+                             out_specs=spec, check_rep=False)
+        return call(ref_flat, pat_mat)
+
+    def _chunk_scores(self, plan: Plan, patterns: np.ndarray, c0: int,
+                      c1: int, packed, idx: Optional[jnp.ndarray]
+                      ) -> jnp.ndarray:
+        """Scores for query rows [c0, c1): (rows, L) or (rows, L, Q).
+
+        ``idx`` (padded corpus-row indices) is set for row-subset queries:
+        the chunk is gathered from the resident device forms instead of
+        sliced -- still no host repacking.
+        """
+        if plan.backend == "ref":
+            if idx is not None:
+                sel = np.asarray(idx[c0:min(c1, plan.n_rows)])
+                frags = jnp.asarray(self.corpus.fragments[sel])
+            else:
+                frags = jnp.asarray(self.corpus.fragments[c0:min(c1,
+                                    self.corpus.n_rows)])
+            if plan.mode == "batched":
+                outs = [_kref.match_scores_ref(frags, patterns[q])
+                        for q in range(plan.n_patterns)]
+                return jnp.stack(outs, -1)
+            pats = patterns[c0:c1] if plan.mode == "per_row" else patterns
+            return _kref.match_scores_ref(frags, pats)
+
+        if plan.backend == "swar":
+            base = self.corpus.swar_words(plan.need_words)
+            words = base[idx[c0:c1]] if idx is not None else base[c0:c1]
+            pat_words, mask = packed
+            mask = jnp.asarray(mask)
+            if plan.mode == "per_row":
+                pw = jnp.asarray(pat_words)
+                r_pad = words.shape[0]
+                rows = pw[c0:min(c1, pw.shape[0])]
+                if rows.shape[0] < r_pad:
+                    rows = jnp.concatenate(
+                        [rows, jnp.zeros((r_pad - rows.shape[0],
+                                          rows.shape[1]), jnp.uint32)], 0)
+                return self._swar_chunk(words, rows, mask, plan)
+            if plan.mode == "batched":
+                outs = []
+                for q in range(plan.n_patterns):
+                    pw = jnp.broadcast_to(jnp.asarray(pat_words[q])[None, :],
+                                          (words.shape[0], plan.wp))
+                    outs.append(self._swar_chunk(words, pw, mask, plan))
+                return jnp.stack(outs, -1)
+            pw = jnp.broadcast_to(jnp.asarray(pat_words[0])[None, :],
+                                  (words.shape[0], plan.wp))
+            return self._swar_chunk(words, pw, mask, plan)
+
+        # mxu
+        base = self.corpus.onehot_flat(plan.f_chars)
+        ref_flat = base[idx[c0:c1]] if idx is not None else base[c0:c1]
+        out = self._mxu_chunk(ref_flat, packed, plan)
+        scores = jnp.round(out[:, :plan.n_locs, :plan.n_patterns]
+                           ).astype(jnp.int32)
+        return scores[:, :, 0] if plan.mode != "batched" else scores
+
+    # -- execution ------------------------------------------------------------
+    def match(self, patterns: np.ndarray, *, backend: Optional[str] = None,
+              mode: Optional[str] = None, rows: Optional[np.ndarray] = None,
+              reduction: str = "best", k: int = 10,
+              threshold: Optional[float] = None,
+              chunk_rows: Optional[int] = None) -> MatchResult:
+        """Run one query; see module docstring for reductions.
+
+        patterns: (P,) shared, (R, P) per-row, or (Q, P) batched uint8.
+        ``mode`` disambiguates 2-D patterns ("per_row" / "batched") when the
+        shape alone is ambiguous.  ``rows`` restricts the query to a subset
+        of corpus rows (device gather from the resident forms; results are
+        in subset order).  ``threshold`` is in characters (absolute score).
+        """
+        if reduction not in ("best", "topk", "threshold", "full"):
+            raise ValueError(f"unknown reduction {reduction!r}")
+        if reduction == "threshold" and threshold is None:
+            raise ValueError("reduction='threshold' requires a threshold")
+        patterns = np.asarray(patterns, np.uint8)
+        plan = self.plan(patterns, backend=backend, mode=mode, rows=rows,
+                         chunk_rows=chunk_rows)
+        pats2d = patterns if patterns.ndim == 2 else patterns[None, :]
+
+        if plan.backend == "swar":
+            packed = _pack_pattern_swar(pats2d, plan.wp)
+        elif plan.backend == "mxu":
+            packed = jnp.asarray(
+                _pack_patterns_mxu(pats2d, plan.p_chars_pad, plan.q_pad),
+                jnp.bfloat16)
+        else:
+            packed = None
+
+        if rows is not None:
+            sel = np.asarray(rows, np.int64).reshape(-1)
+            if sel.size and (sel.min() < 0 or
+                             sel.max() >= self.corpus.n_rows):
+                # jnp gathers clamp out-of-range indices silently; fail
+                # loudly instead of returning the wrong rows' scores.
+                raise IndexError(
+                    f"rows must be in [0, {self.corpus.n_rows}), got "
+                    f"[{sel.min()}, {sel.max()}]")
+            R = len(sel)
+            R_pad = -(-R // self.corpus.row_pad) * self.corpus.row_pad
+            pad_idx = np.zeros(R_pad, np.int64)
+            pad_idx[:R] = sel
+            idx = jnp.asarray(pad_idx)
+        else:
+            R = self.corpus.n_rows
+            R_pad = self.corpus.n_rows_padded
+            idx = None
+        step = plan.chunk_rows
+        if self._row_shards > 1:
+            tile = _swar.ROW_TILE * self._row_shards
+            step = max(tile, (step // tile) * tile)
+
+        best_l: List[np.ndarray] = []
+        best_s: List[np.ndarray] = []
+        full: List[np.ndarray] = []
+        hit_rows: List[np.ndarray] = []
+        run_rows = run_scores = None      # running global top-k state
+        n_chunks = 0
+
+        for c0 in range(0, R_pad, step):
+            c1 = min(c0 + step, R_pad)
+            valid = min(c1, R) - c0       # rows in this chunk that are real
+            if valid <= 0:
+                break                     # pure-padding tail chunk
+            scores = self._chunk_scores(plan, pats2d, c0, c1, packed, idx)
+            scores = scores[:valid]
+            n_chunks += 1
+            if reduction == "full":
+                # Host materialization is the point of this reduction; the
+                # best reduction is derived from it at the end.
+                full.append(np.asarray(scores))
+                continue
+            # Fused per-chunk reduction: only (chunk, ...) lives at once.
+            bl = jnp.argmax(scores, axis=1)
+            bs = jnp.max(scores, axis=1)
+            best_l.append(np.asarray(bl))
+            best_s.append(np.asarray(bs))
+            # topk / threshold report *corpus* row ids; with a rows= subset
+            # that means mapping chunk positions through the selection.
+            if reduction == "threshold":
+                sc = np.asarray(scores)
+                local = np.argwhere(sc >= threshold)
+                if local.size:
+                    vals = sc[tuple(local.T)]
+                    if rows is not None:
+                        local[:, 0] = sel[local[:, 0] + c0]
+                    else:
+                        local[:, 0] += c0
+                    hit_rows.append(np.concatenate(
+                        [local, vals[:, None].astype(np.int64)], 1))
+            elif reduction == "topk":
+                if rows is not None:
+                    chunk_rows_ids = jnp.asarray(sel[c0:c0 + valid])
+                else:
+                    chunk_rows_ids = jnp.arange(c0, c0 + valid)
+                if bs.ndim == 2:          # batched: top-k per pattern
+                    chunk_rows_ids = jnp.broadcast_to(
+                        chunk_rows_ids[:, None], bs.shape)
+                cat_s = bs if run_scores is None else jnp.concatenate(
+                    [run_scores, bs], 0)
+                cat_r = chunk_rows_ids if run_rows is None else \
+                    jnp.concatenate([run_rows, chunk_rows_ids], 0)
+                kk = min(k, cat_s.shape[0])
+                top_s, top_i = jax.lax.top_k(cat_s.T if cat_s.ndim == 2
+                                             else cat_s, kk)
+                if cat_s.ndim == 2:
+                    run_scores = top_s.T
+                    run_rows = jnp.take_along_axis(cat_r.T, top_i, 1).T
+                else:
+                    run_scores = top_s
+                    run_rows = cat_r[top_i]
+
+        if reduction == "full":
+            all_scores = np.concatenate(full, 0)
+            return MatchResult(plan=plan, best_locs=all_scores.argmax(1),
+                               best_scores=all_scores.max(1),
+                               scores=all_scores, n_chunks=n_chunks)
+        best_locs = np.concatenate(best_l, 0)
+        best_scores = np.concatenate(best_s, 0)
+        res = MatchResult(plan=plan, best_locs=best_locs,
+                          best_scores=best_scores, n_chunks=n_chunks)
+        if reduction == "threshold":
+            width = 3 + (1 if plan.mode == "batched" else 0)
+            res.hits = (np.concatenate(hit_rows, 0) if hit_rows
+                        else np.zeros((0, width), np.int64))
+        elif reduction == "topk":
+            res.topk_rows = np.asarray(run_rows)
+            res.topk_scores = np.asarray(run_scores)
+        return res
+
+    def scores(self, patterns: np.ndarray, *, backend: Optional[str] = None,
+               mode: Optional[str] = None, rows: Optional[np.ndarray] = None,
+               chunk_rows: Optional[int] = None) -> np.ndarray:
+        """Full materialized score tensor (compat path for small problems)."""
+        return self.match(patterns, backend=backend, mode=mode, rows=rows,
+                          reduction="full", chunk_rows=chunk_rows).scores

@@ -1,0 +1,178 @@
+"""Query planner: workload shape -> kernel + geometry (DESIGN.md Sec. 3b).
+
+Replaces the caller-supplied backend string of the old ``ops.match_scores``
+with a selection driven by the same roofline arithmetic the benchmarks use
+(``benchmarks/kernel_bench`` / ``benchmarks/roofline``): estimate each
+kernel's compute and memory terms against the ``core.tech.TPU_V5E``
+constants, take ``max`` per kernel, pick the minimum.  Structural
+constraints are applied first (the MXU formulation has no per-row-pattern
+path; a batched query on the SWAR kernel costs Q dispatches), and an
+explicit ``backend=`` override always wins.
+
+The ``Plan`` carries every derived geometry number (word counts, tile
+paddings, chunking) so the executor never re-derives layout -- one source
+of truth per query.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.tech import TPU_V5E, TPURoofline
+from repro.kernels import match_mxu as _mxu
+from repro.kernels import match_swar as _swar
+
+BACKENDS = ("swar", "mxu", "ref")
+
+# Per-kernel-dispatch overhead charged to multi-pass plans (host launch +
+# program switch); calibrated order-of-magnitude, only has to be large
+# enough that Q-pass SWAR loses to one batched MXU pass at real Q.
+DISPATCH_OVERHEAD_S = 5e-6
+# Below this many (row, loc, patchar) ops the Pallas launch dominates and
+# the plain jnp reference is fastest.
+TINY_OPS = 4096
+# SWAR integer ops per (row, loc, word): shift/or/xor/and + popcount tree.
+SWAR_OPS_PER_WORD = 12
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Everything the executor needs to run one query."""
+
+    backend: str                # "swar" | "mxu" | "ref"
+    mode: str                   # "shared" | "per_row" | "batched"
+    n_rows: int                 # R (unpadded)
+    fragment_chars: int         # F
+    pattern_chars: int          # P
+    n_patterns: int             # Q (1 unless batched)
+    n_locs: int                 # L = F - P + 1
+    # SWAR geometry.
+    wp: int = 0                 # pattern words
+    need_words: int = 0         # min corpus word width incl. look-ahead pad
+    # MXU geometry.
+    l_pad: int = 0              # alignment rows produced (mult of L_TILE)
+    p_chars_pad: int = 0        # pattern chars padded to CHARS_PER_CHUNK
+    q_pad: int = 0              # patterns padded to 128
+    f_chars: int = 0            # one-hot reference chars needed
+    # Streaming.
+    chunk_rows: int = 0         # rows per executor chunk (mult of row tile)
+    est_seconds: float = 0.0    # roofline estimate for the whole query
+    reason: str = ""            # human-readable selection rationale
+
+
+def _swar_geometry(P: int, L: int) -> tuple[int, int]:
+    wp = -(-P // 16)
+    need = (L - 1) // 16 + wp + 1
+    return wp, need
+
+
+def _mxu_geometry(P: int, L: int, Q: int) -> tuple[int, int, int, int]:
+    n_chunks = -(-P // _mxu.CHARS_PER_CHUNK)
+    p_chars = n_chunks * _mxu.CHARS_PER_CHUNK
+    l_pad = max(-(-L // _mxu.L_TILE) * _mxu.L_TILE, _mxu.L_TILE)
+    q_pad = -(-Q // 128) * 128
+    return l_pad, p_chars, q_pad, l_pad + p_chars
+
+
+class Planner:
+    """Roofline-based kernel selection against a TPU target."""
+
+    def __init__(self, roofline: TPURoofline = TPU_V5E,
+                 memory_budget_bytes: float = 256 * 2**20):
+        self.roofline = roofline
+        self.memory_budget_bytes = memory_budget_bytes
+
+    # -- cost terms -----------------------------------------------------------
+    def swar_seconds(self, R: int, L: int, P: int, Q: int = 1) -> float:
+        """Q sequential SWAR passes (the kernel scores one pattern set)."""
+        wp, need = _swar_geometry(P, L)
+        ops = R * L * wp * SWAR_OPS_PER_WORD
+        bytes_hbm = R * need * 4 + R * wp * 4 + R * L * 4
+        t_compute = ops / (self.roofline.peak_bf16_flops / 2)
+        t_mem = bytes_hbm / self.roofline.hbm_bw
+        return Q * (max(t_compute, t_mem) + DISPATCH_OVERHEAD_S)
+
+    def mxu_seconds(self, R: int, L: int, P: int, Q: int = 1) -> float:
+        """One batched MXU pass over all Q patterns."""
+        l_pad, p_chars, q_pad, f_chars = _mxu_geometry(P, L, Q)
+        n_chunks = p_chars // _mxu.CHARS_PER_CHUNK
+        flops = R * l_pad * (n_chunks * _mxu.K_CHUNK) * 2 * q_pad
+        bytes_hbm = (R * f_chars * 4 * 2 + p_chars * 4 * q_pad * 2
+                     + R * l_pad * q_pad * 4)
+        t_compute = flops / self.roofline.peak_bf16_flops
+        t_mem = bytes_hbm / self.roofline.hbm_bw
+        return max(t_compute, t_mem) + DISPATCH_OVERHEAD_S
+
+    # -- chunking -------------------------------------------------------------
+    def _chunk_rows(self, R_pad: int, plan_bytes_per_row: int,
+                    row_tile: int, override: Optional[int]) -> int:
+        if override is not None:
+            chunk = -(-override // row_tile) * row_tile
+        else:
+            rows = int(self.memory_budget_bytes // max(plan_bytes_per_row, 1))
+            chunk = max(row_tile, (rows // row_tile) * row_tile)
+        return min(chunk, R_pad)
+
+    # -- the planner ----------------------------------------------------------
+    def plan(self, *, n_rows: int, fragment_chars: int, pattern_chars: int,
+             n_patterns: Optional[int] = None, per_row: bool = False,
+             backend: Optional[str] = None,
+             chunk_rows: Optional[int] = None) -> Plan:
+        R, F, P = n_rows, fragment_chars, pattern_chars
+        if R < 1:
+            raise ValueError("corpus has no rows")
+        if P < 1:
+            raise ValueError("pattern must have at least one character")
+        L = F - P + 1
+        if L <= 0:
+            raise ValueError("pattern longer than fragment")
+        if per_row and n_patterns is not None:
+            raise ValueError("per_row and batched are mutually exclusive")
+        Q = 1 if n_patterns is None else int(n_patterns)
+        mode = "per_row" if per_row else ("batched" if n_patterns is not None
+                                          else "shared")
+        if backend is not None and backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend == "mxu" and per_row:
+            raise ValueError("mxu kernel has no per-row-pattern formulation")
+
+        t_swar = self.swar_seconds(R, L, P, Q)
+        t_mxu = self.mxu_seconds(R, L, P, Q)
+
+        if backend is not None:
+            chosen, reason = backend, "explicit override"
+        elif per_row:
+            chosen, reason = "swar", "per-row patterns: SWAR only"
+        elif R * L * P <= TINY_OPS:
+            chosen, reason = "ref", "tiny workload: launch overhead dominates"
+        elif t_mxu < t_swar:
+            chosen = "mxu"
+            reason = f"roofline: mxu {t_mxu:.3g}s < swar {t_swar:.3g}s (Q={Q})"
+        else:
+            chosen = "swar"
+            reason = f"roofline: swar {t_swar:.3g}s <= mxu {t_mxu:.3g}s (Q={Q})"
+
+        wp, need = _swar_geometry(P, L)
+        l_pad, p_chars, q_pad, f_chars = _mxu_geometry(P, L, Q)
+        R_pad = -(-R // _swar.ROW_TILE) * _swar.ROW_TILE
+
+        if chosen == "swar":
+            bytes_per_row = need * 4 + wp * 4 + L * 4
+            row_tile = _swar.ROW_TILE
+            est = t_swar
+        elif chosen == "mxu":
+            bytes_per_row = f_chars * 4 * 2 + l_pad * q_pad * 4
+            row_tile = 1
+            est = t_mxu
+        else:
+            bytes_per_row = F + L * 4 * Q
+            row_tile = 1
+            est = 0.0
+        chunk = self._chunk_rows(R_pad, bytes_per_row, row_tile, chunk_rows)
+
+        return Plan(backend=chosen, mode=mode, n_rows=R, fragment_chars=F,
+                    pattern_chars=P, n_patterns=Q, n_locs=L, wp=wp,
+                    need_words=need, l_pad=l_pad, p_chars_pad=p_chars,
+                    q_pad=q_pad, f_chars=f_chars, chunk_rows=chunk,
+                    est_seconds=est, reason=reason)

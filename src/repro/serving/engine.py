@@ -51,6 +51,10 @@ class Engine:
         return None
 
     def add(self, req: Request) -> bool:
+        if len(req.prompt) == 0:
+            # A zero-length prompt has no logits to seed decoding from
+            # (the prefill loop below would never run).
+            raise ValueError("empty prompt: at least one token required")
         slot = self._free_slot()
         if slot is None:
             return False

@@ -1,13 +1,16 @@
-"""Pallas kernel tests: shape sweeps + property tests vs the jnp oracles.
+"""Pallas kernel tests: deterministic shape sweeps vs the jnp oracles.
 
 All kernels run in interpret=True mode on CPU (the kernel body executes in
 Python); integer paths must be bit-exact, the bf16 MXU path exact after
 rounding (one-hot dot products are small integers, exactly representable).
+
+Randomized property tests live in ``test_kernels_properties.py`` (skipped
+when ``hypothesis`` is absent, so a missing dev dep never takes down the
+deterministic coverage here).
 """
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.matcher import sliding_scores
 from repro.kernels import ops
@@ -55,27 +58,6 @@ class TestMatchSwar:
             got = np.asarray(ops.match_scores(frags, pat, method="swar"))
             assert got[1, loc] == 16, loc
 
-    @settings(max_examples=25, deadline=None)
-    @given(st.integers(1, 6), st.integers(2, 80), st.data())
-    def test_property_matches_oracle(self, r, f, data):
-        p = data.draw(st.integers(1, f))
-        seed = data.draw(st.integers(0, 2**31))
-        frags, pat = random_case(r, f, p, seed=seed)
-        got = np.asarray(ops.match_scores(frags, pat, method="swar"))
-        np.testing.assert_array_equal(got, sliding_scores(frags, pat))
-
-    @settings(max_examples=10, deadline=None)
-    @given(st.integers(0, 2**31))
-    def test_property_score_bounds_and_exact_hit(self, seed):
-        rng = np.random.default_rng(seed)
-        frags = rng.integers(0, 4, (4, 60), np.uint8)
-        pat = rng.integers(0, 4, 12, np.uint8)
-        loc = int(rng.integers(0, 49))
-        frags[2, loc:loc + 12] = pat
-        s = np.asarray(ops.match_scores(frags, pat, method="swar"))
-        assert (s >= 0).all() and (s <= 12).all()
-        assert s[2, loc] == 12
-
 
 class TestMatchMXU:
     @pytest.mark.parametrize("r,f,p,q", [
@@ -94,16 +76,6 @@ class TestMatchMXU:
         got = np.asarray(ops.match_scores(frags, pat, method="mxu"))
         np.testing.assert_array_equal(got, sliding_scores(frags, pat))
 
-    @settings(max_examples=8, deadline=None)
-    @given(st.integers(0, 2**31))
-    def test_property_agrees_with_swar(self, seed):
-        rng = np.random.default_rng(seed)
-        frags = rng.integers(0, 4, (3, 90), np.uint8)
-        pat = rng.integers(0, 4, int(rng.integers(4, 40)), np.uint8)
-        a = np.asarray(ops.match_scores(frags, pat, method="swar"))
-        b = np.asarray(ops.match_scores(frags, pat, method="mxu"))
-        np.testing.assert_array_equal(a, b)
-
     def test_onehot_oracle_agrees_with_char_oracle(self):
         frags, pats = random_case(3, 50, 10, q=4, seed=5)
         a = np.asarray(kref.onehot_scores_ref(frags, pats))
@@ -120,14 +92,6 @@ class TestPopcount:
         got = np.asarray(ops.popcount(words))
         want = np.array([sum(bin(int(v)).count("1") for v in row)
                          for row in words], np.int32)
-        np.testing.assert_array_equal(got, want)
-
-    @settings(max_examples=20, deadline=None)
-    @given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64))
-    def test_property_single_words(self, vals):
-        words = np.array(vals, np.uint32)[:, None]
-        got = np.asarray(ops.popcount(words))
-        want = np.array([bin(v).count("1") for v in vals], np.int32)
         np.testing.assert_array_equal(got, want)
 
     def test_edge_values(self):

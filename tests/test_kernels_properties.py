@@ -1,0 +1,62 @@
+"""Randomized property tests for the Pallas kernels (hypothesis-driven).
+
+Split out of ``test_kernels.py`` so a missing ``hypothesis`` install skips
+only this module instead of erroring the whole suite at collection; install
+dev deps with ``pip install -r requirements-dev.txt``.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.matcher import sliding_scores  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+from test_kernels import random_case  # noqa: E402
+
+
+class TestMatchSwarProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 6), st.integers(2, 80), st.data())
+    def test_property_matches_oracle(self, r, f, data):
+        p = data.draw(st.integers(1, f))
+        seed = data.draw(st.integers(0, 2**31))
+        frags, pat = random_case(r, f, p, seed=seed)
+        got = np.asarray(ops.match_scores(frags, pat, method="swar"))
+        np.testing.assert_array_equal(got, sliding_scores(frags, pat))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_score_bounds_and_exact_hit(self, seed):
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (4, 60), np.uint8)
+        pat = rng.integers(0, 4, 12, np.uint8)
+        loc = int(rng.integers(0, 49))
+        frags[2, loc:loc + 12] = pat
+        s = np.asarray(ops.match_scores(frags, pat, method="swar"))
+        assert (s >= 0).all() and (s <= 12).all()
+        assert s[2, loc] == 12
+
+
+class TestMatchMXUProperties:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_agrees_with_swar(self, seed):
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (3, 90), np.uint8)
+        pat = rng.integers(0, 4, int(rng.integers(4, 40)), np.uint8)
+        a = np.asarray(ops.match_scores(frags, pat, method="swar"))
+        b = np.asarray(ops.match_scores(frags, pat, method="mxu"))
+        np.testing.assert_array_equal(a, b)
+
+
+class TestPopcountProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64))
+    def test_property_single_words(self, vals):
+        words = np.array(vals, np.uint32)[:, None]
+        got = np.asarray(ops.popcount(words))
+        want = np.array([bin(v).count("1") for v in vals], np.int32)
+        np.testing.assert_array_equal(got, want)

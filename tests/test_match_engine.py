@@ -1,0 +1,393 @@
+"""Match-engine subsystem tests: planner decisions, corpus residency,
+streaming reductions, sharded execution, oracle equivalence.
+
+The engine must be bit-identical to ``matcher.sliding_scores`` on every
+tested shape (acceptance criterion), and the packed corpus must never be
+host-repacked after the first query (the paper's data-residency
+discipline, asserted via the corpus pack counters).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core.matcher import sliding_scores
+from repro.match import MatchEngine, PackedCorpus, Planner
+
+
+def case(r, f, p, *, per_row=False, q=None, seed=0):
+    rng = np.random.default_rng(seed)
+    frags = rng.integers(0, 4, (r, f), np.uint8)
+    if q is not None:
+        pats = rng.integers(0, 4, (q, p), np.uint8)
+    elif per_row:
+        pats = rng.integers(0, 4, (r, p), np.uint8)
+    else:
+        pats = rng.integers(0, 4, p, np.uint8)
+    return frags, pats
+
+
+class TestPlanner:
+    def setup_method(self):
+        self.planner = Planner()
+
+    def plan(self, **kw):
+        return self.planner.plan(**kw)
+
+    def test_per_row_forces_swar(self):
+        p = self.plan(n_rows=64, fragment_chars=512, pattern_chars=100,
+                      per_row=True)
+        assert p.backend == "swar" and p.mode == "per_row"
+
+    def test_large_batch_picks_mxu(self):
+        p = self.plan(n_rows=512, fragment_chars=1024, pattern_chars=100,
+                      n_patterns=128)
+        assert p.backend == "mxu" and p.mode == "batched"
+
+    def test_shared_picks_swar(self):
+        p = self.plan(n_rows=512, fragment_chars=1024, pattern_chars=100)
+        assert p.backend == "swar" and p.mode == "shared"
+
+    def test_tiny_picks_ref(self):
+        p = self.plan(n_rows=2, fragment_chars=20, pattern_chars=8)
+        assert p.backend == "ref"
+
+    def test_explicit_override_wins(self):
+        p = self.plan(n_rows=2, fragment_chars=20, pattern_chars=8,
+                      backend="mxu")
+        assert p.backend == "mxu" and p.reason == "explicit override"
+
+    def test_mxu_per_row_rejected(self):
+        with pytest.raises(ValueError, match="per-row"):
+            self.plan(n_rows=8, fragment_chars=64, pattern_chars=16,
+                      per_row=True, backend="mxu")
+
+    def test_pattern_longer_than_fragment_rejected(self):
+        with pytest.raises(ValueError, match="longer"):
+            self.plan(n_rows=8, fragment_chars=16, pattern_chars=17)
+
+    def test_geometry_carried_on_plan(self):
+        p = self.plan(n_rows=20, fragment_chars=300, pattern_chars=100,
+                      backend="swar")
+        assert p.n_locs == 201
+        assert p.wp == 7                      # ceil(100/16)
+        assert p.need_words == (200 // 16) + 7 + 1
+        assert p.chunk_rows % 8 == 0 and p.chunk_rows <= 24
+
+    def test_chunk_rows_override_rounds_to_tile(self):
+        p = self.plan(n_rows=100, fragment_chars=300, pattern_chars=100,
+                      backend="swar", chunk_rows=20)
+        assert p.chunk_rows == 24             # rounded up to ROW_TILE
+
+
+class TestOracleEquivalence:
+    """Engine results must be bit-identical to matcher.sliding_scores."""
+
+    @pytest.mark.parametrize("r,f,p", [
+        (1, 20, 5), (3, 33, 16), (13, 70, 20),   # R not multiple of ROW_TILE
+        (8, 64, 64),                             # P == F (single alignment)
+        (5, 128, 1), (10, 300, 100), (7, 257, 31),
+    ])
+    @pytest.mark.parametrize("backend", ["swar", "mxu", "ref", None])
+    def test_shared(self, r, f, p, backend):
+        frags, pat = case(r, f, p, seed=r * f + p)
+        got = np.asarray(MatchEngine(frags).scores(pat, backend=backend))
+        np.testing.assert_array_equal(got, sliding_scores(frags, pat))
+
+    @pytest.mark.parametrize("r,f,p", [(4, 50, 10), (9, 120, 48),
+                                       (6, 40, 40)])
+    def test_per_row(self, r, f, p):
+        frags, pats = case(r, f, p, per_row=True, seed=7)
+        got = np.asarray(MatchEngine(frags).scores(pats))
+        np.testing.assert_array_equal(got, sliding_scores(frags, pats))
+
+    @pytest.mark.parametrize("r,f,p,q", [(2, 40, 8, 3), (5, 300, 100, 4),
+                                         (3, 64, 64, 2)])
+    @pytest.mark.parametrize("backend", ["swar", "mxu", "ref"])
+    def test_batched(self, r, f, p, q, backend):
+        frags, pats = case(r, f, p, q=q, seed=r + f + p + q)
+        got = np.asarray(MatchEngine(frags).scores(pats, backend=backend))
+        want = np.stack([sliding_scores(frags, pats[i]) for i in range(q)], -1)
+        np.testing.assert_array_equal(got, want)
+
+    def test_randomized_shapes(self):
+        rng = np.random.default_rng(123)
+        for _ in range(6):
+            f = int(rng.integers(4, 120))
+            p = int(rng.integers(1, f + 1))     # includes P == F
+            r = int(rng.integers(1, 20))        # includes R % ROW_TILE != 0
+            frags, pat = case(r, f, p, seed=int(rng.integers(2**31)))
+            got = np.asarray(MatchEngine(frags).scores(pat))
+            np.testing.assert_array_equal(got, sliding_scores(frags, pat))
+
+
+class TestCorpusResidency:
+    def test_packed_once_across_queries(self):
+        rng = np.random.default_rng(0)
+        frags = rng.integers(0, 4, (24, 200), np.uint8)
+        eng = MatchEngine(frags)
+        for seed in range(4):
+            pat = np.random.default_rng(seed).integers(0, 4, 50, np.uint8)
+            eng.scores(pat, backend="swar")
+        assert eng.corpus.swar_pack_count == 1
+        assert eng.corpus.host_pack_count == 1
+
+    def test_deeper_query_grows_on_device(self):
+        """A later query needing more padding zero-extends the cached device
+        array instead of repacking on the host."""
+        rng = np.random.default_rng(1)
+        frags = rng.integers(0, 4, (8, 200), np.uint8)
+        eng = MatchEngine(frags)
+        big = rng.integers(0, 4, 16, np.uint8)      # need = 13 words
+        small = rng.integers(0, 4, 5, np.uint8)     # need = 14 words
+        np.testing.assert_array_equal(
+            eng.scores(big, backend="swar"), sliding_scores(frags, big))
+        w0 = eng.corpus._swar.shape[1]
+        np.testing.assert_array_equal(
+            eng.scores(small, backend="swar"), sliding_scores(frags, small))
+        assert eng.corpus._swar.shape[1] > w0
+        assert eng.corpus.swar_pack_count == 1      # still one host pack
+
+    def test_both_forms_cached_independently(self):
+        rng = np.random.default_rng(2)
+        frags = rng.integers(0, 4, (8, 100), np.uint8)
+        pats = rng.integers(0, 4, (4, 30), np.uint8)
+        eng = MatchEngine(frags)
+        eng.scores(pats[0], backend="swar")
+        eng.scores(pats, backend="mxu")
+        eng.scores(pats, backend="mxu")
+        assert eng.corpus.swar_pack_count == 1
+        assert eng.corpus.onehot_pack_count == 1
+
+    def test_set_rows_updates_device_forms(self):
+        rng = np.random.default_rng(3)
+        frags = rng.integers(0, 4, (10, 60), np.uint8)
+        pat = rng.integers(0, 4, 12, np.uint8)
+        eng = MatchEngine(frags)
+        eng.scores(pat, backend="swar")             # pack
+        eng.scores(np.stack([pat]), backend="mxu")  # pack one-hot too
+        new_row = rng.integers(0, 4, 60, np.uint8)
+        new_row[20:32] = pat                        # plant an exact hit
+        eng.corpus.set_rows(4, new_row)
+        got = np.asarray(eng.scores(pat, backend="swar"))
+        np.testing.assert_array_equal(
+            got, sliding_scores(eng.corpus.fragments, pat))
+        assert got[4, 20] == 12
+        got_mxu = np.asarray(eng.scores(np.stack([pat]), backend="mxu"))
+        np.testing.assert_array_equal(got_mxu[:, :, 0], got)
+        assert eng.corpus.swar_pack_count == 1      # no repack on update
+        assert eng.corpus.onehot_pack_count == 1
+
+
+class TestStreamingReductions:
+    def setup_method(self):
+        rng = np.random.default_rng(11)
+        self.frags = rng.integers(0, 4, (21, 120), np.uint8)
+        self.pat = rng.integers(0, 4, 24, np.uint8)
+        self.oracle = sliding_scores(self.frags, self.pat)
+
+    def test_chunked_equals_unchunked(self):
+        eng = MatchEngine(self.frags)
+        whole = np.asarray(eng.scores(self.pat, backend="swar"))
+        res = eng.match(self.pat, backend="swar", reduction="full",
+                        chunk_rows=8)
+        assert res.n_chunks == 3
+        np.testing.assert_array_equal(res.scores, whole)
+
+    def test_best_reduction(self):
+        res = MatchEngine(self.frags).match(self.pat, backend="swar",
+                                            reduction="best", chunk_rows=8)
+        np.testing.assert_array_equal(res.best_scores, self.oracle.max(1))
+        np.testing.assert_array_equal(res.best_locs, self.oracle.argmax(1))
+        assert res.scores is None                  # never materialized
+
+    def test_topk_reduction_across_chunks(self):
+        res = MatchEngine(self.frags).match(self.pat, backend="swar",
+                                            reduction="topk", k=5,
+                                            chunk_rows=8)
+        best = self.oracle.max(1)
+        want_rows = np.argsort(-best, kind="stable")[:5]
+        np.testing.assert_array_equal(np.sort(res.topk_scores)[::-1],
+                                      res.topk_scores)
+        np.testing.assert_array_equal(np.sort(best[want_rows]),
+                                      np.sort(res.topk_scores))
+
+    def test_threshold_reduction(self):
+        thr = int(self.oracle.max()) - 1
+        res = MatchEngine(self.frags).match(self.pat, backend="swar",
+                                            reduction="threshold",
+                                            threshold=thr, chunk_rows=8)
+        want = np.argwhere(self.oracle >= thr)
+        assert res.hits.shape == (want.shape[0], 3)
+        np.testing.assert_array_equal(res.hits[:, :2], want)
+        np.testing.assert_array_equal(
+            res.hits[:, 2], self.oracle[tuple(want.T)])
+
+    def test_batched_best_reduction(self):
+        rng = np.random.default_rng(12)
+        pats = rng.integers(0, 4, (3, 24), np.uint8)
+        res = MatchEngine(self.frags).match(pats, backend="mxu",
+                                            reduction="best", chunk_rows=8)
+        want = np.stack([sliding_scores(self.frags, pats[i]).max(1)
+                         for i in range(3)], -1)
+        np.testing.assert_array_equal(res.best_scores, want)
+
+
+class TestSharded:
+    def test_one_device_mesh(self):
+        """A 1-device mesh runs the full engine path end to end."""
+        rng = np.random.default_rng(20)
+        frags = rng.integers(0, 4, (10, 64), np.uint8)
+        pat = rng.integers(0, 4, 16, np.uint8)
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        eng = MatchEngine(frags, mesh=mesh)
+        np.testing.assert_array_equal(
+            np.asarray(eng.scores(pat, backend="swar")),
+            sliding_scores(frags, pat))
+
+    def test_multi_device_shard_map(self):
+        """Rows shard over the data axis (shard_map); needs >= 2 devices
+        (run under forced host device count to exercise)."""
+        if len(jax.devices()) < 2:
+            pytest.skip("needs >= 2 devices")
+        rng = np.random.default_rng(21)
+        frags = rng.integers(0, 4, (10, 64), np.uint8)
+        pat = rng.integers(0, 4, 16, np.uint8)
+        mesh = jax.make_mesh((2,), ("data",))
+        eng = MatchEngine(frags, mesh=mesh)
+        assert eng._row_shards == 2
+        np.testing.assert_array_equal(
+            np.asarray(eng.scores(pat, backend="swar")),
+            sliding_scores(frags, pat))
+        pats = rng.integers(0, 4, (3, 16), np.uint8)
+        got = np.asarray(eng.scores(pats, backend="mxu"))
+        want = np.stack([sliding_scores(frags, pats[i]) for i in range(3)],
+                        -1)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestModeAndSubsets:
+    def test_batched_q_equals_r_via_mxu(self):
+        """Historical ops semantics: 2-D patterns on mxu are batched even
+        when Q happens to equal the corpus row count."""
+        frags, pats = case(3, 60, 12, q=3, seed=40)
+        got = np.asarray(MatchEngine(frags).scores(pats, backend="mxu"))
+        want = np.stack([sliding_scores(frags, pats[i]) for i in range(3)],
+                        -1)
+        assert got.shape == (3, 49, 3)
+        np.testing.assert_array_equal(got, want)
+
+    def test_explicit_mode_batched_on_swar(self):
+        frags, pats = case(4, 50, 10, q=4, seed=41)
+        got = np.asarray(MatchEngine(frags).scores(pats, backend="swar",
+                                                   mode="batched"))
+        want = np.stack([sliding_scores(frags, pats[i]) for i in range(4)],
+                        -1)
+        np.testing.assert_array_equal(got, want)
+
+    def test_explicit_mode_per_row_wrong_rows_rejected(self):
+        frags, _ = case(6, 50, 10, seed=42)
+        pats = np.zeros((4, 10), np.uint8)
+        with pytest.raises(ValueError, match="one row per"):
+            MatchEngine(frags).scores(pats, mode="per_row")
+
+    def test_row_subset_query(self):
+        """rows= gathers from the resident forms -- results in subset
+        order, no repacking."""
+        rng = np.random.default_rng(43)
+        frags = rng.integers(0, 4, (20, 80), np.uint8)
+        pat = rng.integers(0, 4, 16, np.uint8)
+        eng = MatchEngine(frags)
+        eng.scores(pat, backend="swar")              # pack once
+        sub = [17, 3, 11, 5, 2]
+        got = np.asarray(eng.scores(pat, backend="swar", rows=sub))
+        np.testing.assert_array_equal(got, sliding_scores(frags[sub], pat))
+        assert eng.corpus.host_pack_count == 1       # gather, not repack
+
+    def test_row_subset_per_row(self):
+        rng = np.random.default_rng(44)
+        frags = rng.integers(0, 4, (15, 60), np.uint8)
+        sub = [1, 8, 14]
+        pats = rng.integers(0, 4, (3, 12), np.uint8)
+        res = MatchEngine(frags).match(pats, backend="swar", mode="per_row",
+                                       rows=sub, reduction="best")
+        want = sliding_scores(frags[sub], pats)
+        np.testing.assert_array_equal(res.best_scores, want.max(1))
+
+    def test_row_subset_topk_reports_corpus_row_ids(self):
+        rng = np.random.default_rng(47)
+        frags = rng.integers(0, 4, (12, 60), np.uint8)
+        pat = rng.integers(0, 4, 12, np.uint8)
+        sub = [7, 2, 5, 9]
+        res = MatchEngine(frags).match(pat, backend="swar", rows=sub,
+                                       reduction="topk", k=2, chunk_rows=8)
+        best = sliding_scores(frags[sub], pat).max(1)
+        order = np.argsort(-best, kind="stable")[:2]
+        assert set(res.topk_rows.tolist()) <= set(sub)
+        np.testing.assert_array_equal(np.sort(res.topk_scores),
+                                      np.sort(best[order]))
+
+    def test_row_subset_threshold_reports_corpus_row_ids(self):
+        rng = np.random.default_rng(48)
+        frags = rng.integers(0, 4, (12, 60), np.uint8)
+        pat = rng.integers(0, 4, 12, np.uint8)
+        sub = [7, 2, 5]
+        oracle = sliding_scores(frags[sub], pat)
+        thr = int(oracle.max())
+        res = MatchEngine(frags).match(pat, backend="swar", rows=sub,
+                                       reduction="threshold", threshold=thr)
+        want = np.argwhere(oracle >= thr)
+        assert res.hits.shape[0] == want.shape[0] > 0
+        np.testing.assert_array_equal(
+            res.hits[:, 0], np.asarray(sub)[want[:, 0]])
+
+    def test_out_of_range_rows_rejected(self):
+        frags, pat = case(8, 40, 10, seed=49)
+        eng = MatchEngine(frags)
+        with pytest.raises(IndexError, match="rows must be in"):
+            eng.scores(pat, rows=[99], backend="swar")
+        with pytest.raises(IndexError, match="rows must be in"):
+            eng.scores(pat, rows=[-1])
+
+    def test_corpus_does_not_alias_caller_array(self):
+        rng = np.random.default_rng(45)
+        frags = rng.integers(0, 4, (8, 40), np.uint8)
+        keep = frags.copy()
+        eng = MatchEngine(frags)
+        eng.corpus.set_rows(0, np.ones(40, np.uint8))
+        np.testing.assert_array_equal(frags, keep)   # caller untouched
+
+
+class TestDedupLifetimeCounters:
+    def test_counters_survive_capacity_growth(self):
+        from repro.data.dedup import CRAMDedup
+        rng = np.random.default_rng(46)
+        d = CRAMDedup(threshold=1.01)                # never a duplicate
+        n = 70                                       # forces one doubling
+        kept = d.filter([rng.bytes(64) for _ in range(n)])
+        assert len(kept) == n and len(d) == n and d.capacity == 128
+        assert d.total_row_writes == n
+        # One pack per capacity generation that served queries; never per add.
+        assert 1 <= d.total_host_packs <= 2
+
+
+class TestCompatShim:
+    def test_ops_match_scores_auto(self):
+        from repro.kernels import ops
+        frags, pat = case(6, 80, 20, seed=30)
+        got = np.asarray(ops.match_scores(frags, pat))
+        np.testing.assert_array_equal(got, sliding_scores(frags, pat))
+
+    def test_corpus_from_reference_roundtrip(self):
+        from repro.core import encoding
+        rng = np.random.default_rng(31)
+        genome = encoding.random_dna(rng, 5000)
+        corpus = PackedCorpus.from_reference(genome, 500, 100)
+        pat = genome[1234:1334]
+        res = MatchEngine(corpus).match(pat, reduction="best")
+        step = 500 - 99
+        row = int(np.argmax(res.best_scores))
+        assert res.best_scores[row] == 100
+        assert row * step + res.best_locs[row] == 1234

@@ -1,7 +1,14 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skipped wholesale when ``hypothesis`` is absent (dev dep; see
+requirements-dev.txt) -- never an import error at collection.
+"""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import costmodel as cm
 from repro.core import encoding

@@ -230,6 +230,17 @@ class TestServing:
         eng.run(list(reqs))
         assert all(len(r.out) == 6 for r in reqs)
 
+    def test_engine_rejects_empty_prompt(self):
+        """A zero-length prompt has no logits to seed decoding from; the
+        engine must reject it instead of crashing on an unbound local."""
+        params = model.init_params(CFG, jax.random.PRNGKey(0))
+        eng = Engine(CFG, params, max_seq=32, n_slots=1)
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.add(Request(prompt=np.zeros(0, np.int32), max_new=4))
+        # The engine stays usable: no slot was consumed by the rejection.
+        req = Request(prompt=np.array([1, 2], np.int32), max_new=2)
+        assert eng.add(req)
+
     def test_engine_matches_generate(self):
         """Slot-based engine output == batched greedy generation."""
         params = model.init_params(CFG, jax.random.PRNGKey(0))
