@@ -11,6 +11,7 @@ Modules (one per paper table/figure + assignment deliverables):
   fig11_gates       -- Fig. 11 bulk bitwise vs Ambit/Pinatubo
   table4_apps       -- Table 4 benchmark apps
   kernel_bench      -- TPU-adapted kernel engine (beyond paper)
+  service_bench     -- multi-tenant match service coalescing (beyond paper)
   roofline          -- dry-run roofline table (assignment)
 """
 
@@ -21,7 +22,7 @@ import traceback
 MODULES = [
     "table1_gates", "fig5_throughput", "fig6_breakdown", "fig7_patlen",
     "fig8_tech", "fig9_10_nmp", "fig11_gates", "table4_apps",
-    "sec5_5_variation", "kernel_bench", "roofline",
+    "sec5_5_variation", "kernel_bench", "service_bench", "roofline",
 ]
 
 

@@ -1,0 +1,168 @@
+"""Match service throughput bench: sequential loop vs. coalesced service.
+
+The multi-tenant regime from DESIGN.md Sec. 3d: Q independent small
+shared-mode queries against one resident corpus.  The sequential baseline
+is what callers did before the service existed -- Q separate
+``MatchEngine.match`` calls, each paying planning, pattern packing, kernel
+dispatch and result assembly.  The coalesced path submits all Q to a
+``MatchService``, which fuses them into one ``mode="batched"`` launch and
+scatters per-request results back.
+
+Both paths run the SWAR kernel (``backend="swar"``): on this CPU container
+the Pallas kernels execute via the interpreter, where MXU bf16 matmuls are
+emulated and their timings are meaningless (see ``kernel_bench``); holding
+the kernel fixed makes the comparison measure exactly the service layer.
+Results are asserted bit-identical to the per-query oracles before any
+timing is reported.
+
+Emits ``BENCH_match_service.json`` at the repo root and exits nonzero if
+the record is malformed.  CI runs ``--smoke`` as a schema guard: same
+pipeline and validation on a reduced shape, without overwriting the
+committed full-run artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_match_service.json"
+
+FULL = dict(R=48, F=256, P=32, q_levels=(1, 8, 64, 256), repeats=5)
+SMOKE = dict(R=48, F=128, P=16, q_levels=(1, 8, 16), repeats=1)
+BACKEND = "swar"
+
+REQUIRED_KEYS = ("shape", "backend", "interpret", "smoke", "q_levels",
+                 "results")
+REQUIRED_RESULT_KEYS = ("Q", "seq_s", "svc_s", "seq_qps", "svc_qps",
+                        "speedup", "identical", "coalesced_launches")
+
+
+def bench_level(eng, Q: int, P: int, rng, repeats: int) -> dict:
+    from repro.match import MatchService
+
+    pats = rng.integers(0, 4, (Q, P), np.uint8)
+    warm = rng.integers(0, 4, (Q, P), np.uint8)
+    # Warm both paths at the exact shapes to be timed (jit compile cache).
+    for p in warm[: min(2, Q)]:
+        eng.match(p, backend=BACKEND)
+    if Q > 1:
+        eng.match(warm, mode="batched", backend=BACKEND)
+
+    t_seq = t_svc = float("inf")
+    oracle = tickets = svc = None
+    # Best-of-N per path: this container's CPU timings are noisy; the
+    # minimum is the least-contended observation of the same work.
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        oracle = [eng.match(p, backend=BACKEND) for p in pats]
+        t_seq = min(t_seq, time.perf_counter() - t0)
+
+        svc = MatchService(eng)      # fresh: no result-cache crossover
+        t0 = time.perf_counter()
+        tickets = [svc.submit(p, backend=BACKEND) for p in pats]
+        svc.flush()
+        t_svc = min(t_svc, time.perf_counter() - t0)
+
+    identical = all(
+        np.array_equal(t.result.best_scores, o.best_scores)
+        and np.array_equal(t.result.best_locs, o.best_locs)
+        for t, o in zip(tickets, oracle))
+    return {
+        "Q": Q,
+        "seq_s": round(t_seq, 4),
+        "svc_s": round(t_svc, 4),
+        "seq_qps": round(Q / t_seq, 1),
+        "svc_qps": round(Q / t_svc, 1),
+        "speedup": round(t_seq / t_svc, 2),
+        "identical": bool(identical),
+        "coalesced_launches": svc.stats.n_coalesced_launches,
+        "service_stats": svc.stats.snapshot(),
+    }
+
+
+def validate(record: dict) -> None:
+    """Schema guard: fail loudly if the BENCH artifact is malformed."""
+    for key in REQUIRED_KEYS:
+        if key not in record:
+            raise ValueError(f"BENCH record missing key {key!r}")
+    if not record["results"]:
+        raise ValueError("BENCH record has no results")
+    for row in record["results"]:
+        for key in REQUIRED_RESULT_KEYS:
+            if key not in row:
+                raise ValueError(f"result row missing key {key!r}: {row}")
+        if not row["identical"]:
+            raise ValueError(f"Q={row['Q']}: service results diverged from "
+                             "per-query oracles")
+        if row["seq_qps"] <= 0 or row["svc_qps"] <= 0:
+            raise ValueError(f"Q={row['Q']}: non-positive throughput")
+    json.loads(json.dumps(record))      # round-trips as JSON
+
+
+def run_bench(smoke: bool) -> dict:
+    from repro.match import MatchEngine
+
+    cfg = SMOKE if smoke else FULL
+    R, F, P = cfg["R"], cfg["F"], cfg["P"]
+    rng = np.random.default_rng(7)
+    eng = MatchEngine(rng.integers(0, 4, (R, F), np.uint8))
+    results = [bench_level(eng, Q, P, rng, cfg["repeats"])
+               for Q in cfg["q_levels"]]
+    record = {
+        "shape": {"R": R, "F": F, "P": P},
+        "backend": BACKEND,
+        "interpret": eng.interpret,
+        "smoke": smoke,
+        "q_levels": list(cfg["q_levels"]),
+        "results": results,
+    }
+    validate(record)
+    if not smoke:
+        # Smoke mode (the CI schema guard) must not clobber the committed
+        # full-run artifact with reduced Q levels.
+        BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    return record
+
+
+def run(smoke: bool = False):
+    """``benchmarks.run`` driver hook: (name, us_per_call, derived) rows."""
+    record = run_bench(smoke)
+    return [
+        (f"service/coalesced_Q{row['Q']}",
+         round(row["svc_s"] / row["Q"] * 1e6, 1),
+         f"svc_qps={row['svc_qps']} seq_qps={row['seq_qps']} "
+         f"speedup={row['speedup']}x identical={row['identical']}")
+        for row in record["results"]
+    ]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus + reduced Q levels (CI schema guard)")
+    args = ap.parse_args()
+    try:
+        record = run_bench(args.smoke)
+    except ValueError as e:
+        print(f"BENCH validation failed: {e}", file=sys.stderr)
+        return 1
+    for row in record["results"]:
+        print(f"Q={row['Q']:>4}  seq={row['seq_qps']:>8.1f} qps  "
+              f"svc={row['svc_qps']:>8.1f} qps  "
+              f"speedup={row['speedup']:.2f}x  identical={row['identical']}")
+    if args.smoke:
+        print("smoke: record validated, artifact not written")
+    else:
+        print(f"wrote {BENCH_JSON}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

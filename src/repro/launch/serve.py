@@ -4,6 +4,11 @@
 randomly initialized reduced model, runs a batch of synthetic requests
 through the continuous-batching engine, and reports decode throughput +
 n-gram speculator acceptance (the paper's matcher in the serving plane).
+
+``--workload match`` serves synthetic string-match traffic instead: many
+small shared-mode queries through a ``MatchService`` over one resident
+corpus (micro-batched multi-tenant execution, DESIGN.md Sec. 3d), and
+reports coalescing + cache stats alongside QPS.
 """
 
 from __future__ import annotations
@@ -20,8 +25,33 @@ from repro.serving.engine import Engine, Request
 from repro.serving.ngram_cache import NgramSpeculator, verify
 
 
+def run_match_service(args) -> None:
+    """Synthetic multi-tenant match traffic through one MatchService."""
+    from repro.match import MatchEngine, MatchService
+
+    rng = np.random.default_rng(0)
+    frags = rng.integers(0, 4, (args.corpus_rows, args.fragment_chars),
+                         np.uint8)
+    svc = MatchService(MatchEngine(frags))
+    pats = rng.integers(0, 4, (args.requests, args.pattern_chars), np.uint8)
+    t0 = time.perf_counter()
+    tickets = [svc.submit(p) for p in pats]
+    svc.flush()
+    dt = time.perf_counter() - t0
+    assert all(t.done for t in tickets)
+    stats = svc.stats.snapshot()
+    print(f"served {len(tickets)} match queries in {dt:.2f}s "
+          f"({len(tickets)/dt:.1f} qps)")
+    print(f"launches={stats['n_launches']} "
+          f"coalesced={stats['n_coalesced_launches']} "
+          f"(fused {stats['n_coalesced_queries']} queries) "
+          f"cache_hits={stats['n_cache_hits']} "
+          f"avg_latency={stats['avg_latency_s']*1e3:.1f}ms")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "match"), default="lm")
     ap.add_argument("--arch", choices=list(ARCHS), default="llama3.2-1b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=6)
@@ -29,7 +59,17 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--corpus-rows", type=int, default=64,
+                    help="match workload: resident corpus rows")
+    ap.add_argument("--fragment-chars", type=int, default=256,
+                    help="match workload: fragment length")
+    ap.add_argument("--pattern-chars", type=int, default=32,
+                    help="match workload: query pattern length")
     args = ap.parse_args()
+
+    if args.workload == "match":
+        run_match_service(args)
+        return
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = model.init_params(cfg, jax.random.PRNGKey(0))

@@ -9,14 +9,21 @@ The single entry point for all string-matching workloads:
   mxu / ref) + all tile/pad geometry for one query.
 * ``MatchEngine`` / ``MatchResult`` -- sharded streaming executor with
   fused best / top-k / threshold reductions per row-chunk.
+* ``MatchService`` -- micro-batched multi-tenant front end: queues
+  concurrent queries, coalesces compatible ones into fused batched
+  launches (priced by ``Planner.plan_batch``), caches results (LRU,
+  invalidated on corpus generation change).
 
 ``repro.kernels.ops.match_scores`` is the thin one-shot compat shim over
 this package; long-lived consumers (dedup, serving-scale workloads) hold a
-``MatchEngine`` so the corpus stays resident between queries.
+``MatchEngine`` so the corpus stays resident between queries; multi-tenant
+traffic goes through a ``MatchService``.
 """
 
 from .corpus import PackedCorpus
 from .engine import MatchEngine, MatchResult
-from .planner import Plan, Planner
+from .planner import BatchPlan, Plan, Planner
+from .service import MatchService, MatchTicket, ServiceStats
 
-__all__ = ["PackedCorpus", "Planner", "Plan", "MatchEngine", "MatchResult"]
+__all__ = ["PackedCorpus", "Planner", "Plan", "BatchPlan", "MatchEngine",
+           "MatchResult", "MatchService", "MatchTicket", "ServiceStats"]

@@ -72,6 +72,10 @@ class PackedCorpus:
         self.onehot_pack_count = 0
         # Incremental row writes (device splice, not a repack).
         self.row_update_count = 0
+        # Content generation: bumped on every mutation (set_rows /
+        # invalidate).  Result caches keyed on it (match.service) drop
+        # entries computed against older corpus contents.
+        self.generation = 0
 
     # -- geometry ------------------------------------------------------------
     @property
@@ -187,8 +191,10 @@ class PackedCorpus:
             self._onehot = self._onehot.at[start:start + n, :].set(
                 jnp.asarray(oh, jnp.bfloat16))
         self.row_update_count += n
+        self.generation += 1
 
     def invalidate(self) -> None:
         """Drop cached device forms (next query repacks)."""
         self._swar = None
         self._onehot = None
+        self.generation += 1

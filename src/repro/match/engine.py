@@ -91,6 +91,13 @@ class MatchEngine:
                  planner: Optional[Planner] = None,
                  interpret: Optional[bool] = None,
                  mesh: Optional[Mesh] = None, rules=None):
+        n_corpus_rows = (corpus.n_rows if isinstance(corpus, PackedCorpus)
+                         else np.asarray(corpus).shape[0])
+        if n_corpus_rows < 1:
+            # Fail at construction, not deep inside the planner on the
+            # first query ("corpus has no rows" with no context).
+            raise ValueError("MatchEngine needs a non-empty corpus: got 0 "
+                             "fragment rows")
         self.mesh = mesh
         self.rules = rules
         self._row_shards = 1
@@ -219,12 +226,16 @@ class MatchEngine:
                                           rows.shape[1]), jnp.uint32)], 0)
                 return self._swar_chunk(words, rows, mask, plan)
             if plan.mode == "batched":
-                outs = []
-                for q in range(plan.n_patterns):
-                    pw = jnp.broadcast_to(jnp.asarray(pat_words[q])[None, :],
-                                          (words.shape[0], plan.wp))
-                    outs.append(self._swar_chunk(words, pw, mask, plan))
-                return jnp.stack(outs, -1)
+                # Fused batched launch: tile the chunk Q times and ride
+                # each pattern as a per-row pattern -- one kernel dispatch
+                # for all Q queries (the lock-step multi-pattern search of
+                # the paper's Sec. 3.4) instead of a Q-pass Python loop.
+                Q = plan.n_patterns
+                Rc = words.shape[0]
+                words_t = jnp.tile(words, (Q, 1))
+                pw_t = jnp.repeat(jnp.asarray(pat_words), Rc, axis=0)
+                out = self._swar_chunk(words_t, pw_t, mask, plan)
+                return out.reshape(Q, Rc, plan.n_locs).transpose(1, 2, 0)
             pw = jnp.broadcast_to(jnp.asarray(pat_words[0])[None, :],
                                   (words.shape[0], plan.wp))
             return self._swar_chunk(words, pw, mask, plan)
@@ -237,11 +248,49 @@ class MatchEngine:
                            ).astype(jnp.int32)
         return scores[:, :, 0] if plan.mode != "batched" else scores
 
+    # -- empty subsets --------------------------------------------------------
+    def _empty_result(self, patterns: np.ndarray, mode: Optional[str],
+                      reduction: str) -> MatchResult:
+        """Well-formed all-empty MatchResult for a zero-row subset query.
+
+        The planner (rightly) refuses zero-row workloads and the streaming
+        loop would otherwise ``np.concatenate`` empty chunk lists; an empty
+        subset is a legal query whose answer is simply no rows.
+        """
+        P = int(patterns.shape[-1])
+        F = self.corpus.fragment_chars
+        if P < 1:
+            raise ValueError("pattern must have at least one character")
+        L = F - P + 1
+        if L <= 0:
+            raise ValueError("pattern longer than fragment")
+        if patterns.ndim == 1:
+            mode_r, Q = "shared", 1
+        else:
+            mode_r = mode if mode is not None else "batched"
+            Q = int(patterns.shape[0])
+        batched = mode_r == "batched"
+        plan = Plan(backend="ref", mode=mode_r, n_rows=0, fragment_chars=F,
+                    pattern_chars=P, n_patterns=Q if batched else 1,
+                    n_locs=L, chunk_rows=0, reason="empty row subset")
+        shape0 = (0, Q) if batched else (0,)
+        res = MatchResult(plan=plan,
+                          best_locs=np.zeros(shape0, np.int32),
+                          best_scores=np.zeros(shape0, np.int32))
+        if reduction == "full":
+            res.scores = np.zeros((0, L, Q) if batched else (0, L), np.int32)
+        elif reduction == "topk":
+            res.topk_rows = np.zeros(shape0, np.int32)
+            res.topk_scores = np.zeros(shape0, np.int32)
+        elif reduction == "threshold":
+            res.hits = np.zeros((0, 4 if batched else 3), np.int64)
+        return res
+
     # -- execution ------------------------------------------------------------
     def match(self, patterns: np.ndarray, *, backend: Optional[str] = None,
               mode: Optional[str] = None, rows: Optional[np.ndarray] = None,
-              reduction: str = "best", k: int = 10,
-              threshold: Optional[float] = None,
+              reduction: str = "best", k=10,
+              threshold=None,
               chunk_rows: Optional[int] = None) -> MatchResult:
         """Run one query; see module docstring for reductions.
 
@@ -249,16 +298,42 @@ class MatchEngine:
         ``mode`` disambiguates 2-D patterns ("per_row" / "batched") when the
         shape alone is ambiguous.  ``rows`` restricts the query to a subset
         of corpus rows (device gather from the resident forms; results are
-        in subset order).  ``threshold`` is in characters (absolute score).
+        in subset order; an empty subset yields an all-empty result).
+        ``threshold`` is in characters (absolute score).  In batched mode
+        ``k`` and ``threshold`` may be per-query sequences of length Q (the
+        top-k merge runs at max(k); slice ``topk_rows[:k_q, q]`` per query).
         """
         if reduction not in ("best", "topk", "threshold", "full"):
             raise ValueError(f"unknown reduction {reduction!r}")
         if reduction == "threshold" and threshold is None:
             raise ValueError("reduction='threshold' requires a threshold")
         patterns = np.asarray(patterns, np.uint8)
+        sel = (np.asarray(rows, np.int64).reshape(-1) if rows is not None
+               else None)
+        if sel is not None and sel.size == 0:
+            return self._empty_result(patterns, mode, reduction)
         plan = self.plan(patterns, backend=backend, mode=mode, rows=rows,
                          chunk_rows=chunk_rows)
         pats2d = patterns if patterns.ndim == 2 else patterns[None, :]
+
+        # Per-query reduction parameters (batched runs only).
+        k_vec = np.atleast_1d(np.asarray(k, np.int64))
+        if k_vec.size != 1 and (plan.mode != "batched"
+                                or k_vec.size != plan.n_patterns):
+            raise ValueError("per-query k needs a batched query with one "
+                             "entry per pattern")
+        k_eff = int(k_vec.max())
+        thr_vec = None
+        if reduction == "threshold":
+            thr_vec = np.asarray(threshold, np.float64).reshape(-1)
+            if plan.mode == "batched":
+                if thr_vec.size == 1:
+                    thr_vec = np.full(plan.n_patterns, thr_vec[0])
+                elif thr_vec.size != plan.n_patterns:
+                    raise ValueError("per-query thresholds need one entry "
+                                     "per pattern")
+            elif thr_vec.size != 1:
+                raise ValueError("per-query thresholds need a batched query")
 
         if plan.backend == "swar":
             packed = _pack_pattern_swar(pats2d, plan.wp)
@@ -269,10 +344,8 @@ class MatchEngine:
         else:
             packed = None
 
-        if rows is not None:
-            sel = np.asarray(rows, np.int64).reshape(-1)
-            if sel.size and (sel.min() < 0 or
-                             sel.max() >= self.corpus.n_rows):
+        if sel is not None:
+            if sel.min() < 0 or sel.max() >= self.corpus.n_rows:
                 # jnp gathers clamp out-of-range indices silently; fail
                 # loudly instead of returning the wrong rows' scores.
                 raise IndexError(
@@ -321,7 +394,10 @@ class MatchEngine:
             # that means mapping chunk positions through the selection.
             if reduction == "threshold":
                 sc = np.asarray(scores)
-                local = np.argwhere(sc >= threshold)
+                if plan.mode == "batched":
+                    local = np.argwhere(sc >= thr_vec[None, None, :])
+                else:
+                    local = np.argwhere(sc >= float(thr_vec[0]))
                 if local.size:
                     vals = sc[tuple(local.T)]
                     if rows is not None:
@@ -342,7 +418,7 @@ class MatchEngine:
                     [run_scores, bs], 0)
                 cat_r = chunk_rows_ids if run_rows is None else \
                     jnp.concatenate([run_rows, chunk_rows_ids], 0)
-                kk = min(k, cat_s.shape[0])
+                kk = min(k_eff, cat_s.shape[0])
                 top_s, top_i = jax.lax.top_k(cat_s.T if cat_s.ndim == 2
                                              else cat_s, kk)
                 if cat_s.ndim == 2:

@@ -6,7 +6,8 @@ with a selection driven by the same roofline arithmetic the benchmarks use
 kernel's compute and memory terms against the ``core.tech.TPU_V5E``
 constants, take ``max`` per kernel, pick the minimum.  Structural
 constraints are applied first (the MXU formulation has no per-row-pattern
-path; a batched query on the SWAR kernel costs Q dispatches), and an
+path; a batched query on the SWAR kernel re-reads the corpus per pattern,
+where the MXU amortizes the reference read across patterns), and an
 explicit ``backend=`` override always wins.
 
 The ``Plan`` carries every derived geometry number (word counts, tile
@@ -25,15 +26,23 @@ from repro.kernels import match_swar as _swar
 
 BACKENDS = ("swar", "mxu", "ref")
 
-# Per-kernel-dispatch overhead charged to multi-pass plans (host launch +
-# program switch); calibrated order-of-magnitude, only has to be large
-# enough that Q-pass SWAR loses to one batched MXU pass at real Q.
+# Per-kernel-dispatch overhead (host launch + program switch); calibrated
+# order-of-magnitude.  Every fused plan pays it once; Q sequential
+# single-query launches (plan_batch's alternative) pay it Q times.
 DISPATCH_OVERHEAD_S = 5e-6
-# Below this many (row, loc, patchar) ops the Pallas launch dominates and
-# the plain jnp reference is fastest.
+# Below this many (row, loc, patchar, query) ops the Pallas launch
+# dominates and the plain jnp reference is fastest.
 TINY_OPS = 4096
 # SWAR integer ops per (row, loc, word): shift/or/xor/and + popcount tree.
 SWAR_OPS_PER_WORD = 12
+# The SWAR kernel runs on the VPU, whose integer throughput is a small
+# fraction of MXU bf16 peak (8x128 lanes vs. the systolic array); this
+# divisor calibrates swar compute against ``peak_bf16_flops``.
+VPU_SLOWDOWN = 64
+# Host jnp reference throughput + per-call overhead: only has to rank the
+# ref backend sanely against the kernels when pricing batches.
+REF_OPS_PER_S = 1e9
+REF_CALL_OVERHEAD_S = 5e-5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +84,23 @@ def _mxu_geometry(P: int, L: int, Q: int) -> tuple[int, int, int, int]:
     return l_pad, p_chars, q_pad, l_pad + p_chars
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Pricing verdict for Q compatible shared-mode queries (one tick).
+
+    ``coalesced`` means one fused ``mode="batched"`` launch beats Q
+    sequential single-query launches; ``plan`` is the plan to execute
+    (batched geometry when coalesced, single-query geometry otherwise).
+    """
+
+    coalesced: bool
+    plan: Plan
+    n_queries: int
+    est_coalesced_s: float
+    est_sequential_s: float
+    reason: str
+
+
 class Planner:
     """Roofline-based kernel selection against a TPU target."""
 
@@ -85,13 +111,24 @@ class Planner:
 
     # -- cost terms -----------------------------------------------------------
     def swar_seconds(self, R: int, L: int, P: int, Q: int = 1) -> float:
-        """Q sequential SWAR passes (the kernel scores one pattern set)."""
+        """One fused SWAR dispatch over Q pattern sets.
+
+        The executor tiles the corpus chunk Q times and rides each pattern
+        as a per-row pattern, so a batched query is a single launch whose
+        compute and memory (the corpus is re-read per pattern) scale with
+        Q -- where the MXU formulation amortizes the reference read across
+        patterns instead.
+        """
         wp, need = _swar_geometry(P, L)
-        ops = R * L * wp * SWAR_OPS_PER_WORD
-        bytes_hbm = R * need * 4 + R * wp * 4 + R * L * 4
-        t_compute = ops / (self.roofline.peak_bf16_flops / 2)
+        ops = Q * R * L * wp * SWAR_OPS_PER_WORD
+        bytes_hbm = Q * (R * need * 4 + R * wp * 4 + R * L * 4)
+        t_compute = ops / (self.roofline.peak_bf16_flops / VPU_SLOWDOWN)
         t_mem = bytes_hbm / self.roofline.hbm_bw
-        return Q * (max(t_compute, t_mem) + DISPATCH_OVERHEAD_S)
+        return max(t_compute, t_mem) + DISPATCH_OVERHEAD_S
+
+    def ref_seconds(self, R: int, L: int, P: int, Q: int = 1) -> float:
+        """Q jnp reference passes on the host (batched ref still loops Q)."""
+        return Q * (R * L * P / REF_OPS_PER_S + REF_CALL_OVERHEAD_S)
 
     def mxu_seconds(self, R: int, L: int, P: int, Q: int = 1) -> float:
         """One batched MXU pass over all Q patterns."""
@@ -144,7 +181,10 @@ class Planner:
             chosen, reason = backend, "explicit override"
         elif per_row:
             chosen, reason = "swar", "per-row patterns: SWAR only"
-        elif R * L * P <= TINY_OPS:
+        elif R * L * P * Q <= TINY_OPS:
+            # Q multiplies the work: a large batched query on a small corpus
+            # is not tiny, and routing it to the Python-loop ref backend
+            # would cost Q sequential passes.
             chosen, reason = "ref", "tiny workload: launch overhead dominates"
         elif t_mxu < t_swar:
             chosen = "mxu"
@@ -158,7 +198,9 @@ class Planner:
         R_pad = -(-R // _swar.ROW_TILE) * _swar.ROW_TILE
 
         if chosen == "swar":
-            bytes_per_row = need * 4 + wp * 4 + L * 4
+            # Batched swar tiles each chunk Q times (one fused launch), so
+            # a chunk's footprint scales with Q.
+            bytes_per_row = (need * 4 + wp * 4 + L * 4) * Q
             row_tile = _swar.ROW_TILE
             est = t_swar
         elif chosen == "mxu":
@@ -168,7 +210,7 @@ class Planner:
         else:
             bytes_per_row = F + L * 4 * Q
             row_tile = 1
-            est = 0.0
+            est = self.ref_seconds(R, L, P, Q)
         chunk = self._chunk_rows(R_pad, bytes_per_row, row_tile, chunk_rows)
 
         return Plan(backend=chosen, mode=mode, n_rows=R, fragment_chars=F,
@@ -176,3 +218,46 @@ class Planner:
                     need_words=need, l_pad=l_pad, p_chars_pad=p_chars,
                     q_pad=q_pad, f_chars=f_chars, chunk_rows=chunk,
                     est_seconds=est, reason=reason)
+
+    # -- batch pricing --------------------------------------------------------
+    def plan_batch(self, *, n_rows: int, fragment_chars: int,
+                   pattern_chars: int, n_queries: int,
+                   backend: Optional[str] = None,
+                   chunk_rows: Optional[int] = None) -> BatchPlan:
+        """Price Q compatible shared-mode queries: coalesced vs. sequential.
+
+        Sequential is Q independent single-pattern launches (each paying
+        its own dispatch); coalesced is one ``mode="batched"`` plan over
+        all Q patterns (a single fused launch on every backend).  Ties go
+        to coalesced: beyond the kernel cost, one launch amortizes
+        planning, host packing and result assembly, which the roofline
+        does not model.
+        """
+        if n_queries < 1:
+            raise ValueError("n_queries must be >= 1")
+        single = self.plan(n_rows=n_rows, fragment_chars=fragment_chars,
+                           pattern_chars=pattern_chars, backend=backend,
+                           chunk_rows=chunk_rows)
+        if n_queries == 1:
+            return BatchPlan(coalesced=False, plan=single, n_queries=1,
+                             est_coalesced_s=single.est_seconds,
+                             est_sequential_s=single.est_seconds,
+                             reason="single query: nothing to coalesce")
+        batched = self.plan(n_rows=n_rows, fragment_chars=fragment_chars,
+                            pattern_chars=pattern_chars,
+                            n_patterns=n_queries, backend=backend,
+                            chunk_rows=chunk_rows)
+        est_seq = n_queries * single.est_seconds
+        est_co = batched.est_seconds
+        coalesced = est_co <= est_seq
+        if coalesced:
+            reason = (f"coalesce {n_queries} queries: {batched.backend} "
+                      f"{est_co:.3g}s <= {n_queries}x {single.backend} "
+                      f"{est_seq:.3g}s")
+        else:
+            reason = (f"sequential: {n_queries}x {single.backend} "
+                      f"{est_seq:.3g}s < {batched.backend} {est_co:.3g}s")
+        return BatchPlan(coalesced=coalesced,
+                         plan=batched if coalesced else single,
+                         n_queries=n_queries, est_coalesced_s=est_co,
+                         est_sequential_s=est_seq, reason=reason)

@@ -1,0 +1,367 @@
+"""Multi-tenant match query service (DESIGN.md Sec. 3d).
+
+``MatchService`` fronts a shared ``MatchEngine`` for many concurrent
+callers.  Each caller's query is tiny; what kills throughput at scale is
+that every one of them pays a full kernel dispatch -- exactly the
+launch-overhead regime the planner's roofline flags as worst.  The paper's
+substrate amortizes this by searching many patterns against the resident
+reference in lock step (Sec. 3.4); the service is the TPU analogue:
+
+* **Queue + tick.**  ``submit`` enqueues a request and returns a
+  ``MatchTicket``; ``tick`` drains the queue once.  The service is
+  cooperative (no threads): callers drive it via ``tick`` / ``flush`` /
+  ``MatchTicket.wait``.
+* **Coalescing.**  Pending shared-mode queries that are compatible -- same
+  corpus generation (always true within one tick), same pattern length,
+  same reduction, same row subset (by content), same backend override --
+  are grouped,
+  priced by ``Planner.plan_batch`` (one fused ``mode="batched"`` launch
+  vs. Q sequential launches), and executed the cheaper way.  Per-request
+  results are scattered back from the batched tensors, bit-identical to
+  what Q separate ``MatchEngine.match`` calls would return.
+* **Result cache.**  An LRU keyed by (pattern bytes, reduction,
+  rows-subset bytes, k, threshold, backend).  The cache is dropped whenever
+  ``PackedCorpus.generation`` changes (``set_rows`` / ``invalidate``), so
+  a row write never serves stale scores.
+* **Stats.**  Per-request latency plus launch/coalescing/cache counters;
+  ``ServiceStats.snapshot()`` is what the service benchmark and the
+  launcher report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .engine import MatchEngine, MatchResult
+from .planner import BatchPlan
+
+REDUCTIONS = ("best", "topk", "threshold", "full")
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Counters + latency record for one service instance."""
+
+    n_submitted: int = 0
+    n_completed: int = 0
+    n_cache_hits: int = 0
+    n_launches: int = 0               # engine.match calls issued
+    n_coalesced_launches: int = 0     # launches that fused >= 2 queries
+    n_coalesced_queries: int = 0      # queries served by fused launches
+    n_sequential_fallback: int = 0    # grouped queries the pricing split up
+    n_failed: int = 0                 # requests completed with an error
+    total_latency_s: float = 0.0      # running sum (bounded state)
+    _t_first_submit: Optional[float] = None
+    _t_last_complete: Optional[float] = None
+
+    @property
+    def avg_latency_s(self) -> float:
+        return (self.total_latency_s / self.n_completed
+                if self.n_completed else 0.0)
+
+    @property
+    def qps(self) -> float:
+        """Completed queries per second of wall time, submit to done."""
+        if (self._t_first_submit is None or self._t_last_complete is None
+                or self._t_last_complete <= self._t_first_submit):
+            return 0.0
+        return self.n_completed / (self._t_last_complete
+                                   - self._t_first_submit)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "n_submitted": self.n_submitted,
+            "n_completed": self.n_completed,
+            "n_cache_hits": self.n_cache_hits,
+            "n_launches": self.n_launches,
+            "n_coalesced_launches": self.n_coalesced_launches,
+            "n_coalesced_queries": self.n_coalesced_queries,
+            "n_sequential_fallback": self.n_sequential_fallback,
+            "n_failed": self.n_failed,
+            "avg_latency_s": round(self.avg_latency_s, 6),
+            "qps": round(self.qps, 1),
+        }
+
+
+class MatchTicket:
+    """Handle for one submitted query; fill by driving ``service.tick``.
+
+    A request that fails at execution time (e.g. a pattern longer than the
+    fragment) completes with ``error`` set instead of poisoning the tick
+    for unrelated tenants; ``wait`` re-raises it for this caller only.
+    """
+
+    __slots__ = ("_service", "done", "result", "cached", "latency_s",
+                 "error")
+
+    def __init__(self, service: "MatchService"):
+        self._service = service
+        self.done = False
+        self.result: Optional[MatchResult] = None
+        self.cached = False
+        self.latency_s: Optional[float] = None
+        self.error: Optional[Exception] = None
+
+    def wait(self, max_ticks: int = 1024) -> MatchResult:
+        """Drive the service until this ticket completes."""
+        ticks = 0
+        while not self.done:
+            if ticks >= max_ticks:
+                raise RuntimeError("ticket did not complete "
+                                   f"within {max_ticks} ticks")
+            self._service.tick()
+            ticks += 1
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: MatchTicket
+    patterns: np.ndarray
+    reduction: str
+    k: Tuple[int, ...]                 # normalized; len 1 unless per-query
+    threshold: Optional[Tuple[float, ...]]
+    rows: Optional[np.ndarray]
+    backend: Optional[str]
+    mode: Optional[str]
+    t_submit: float
+    cache_key: Tuple
+    group_key: Optional[Tuple]         # None -> not coalescible
+
+
+class MatchService:
+    """Micro-batched multi-tenant front end over one shared ``MatchEngine``.
+
+    Single-threaded by design: ``submit`` never blocks, ``tick`` does all
+    the work.  Results handed out (and cached) are shared arrays -- treat
+    them as read-only.
+    """
+
+    def __init__(self, engine: MatchEngine, *, cache_size: int = 256):
+        self.engine = engine
+        self.cache_size = int(cache_size)
+        self.stats = ServiceStats()
+        self._queue: List[_Pending] = []
+        self._cache: "OrderedDict[Tuple, MatchResult]" = OrderedDict()
+        self._cache_generation = engine.corpus.generation
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, patterns: np.ndarray, *, reduction: str = "best",
+               k=10, threshold=None, rows: Optional[np.ndarray] = None,
+               backend: Optional[str] = None,
+               mode: Optional[str] = None) -> MatchTicket:
+        """Enqueue one query; returns a ticket (drive ``tick`` to fill it).
+
+        Same query surface as ``MatchEngine.match``.  Only 1-D shared-mode
+        patterns coalesce; 2-D (per-row / batched) queries pass through as
+        singleton launches.
+        """
+        if reduction not in REDUCTIONS:
+            raise ValueError(f"unknown reduction {reduction!r}")
+        if reduction == "threshold" and threshold is None:
+            raise ValueError("reduction='threshold' requires a threshold")
+        patterns = np.asarray(patterns, np.uint8)
+        if patterns.ndim not in (1, 2):
+            raise ValueError("patterns must be 1-D (shared) or 2-D")
+        if patterns.ndim == 1 and mode == "shared":
+            mode = None                # explicit "shared" == the default
+        k_norm = tuple(int(x) for x in np.atleast_1d(np.asarray(k)))
+        thr_norm = (tuple(float(x) for x in
+                          np.atleast_1d(np.asarray(threshold, np.float64)))
+                    if threshold is not None else None)
+        sel = (np.asarray(rows, np.int64).reshape(-1) if rows is not None
+               else None)
+        # Keyed by the subset bytes themselves, like the pattern bytes: a
+        # hash collision here would silently coalesce or cache-serve the
+        # wrong rows' scores.
+        rows_key = sel.tobytes() if sel is not None else None
+        cache_key = (patterns.tobytes(), patterns.shape, reduction,
+                     rows_key, k_norm if reduction == "topk" else None,
+                     thr_norm, backend, mode)
+        coalescible = (patterns.ndim == 1 and mode is None
+                       and len(k_norm) == 1
+                       and (thr_norm is None or len(thr_norm) == 1))
+        group_key = ((patterns.shape[-1], reduction, rows_key, backend)
+                     if coalescible else None)
+        ticket = MatchTicket(self)
+        now = time.perf_counter()
+        pend = _Pending(ticket=ticket, patterns=patterns,
+                        reduction=reduction, k=k_norm, threshold=thr_norm,
+                        rows=sel, backend=backend, mode=mode, t_submit=now,
+                        cache_key=cache_key, group_key=group_key)
+        self._queue.append(pend)
+        self.stats.n_submitted += 1
+        if self.stats._t_first_submit is None:
+            self.stats._t_first_submit = now
+        return ticket
+
+    def match(self, patterns: np.ndarray, **kw) -> MatchResult:
+        """Blocking convenience: submit + tick until done."""
+        return self.submit(patterns, **kw).wait()
+
+    def flush(self, max_ticks: int = 1024) -> None:
+        """Tick until the queue drains."""
+        ticks = 0
+        while self._queue:
+            if ticks >= max_ticks:
+                raise RuntimeError("queue did not drain")
+            self.tick()
+            ticks += 1
+
+    # -- cache ----------------------------------------------------------------
+    def _cache_get(self, key: Tuple) -> Optional[MatchResult]:
+        res = self._cache.get(key)
+        if res is not None:
+            self._cache.move_to_end(key)
+        return res
+
+    def _cache_put(self, key: Tuple, res: MatchResult) -> None:
+        self._cache[key] = res
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    # -- completion -----------------------------------------------------------
+    def _complete(self, pend: _Pending, res: Optional[MatchResult],
+                  cached: bool, error: Optional[Exception] = None) -> None:
+        t = pend.ticket
+        t.result = res
+        t.cached = cached
+        t.error = error
+        t.done = True
+        now = time.perf_counter()
+        t.latency_s = now - pend.t_submit
+        self.stats.total_latency_s += t.latency_s
+        self.stats.n_completed += 1
+        self.stats.n_cache_hits += int(cached)
+        self.stats.n_failed += int(error is not None)
+        self.stats._t_last_complete = now
+
+    # -- execution ------------------------------------------------------------
+    def _run_single(self, pend: _Pending) -> MatchResult:
+        kw = dict(reduction=pend.reduction, backend=pend.backend,
+                  mode=pend.mode, rows=pend.rows)
+        if pend.reduction == "topk":
+            kw["k"] = pend.k if len(pend.k) > 1 else pend.k[0]
+        if pend.threshold is not None:
+            kw["threshold"] = (pend.threshold if len(pend.threshold) > 1
+                               else pend.threshold[0])
+        self.stats.n_launches += 1
+        return self.engine.match(pend.patterns, **kw)
+
+    def _scatter(self, res: MatchResult, q: int, n_q: int,
+                 k_q: int) -> MatchResult:
+        """Per-query view of one fused batched result (column ``q``).
+
+        Bit-identical to the single shared-mode query: the batched kernels
+        score each pattern column independently, so slicing column ``q``
+        out of the (R, ..., Q) tensors reproduces the solo run exactly.
+        """
+        out = MatchResult(plan=res.plan,
+                          best_locs=np.ascontiguousarray(
+                              res.best_locs[:, q]),
+                          best_scores=np.ascontiguousarray(
+                              res.best_scores[:, q]),
+                          n_chunks=res.n_chunks)
+        if res.scores is not None:
+            out.scores = np.ascontiguousarray(res.scores[:, :, q])
+        if res.topk_rows is not None:
+            kk = min(k_q, res.topk_rows.shape[0])
+            out.topk_rows = np.ascontiguousarray(res.topk_rows[:kk, q])
+            out.topk_scores = np.ascontiguousarray(res.topk_scores[:kk, q])
+        if res.hits is not None:
+            mine = res.hits[res.hits[:, 2] == q]
+            out.hits = np.ascontiguousarray(mine[:, [0, 1, 3]])
+        return out
+
+    def _run_group(self, grp: List[_Pending]) -> None:
+        """Execute one compatible group: coalesced or sequential.
+
+        Within the group, requests with identical cache keys share one
+        executed query (same-tick dedup).
+        """
+        uniq: "OrderedDict[Tuple, List[_Pending]]" = OrderedDict()
+        for p in grp:
+            uniq.setdefault(p.cache_key, []).append(p)
+        members = list(uniq.values())
+        n_q = len(members)
+        first = members[0][0]
+        n_rows = (len(first.rows) if first.rows is not None
+                  else self.engine.corpus.n_rows)
+        bp: Optional[BatchPlan] = None
+        if n_q > 1 and n_rows > 0:
+            # Empty subsets skip pricing: the engine answers them without
+            # a launch, and the planner (rightly) rejects 0-row workloads.
+            bp = self.engine.planner.plan_batch(
+                n_rows=n_rows,
+                fragment_chars=self.engine.corpus.fragment_chars,
+                pattern_chars=int(first.patterns.shape[-1]), n_queries=n_q,
+                backend=first.backend)
+        if bp is not None and bp.coalesced:
+            stacked = np.stack([m[0].patterns for m in members])
+            kw = dict(mode="batched", reduction=first.reduction,
+                      backend=first.backend, rows=first.rows)
+            ks = [m[0].k[0] for m in members]
+            if first.reduction == "topk":
+                kw["k"] = ks
+            if first.reduction == "threshold":
+                kw["threshold"] = [m[0].threshold[0] for m in members]
+            self.stats.n_launches += 1
+            self.stats.n_coalesced_launches += 1
+            self.stats.n_coalesced_queries += len(grp)
+            batched = self.engine.match(stacked, **kw)
+            for q, mem in enumerate(members):
+                res = self._scatter(batched, q, n_q, ks[q])
+                self._cache_put(mem[0].cache_key, res)
+                for p in mem:
+                    self._complete(p, res, cached=False)
+        else:
+            if n_q > 1:
+                self.stats.n_sequential_fallback += len(grp)
+            for mem in members:
+                res = self._run_single(mem[0])
+                self._cache_put(mem[0].cache_key, res)
+                for p in mem:
+                    self._complete(p, res, cached=False)
+
+    def tick(self) -> int:
+        """Drain the queue once: cache hits, then grouped launches.
+
+        Returns the number of requests completed this tick.
+        """
+        gen = self.engine.corpus.generation
+        if gen != self._cache_generation:
+            self._cache.clear()
+            self._cache_generation = gen
+        pending, self._queue = self._queue, []
+        if not pending:
+            return 0
+        before = self.stats.n_completed
+        groups: "OrderedDict[Tuple, List[_Pending]]" = OrderedDict()
+        for p in pending:
+            hit = self._cache_get(p.cache_key)
+            if hit is not None:
+                self._complete(p, hit, cached=True)
+                continue
+            key = p.group_key if p.group_key is not None else (
+                "solo", id(p.ticket))
+            groups.setdefault(key, []).append(p)
+        for grp in groups.values():
+            try:
+                self._run_group(grp)
+            except Exception as e:      # noqa: BLE001 -- tenant isolation
+                # One tenant's bad query (pattern longer than the
+                # fragment, rows out of range, ...) must not poison the
+                # tick for everyone else: fail this group's tickets,
+                # keep serving the rest.
+                for p in grp:
+                    if not p.ticket.done:
+                        self._complete(p, None, cached=False, error=e)
+        return self.stats.n_completed - before

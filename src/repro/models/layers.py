@@ -294,33 +294,43 @@ def attention_apply(cfg: ModelConfig, p, x, *, positions, mode: str,
         if xa is None:
             if use_rope:
                 k = apply_rope(k, positions, cfg.rope_theta)
+            # cache_index: scalar (all rows write one position) or (B,)
+            # vector (each batch row writes its own position -- serving
+            # slots whose sequence lengths diverge).
+            ci = jnp.asarray(cache_index)
+            ci_b = (ci + jnp.zeros((B,), jnp.int32) if ci.ndim == 0
+                    else ci.astype(jnp.int32))
+            if ci.ndim == 0:
+                def write(buf, val):
+                    idx = (0, 0, cache_index) + (0,) * (buf.ndim - 3)
+                    return jax.lax.dynamic_update_slice(
+                        buf, val.astype(buf.dtype), idx)
+            else:
+                b_idx = jnp.arange(B)
+
+                def write(buf, val):
+                    # val is (B, K, 1[, hd]); scatter row b at ci_b[b].
+                    return buf.at[b_idx, :, ci_b].set(
+                        val[:, :, 0].astype(buf.dtype))
             if cfg.kv_quant:
                 kq, ks = _kv_quantize(k)
                 vq, vs = _kv_quantize(v)
-                ck = jax.lax.dynamic_update_slice(
-                    cache["k"], kq, (0, 0, cache_index, 0))
-                cv = jax.lax.dynamic_update_slice(
-                    cache["v"], vq, (0, 0, cache_index, 0))
-                cks = jax.lax.dynamic_update_slice(
-                    cache["k_scale"], ks, (0, 0, cache_index))
-                cvs = jax.lax.dynamic_update_slice(
-                    cache["v_scale"], vs, (0, 0, cache_index))
+                ck = write(cache["k"], kq)
+                cv = write(cache["v"], vq)
+                cks = write(cache["k_scale"], ks)
+                cvs = write(cache["v_scale"], vs)
                 new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
                 k_scale, v_scale = cks, cvs
             else:
-                ck = jax.lax.dynamic_update_slice(
-                    cache["k"], k.astype(cache["k"].dtype),
-                    (0, 0, cache_index, 0))
-                cv = jax.lax.dynamic_update_slice(
-                    cache["v"], v.astype(cache["v"].dtype),
-                    (0, 0, cache_index, 0))
+                ck = write(cache["k"], k)
+                cv = write(cache["v"], v)
                 new_cache = {"k": ck, "v": cv}
             kk, vv = ck, cv
             S_max = kk.shape[2]
             kv_pos = jnp.arange(S_max)
-            valid = kv_pos[None, :] <= (cache_index + jnp.zeros((B,), jnp.int32))[:, None]
+            valid = kv_pos[None, :] <= ci_b[:, None]
             if window is not None:
-                valid &= (cache_index - kv_pos[None, :]) < window
+                valid &= (ci_b[:, None] - kv_pos[None, :]) < window
         else:
             # cross-attention decode: cache holds precomputed enc K/V.
             kk, vv = cache["k"], cache["v"]

@@ -323,8 +323,12 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
     x = constrain(x, ("batch", None, None))
 
     if cache_index is not None:
-        positions = jnp.broadcast_to(
-            (jnp.asarray(cache_index) + jnp.arange(S))[None], (B, S))
+        ci = jnp.asarray(cache_index)
+        if ci.ndim == 0:
+            positions = jnp.broadcast_to((ci + jnp.arange(S))[None], (B, S))
+        else:
+            # Per-row cache positions (serving slots at diverging lengths).
+            positions = ci[:, None] + jnp.arange(S)[None, :]
     else:
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
 
@@ -381,7 +385,12 @@ def prefill(cfg: ModelConfig, params, batch, caches):
 
 def decode_step(cfg: ModelConfig, params, caches, tokens, cache_index,
                 enc_out=None):
-    """One decode step: tokens (B, 1) -> (logits (B, V), new caches)."""
+    """One decode step: tokens (B, 1) -> (logits (B, V), new caches).
+
+    ``cache_index`` is a scalar (all rows at the same position) or a (B,)
+    vector of per-row positions (serving slots whose lengths diverge);
+    each row's KV is written at its own position either way.
+    """
     batch = {"tokens": tokens}
     if cfg.is_encdec:
         batch["enc_out"] = enc_out

@@ -55,18 +55,30 @@ class Engine:
             # A zero-length prompt has no logits to seed decoding from
             # (the prefill loop below would never run).
             raise ValueError("empty prompt: at least one token required")
+        if len(req.prompt) > self.max_seq - 1:
+            # Cache rows past max_seq-1 don't exist; the scatter write
+            # would silently drop those positions and decode garbage.
+            raise ValueError(f"prompt length {len(req.prompt)} exceeds "
+                             f"max_seq-1 ({self.max_seq - 1})")
         slot = self._free_slot()
         if slot is None:
             return False
         # Per-slot prefill: decode the prompt token by token into the slot's
         # cache rows (keeps a single compiled decode program; a batched
-        # prefill program is used by the launcher for cold starts).
+        # prefill program is used by the launcher for cold starts).  Every
+        # decode call writes KV for *all* slots, so each slot must write at
+        # its own position: the admitted slot at its growing prefill
+        # position, every other slot at its next free row (slot_pos), where
+        # the junk is overwritten by that slot's own next real decode and
+        # its causal mask (kv_pos <= pos) never attends it meanwhile.
         for t, tok in enumerate(req.prompt):
             toks = np.zeros((self.n_slots, 1), np.int32)
             toks[slot, 0] = tok
+            # Copy: device_put can alias the numpy buffer zero-copy on CPU,
+            # and slot_pos is mutated below while the dispatch is in flight.
             logits, self.caches = self._decode(
                 self.params, self.caches, jnp.asarray(toks),
-                jnp.int32(int(self.slot_pos[slot])))
+                jnp.asarray(np.array(self.slot_pos)))
             self.slot_pos[slot] += 1
         self.slot_req[slot] = req
         req._last_logits = np.asarray(logits[slot])  # type: ignore
@@ -88,9 +100,14 @@ class Engine:
             active.append(i)
         if not active:
             return
-        pos = int(max(self.slot_pos[i] for i in active))
+        # Per-slot positions: slots admitted with shorter prompts sit at
+        # lower positions than their neighbors; decoding all of them at
+        # max(slot_pos) would write their KV rows at the wrong positions
+        # (and rotate queries with the wrong phase) as soon as slot
+        # lengths diverge.
         logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(toks), jnp.int32(pos))
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.asarray(np.array(self.slot_pos)))
         nxt = np.asarray(self.sampler(logits))
         for i in active:
             r = self.slot_req[i]
@@ -99,6 +116,13 @@ class Engine:
             if len(r.out) >= r.max_new or self.slot_pos[i] >= self.max_seq - 1:
                 r.done = True
                 self.slot_req[i] = None
+                # Reset the freed slot to position 0: the next admission
+                # prefills from the start, and the causal mask
+                # (kv_pos <= pos) hides the previous occupant's stale KV
+                # rows until they are overwritten.  Leaving the position
+                # where the old request ended would make a reused slot
+                # attend its predecessor's cache.
+                self.slot_pos[i] = 0
 
     def run(self, requests: List[Request], max_steps: int = 10_000) -> None:
         queue = list(requests)

@@ -360,6 +360,179 @@ class TestModeAndSubsets:
         np.testing.assert_array_equal(frags, keep)   # caller untouched
 
 
+class TestPlannerBatchPricing:
+    def setup_method(self):
+        self.planner = Planner()
+
+    def test_tiny_threshold_includes_batch_size(self):
+        """R*L*P alone calls a large batched query on a small corpus
+        'tiny' and routes it to the Python-loop ref backend (Q sequential
+        passes); the ops estimate must include Q."""
+        kw = dict(n_rows=2, fragment_chars=20, pattern_chars=8)
+        assert self.planner.plan(**kw).backend == "ref"
+        assert self.planner.plan(**kw, n_patterns=64).backend != "ref"
+
+    def test_tiny_q_boundary(self):
+        # R*L*P = 2*13*8 = 208; Q=19 -> 3952 <= 4096 stays ref, Q=20 spills.
+        kw = dict(n_rows=2, fragment_chars=20, pattern_chars=8)
+        assert self.planner.plan(**kw, n_patterns=19).backend == "ref"
+        assert self.planner.plan(**kw, n_patterns=20).backend != "ref"
+
+    def test_plan_batch_coalesces_large_q(self):
+        bp = self.planner.plan_batch(n_rows=512, fragment_chars=1024,
+                                     pattern_chars=100, n_queries=64)
+        assert bp.coalesced and bp.plan.mode == "batched"
+        assert bp.plan.n_patterns == 64
+        assert bp.est_coalesced_s <= bp.est_sequential_s
+
+    def test_plan_batch_single_query_is_sequential(self):
+        bp = self.planner.plan_batch(n_rows=512, fragment_chars=1024,
+                                     pattern_chars=100, n_queries=1)
+        assert not bp.coalesced and bp.plan.mode == "shared"
+
+    def test_plan_batch_respects_backend_override(self):
+        bp = self.planner.plan_batch(n_rows=64, fragment_chars=256,
+                                     pattern_chars=32, n_queries=8,
+                                     backend="swar")
+        assert bp.plan.backend == "swar"
+
+    def test_ref_estimate_nonzero(self):
+        p = self.planner.plan(n_rows=2, fragment_chars=20, pattern_chars=8)
+        assert p.backend == "ref" and p.est_seconds > 0
+
+
+class TestEmptySubsetsAndEmptyCorpus:
+    def setup_method(self):
+        rng = np.random.default_rng(50)
+        self.frags = rng.integers(0, 4, (10, 64), np.uint8)
+        self.pat = rng.integers(0, 4, 16, np.uint8)
+        self.empty = np.array([], dtype=int)
+
+    def test_empty_corpus_rejected_at_construction(self):
+        with pytest.raises(ValueError, match="non-empty corpus"):
+            MatchEngine(np.zeros((0, 16), np.uint8))
+        with pytest.raises(ValueError, match="non-empty corpus"):
+            MatchEngine(PackedCorpus(np.zeros((0, 16), np.uint8)))
+
+    @pytest.mark.parametrize("reduction", ["best", "topk", "full"])
+    def test_empty_subset_shared(self, reduction):
+        res = MatchEngine(self.frags).match(self.pat, rows=self.empty,
+                                            reduction=reduction)
+        assert res.best_locs.shape == (0,)
+        assert res.best_scores.shape == (0,)
+        assert res.n_chunks == 0 and res.plan.n_rows == 0
+        if reduction == "topk":
+            assert res.topk_rows.shape == (0,)
+            assert res.topk_scores.shape == (0,)
+        if reduction == "full":
+            assert res.scores.shape == (0, 64 - 16 + 1)
+
+    def test_empty_subset_threshold(self):
+        res = MatchEngine(self.frags).match(self.pat, rows=self.empty,
+                                            reduction="threshold",
+                                            threshold=1)
+        assert res.hits.shape == (0, 3)
+
+    def test_empty_subset_batched(self):
+        pats = np.zeros((3, 16), np.uint8)
+        res = MatchEngine(self.frags).match(pats, rows=self.empty,
+                                            reduction="best")
+        assert res.best_scores.shape == (0, 3)
+        res = MatchEngine(self.frags).match(pats, rows=self.empty,
+                                            reduction="threshold",
+                                            threshold=1)
+        assert res.hits.shape == (0, 4)
+
+    def test_empty_subset_still_validates_pattern(self):
+        with pytest.raises(ValueError, match="longer"):
+            MatchEngine(self.frags).match(np.zeros(65, np.uint8),
+                                          rows=self.empty)
+
+
+class TestSubsetReductionsAllBackends:
+    """topk / threshold under rows= subsets and k > R, on every backend."""
+
+    def setup_method(self):
+        rng = np.random.default_rng(51)
+        self.frags = rng.integers(0, 4, (14, 72), np.uint8)
+        self.pat = rng.integers(0, 4, 18, np.uint8)
+        self.sub = [11, 3, 7, 0, 9]
+        self.oracle = sliding_scores(self.frags[self.sub], self.pat)
+
+    @pytest.mark.parametrize("backend", ["swar", "mxu", "ref"])
+    def test_topk_rows_subset(self, backend):
+        res = MatchEngine(self.frags).match(
+            self.pat, backend=backend, rows=self.sub, reduction="topk", k=3)
+        best = self.oracle.max(1)
+        assert res.topk_rows.shape == (3,)
+        assert set(res.topk_rows.tolist()) <= set(self.sub)
+        np.testing.assert_array_equal(np.sort(res.topk_scores),
+                                      np.sort(np.sort(best)[-3:]))
+
+    @pytest.mark.parametrize("backend", ["swar", "mxu", "ref"])
+    def test_topk_k_exceeds_rows(self, backend):
+        """k > R clamps to the row count instead of padding or crashing."""
+        res = MatchEngine(self.frags).match(
+            self.pat, backend=backend, rows=self.sub, reduction="topk",
+            k=50)
+        assert res.topk_rows.shape == (len(self.sub),)
+        assert sorted(res.topk_rows.tolist()) == sorted(self.sub)
+        np.testing.assert_array_equal(np.sort(res.topk_scores),
+                                      np.sort(self.oracle.max(1)))
+
+    @pytest.mark.parametrize("backend", ["swar", "mxu", "ref"])
+    def test_topk_k_exceeds_full_corpus(self, backend):
+        res = MatchEngine(self.frags).match(self.pat, backend=backend,
+                                            reduction="topk", k=99)
+        assert res.topk_rows.shape == (self.frags.shape[0],)
+
+    @pytest.mark.parametrize("backend", ["swar", "mxu", "ref"])
+    def test_threshold_rows_subset(self, backend):
+        thr = int(self.oracle.max()) - 1
+        res = MatchEngine(self.frags).match(
+            self.pat, backend=backend, rows=self.sub,
+            reduction="threshold", threshold=thr)
+        want = np.argwhere(self.oracle >= thr)
+        assert res.hits.shape == (want.shape[0], 3)
+        np.testing.assert_array_equal(
+            res.hits[:, 0], np.asarray(self.sub)[want[:, 0]])
+        np.testing.assert_array_equal(res.hits[:, 1], want[:, 1])
+        np.testing.assert_array_equal(res.hits[:, 2],
+                                      self.oracle[tuple(want.T)])
+
+    def test_batched_per_query_thresholds(self):
+        rng = np.random.default_rng(52)
+        pats = rng.integers(0, 4, (3, 18), np.uint8)
+        oracles = [sliding_scores(self.frags, pats[i]) for i in range(3)]
+        thrs = [int(o.max()) for o in oracles]
+        res = MatchEngine(self.frags).match(pats, mode="batched",
+                                            reduction="threshold",
+                                            threshold=thrs)
+        for q in range(3):
+            mine = res.hits[res.hits[:, 2] == q]
+            want = np.argwhere(oracles[q] >= thrs[q])
+            np.testing.assert_array_equal(mine[:, :2], want)
+
+    def test_batched_per_query_k(self):
+        rng = np.random.default_rng(53)
+        pats = rng.integers(0, 4, (3, 18), np.uint8)
+        ks = [2, 5, 9]
+        res = MatchEngine(self.frags).match(pats, mode="batched",
+                                            reduction="topk", k=ks)
+        # Merge runs at max(k); per-query slices reproduce the solo runs.
+        assert res.topk_rows.shape == (9, 3)
+        for q, kq in enumerate(ks):
+            solo = MatchEngine(self.frags).match(pats[q], reduction="topk",
+                                                 k=kq)
+            np.testing.assert_array_equal(res.topk_scores[:kq, q],
+                                          solo.topk_scores)
+
+    def test_per_query_k_rejected_outside_batched(self):
+        with pytest.raises(ValueError, match="per-query k"):
+            MatchEngine(self.frags).match(self.pat, reduction="topk",
+                                          k=[1, 2])
+
+
 class TestDedupLifetimeCounters:
     def test_counters_survive_capacity_growth(self):
         from repro.data.dedup import CRAMDedup

@@ -241,6 +241,50 @@ class TestServing:
         req = Request(prompt=np.array([1, 2], np.int32), max_new=2)
         assert eng.add(req)
 
+    def test_engine_rejects_oversized_prompt(self):
+        """Cache rows past max_seq-1 don't exist; the per-slot scatter
+        write would silently drop them, so admission must reject."""
+        params = model.init_params(CFG, jax.random.PRNGKey(0))
+        eng = Engine(CFG, params, max_seq=8, n_slots=1)
+        with pytest.raises(ValueError, match="exceeds"):
+            eng.add(Request(prompt=np.arange(8, dtype=np.int32), max_new=2))
+        assert eng.add(Request(prompt=np.arange(7, dtype=np.int32),
+                               max_new=2))
+
+    def test_engine_mixed_prompt_lengths(self):
+        """Slots admitted with different prompt lengths must decode at
+        their own cache positions; decoding every active slot at
+        max(slot_pos) wrote short-prompt slots' KV rows at the wrong
+        positions and produced garbage once lengths diverged."""
+        params = model.init_params(CFG, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(2)
+        p_short = rng.integers(0, CFG.vocab, 3, dtype=np.int32)
+        p_long = rng.integers(0, CFG.vocab, 9, dtype=np.int32)
+        refs = [generate_greedy(CFG, params, p[None], max_new=5,
+                                max_seq=32)[0] for p in (p_short, p_long)]
+        reqs = [Request(prompt=p_short, max_new=5),
+                Request(prompt=p_long, max_new=5)]
+        eng = Engine(CFG, params, max_seq=32, n_slots=2)
+        eng.run(list(reqs))
+        for req, ref in zip(reqs, refs):
+            np.testing.assert_array_equal(np.asarray(req.out), ref)
+
+    def test_engine_slot_reuse_isolated_from_predecessor(self):
+        """A request admitted to a freed slot must not attend the previous
+        occupant's KV rows: the slot position resets to 0 on free, and the
+        causal mask hides the stale cache until it is overwritten."""
+        params = model.init_params(CFG, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(0, CFG.vocab, n, dtype=np.int32)
+                   for n in (5, 7, 4)]
+        refs = [generate_greedy(CFG, params, p[None], max_new=4,
+                                max_seq=32)[0] for p in prompts]
+        reqs = [Request(prompt=p, max_new=4) for p in prompts]
+        eng = Engine(CFG, params, max_seq=32, n_slots=2)   # forces reuse
+        eng.run(list(reqs))
+        for req, ref in zip(reqs, refs):
+            np.testing.assert_array_equal(np.asarray(req.out), ref)
+
     def test_engine_matches_generate(self):
         """Slot-based engine output == batched greedy generation."""
         params = model.init_params(CFG, jax.random.PRNGKey(0))
