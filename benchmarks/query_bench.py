@@ -1,0 +1,201 @@
+"""Compiled-query bench: compile-once reuse vs. per-call lowering, and
+exact vs. wildcard predicate throughput (DESIGN.md Sec. 3e).
+
+Two comparisons on one resident corpus:
+
+* **compiled vs. uncompiled warm path.**  The uncompiled loop is what
+  every caller paid before the query IR existed -- per call: build the
+  query, plan (kernel + geometry), pack the pattern operands, then run.
+  The compiled loop lowers once (``MatchEngine.compile``) and calls
+  ``CompiledMatch.run()``, which streams the resident corpus with zero
+  per-call host work.  Results are asserted bit-identical before timing.
+* **exact vs. wildcard.**  The same pattern with N-wildcard positions as
+  an accept-mask predicate, through the bit-plane SWAR kernel -- the cost
+  of opening the approximate-matching scenario family on the VPU path
+  (the MXU path prices wildcards at zero; see the planner).
+
+Both paths run the SWAR kernel (``backend="swar"``): on this CPU container
+the Pallas kernels execute via the interpreter, where MXU bf16 matmuls are
+emulated and their timings are meaningless (see ``kernel_bench``); holding
+the kernel fixed makes the comparison measure exactly the query layer.
+
+Emits ``BENCH_match_query.json`` at the repo root and exits nonzero if the
+record is malformed.  CI runs ``--smoke`` as a schema guard: same pipeline
+and validation on a reduced shape, without overwriting the committed
+full-run artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_match_query.json"
+
+FULL = dict(R=48, F=256, P=32, iters=8, repeats=5)
+SMOKE = dict(R=16, F=128, P=16, iters=2, repeats=1)
+BACKEND = "swar"
+N_WILDCARDS = 4
+
+REQUIRED_KEYS = ("shape", "backend", "interpret", "smoke", "results")
+REQUIRED_RESULT_KEYS = ("predicate", "uncompiled_us", "compiled_us",
+                        "speedup", "identical", "oracle_ok")
+
+
+def _mk_query(masks, exact_codes):
+    from repro.match import MatchQuery
+
+    if exact_codes is not None:
+        return MatchQuery.exact(exact_codes, reduction="best",
+                                backend=BACKEND)
+    return MatchQuery.from_masks(masks, reduction="best", backend=BACKEND)
+
+
+def bench_predicate(eng, predicate: str, P: int, rng, iters: int,
+                    repeats: int) -> dict:
+    from repro.core.matcher import sliding_scores_masks
+
+    codes = rng.integers(0, 4, P, np.uint8)
+    masks = (np.uint8(1) << codes).astype(np.uint8)
+    exact_codes = codes if predicate == "exact" else None
+    if predicate == "wildcard":
+        masks[rng.integers(0, P, N_WILDCARDS)] = 0b1111
+
+    # Warm the jit cache at the exact shapes to be timed.
+    warm = eng.compile(_mk_query(masks, exact_codes), cached=False)
+    warm.run()
+
+    t_unc = t_cmp = float("inf")
+    # Best-of-N per path: this container's CPU timings are noisy; the
+    # minimum is the least-contended observation of the same work.
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            # Per-call lowering: query build + plan + pack + run.
+            res_unc = eng.compile(_mk_query(masks, exact_codes),
+                                  cached=False).run()
+        t_unc = min(t_unc, (time.perf_counter() - t0) / iters)
+
+        cm = eng.compile(_mk_query(masks, exact_codes), cached=False)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            res_cmp = cm.run()
+        t_cmp = min(t_cmp, (time.perf_counter() - t0) / iters)
+
+    identical = (np.array_equal(res_unc.best_scores, res_cmp.best_scores)
+                 and np.array_equal(res_unc.best_locs, res_cmp.best_locs))
+    oracle = sliding_scores_masks(eng.corpus.fragments, masks)
+    oracle_ok = bool(
+        np.array_equal(res_cmp.best_scores, oracle.max(1))
+        and np.array_equal(res_cmp.best_locs, oracle.argmax(1)))
+    return {
+        "predicate": predicate,
+        "uncompiled_us": round(t_unc * 1e6, 1),
+        "compiled_us": round(t_cmp * 1e6, 1),
+        "speedup": round(t_unc / t_cmp, 3),
+        "identical": bool(identical),
+        "oracle_ok": oracle_ok,
+        "plan_backend": res_cmp.plan.backend,
+        "plan_predicate": res_cmp.plan.predicate,
+    }
+
+
+def validate(record: dict) -> None:
+    """Schema guard: fail loudly if the BENCH artifact is malformed."""
+    for key in REQUIRED_KEYS:
+        if key not in record:
+            raise ValueError(f"BENCH record missing key {key!r}")
+    if not record["results"]:
+        raise ValueError("BENCH record has no results")
+    preds = set()
+    for row in record["results"]:
+        for key in REQUIRED_RESULT_KEYS:
+            if key not in row:
+                raise ValueError(f"result row missing key {key!r}: {row}")
+        if not row["identical"]:
+            raise ValueError(f"{row['predicate']}: compiled results "
+                             "diverged from per-call lowering")
+        if not row["oracle_ok"]:
+            raise ValueError(f"{row['predicate']}: results diverged from "
+                             "the NumPy accept-mask oracle")
+        if row["uncompiled_us"] <= 0 or row["compiled_us"] <= 0:
+            raise ValueError(f"{row['predicate']}: non-positive timing")
+        preds.add(row["predicate"])
+    if preds != {"exact", "wildcard"}:
+        raise ValueError(f"expected exact+wildcard rows, got {preds}")
+    json.loads(json.dumps(record))      # round-trips as JSON
+
+
+def run_bench(smoke: bool) -> dict:
+    from repro.match import MatchEngine
+
+    cfg = SMOKE if smoke else FULL
+    R, F, P = cfg["R"], cfg["F"], cfg["P"]
+    rng = np.random.default_rng(11)
+    eng = MatchEngine(rng.integers(0, 4, (R, F), np.uint8))
+    results = [bench_predicate(eng, pred, P, rng, cfg["iters"],
+                               cfg["repeats"])
+               for pred in ("exact", "wildcard")]
+    by_pred = {r["predicate"]: r for r in results}
+    record = {
+        "shape": {"R": R, "F": F, "P": P},
+        "backend": BACKEND,
+        "interpret": eng.interpret,
+        "smoke": smoke,
+        "results": results,
+        "wildcard_over_exact_compiled": round(
+            by_pred["wildcard"]["compiled_us"]
+            / by_pred["exact"]["compiled_us"], 3),
+    }
+    validate(record)
+    if not smoke:
+        # Smoke mode (the CI schema guard) must not clobber the committed
+        # full-run artifact with reduced shapes.
+        BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    return record
+
+
+def run(smoke: bool = False):
+    """``benchmarks.run`` driver hook: (name, us_per_call, derived) rows."""
+    record = run_bench(smoke)
+    return [
+        (f"query/compiled_{row['predicate']}", row["compiled_us"],
+         f"uncompiled_us={row['uncompiled_us']} "
+         f"speedup={row['speedup']}x identical={row['identical']} "
+         f"oracle_ok={row['oracle_ok']}")
+        for row in record["results"]
+    ]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shape (CI schema guard)")
+    args = ap.parse_args()
+    try:
+        record = run_bench(args.smoke)
+    except ValueError as e:
+        print(f"BENCH validation failed: {e}", file=sys.stderr)
+        return 1
+    for row in record["results"]:
+        print(f"{row['predicate']:>9}  uncompiled={row['uncompiled_us']:>9.1f}us"
+              f"  compiled={row['compiled_us']:>9.1f}us"
+              f"  speedup={row['speedup']:.3f}x"
+              f"  identical={row['identical']} oracle_ok={row['oracle_ok']}")
+    print(f"wildcard/exact compiled cost: "
+          f"{record['wildcard_over_exact_compiled']}x")
+    if args.smoke:
+        print("smoke: record validated, artifact not written")
+    else:
+        print(f"wrote {BENCH_JSON}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

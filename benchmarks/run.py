@@ -12,6 +12,7 @@ Modules (one per paper table/figure + assignment deliverables):
   table4_apps       -- Table 4 benchmark apps
   kernel_bench      -- TPU-adapted kernel engine (beyond paper)
   service_bench     -- multi-tenant match service coalescing (beyond paper)
+  query_bench       -- compiled-query reuse + wildcard predicates (beyond)
   roofline          -- dry-run roofline table (assignment)
 """
 
@@ -22,7 +23,8 @@ import traceback
 MODULES = [
     "table1_gates", "fig5_throughput", "fig6_breakdown", "fig7_patlen",
     "fig8_tech", "fig9_10_nmp", "fig11_gates", "table4_apps",
-    "sec5_5_variation", "kernel_bench", "service_bench", "roofline",
+    "sec5_5_variation", "kernel_bench", "service_bench", "query_bench",
+    "roofline",
 ]
 
 

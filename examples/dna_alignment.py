@@ -1,11 +1,21 @@
 """End-to-end DNA sequence alignment (the paper's running case study).
 
 Builds a synthetic genome slice, folds it across rows into a device-
-resident packed corpus (Fig. 3), runs Oracular k-mer scheduling with every
-pass streaming through the match engine (the corpus is packed once and
-never re-uploaded -- the paper's data-residency discipline), verifies
-recovered alignments, and projects the paper-scale run with the calibrated
-cost model (Fig. 5 numbers).
+resident packed corpus (Fig. 3), then exercises the declarative query IR
+(DESIGN.md Sec. 3e) two ways:
+
+* a **primer scan**: an N-wildcard primer (degenerate positions encoded as
+  IUPAC accept masks) is compiled *once* (``MatchEngine.compile``) and the
+  resulting ``CompiledMatch`` re-run against successive corpus
+  generations -- the paper's reconfigurable-logic discipline: resident
+  data, reprogrammed match logic, zero per-call planning or packing;
+* **read alignment** with Oracular k-mer scheduling, where reads carry
+  sequencing no-calls (``N`` positions that must match anything) on top of
+  SNPs, so every pass is an accept-mask ``MatchQuery`` streamed through
+  the engine.
+
+Finally the paper-scale run is projected with the calibrated cost model
+(Fig. 5 numbers).
 
 Run:  PYTHONPATH=src python examples/dna_alignment.py
 """
@@ -18,7 +28,7 @@ from repro.core import costmodel as cm
 from repro.core import encoding
 from repro.core.scheduler import schedule_oracular
 from repro.core.tech import LONG_TERM, NEAR_TERM
-from repro.match import MatchEngine, PackedCorpus
+from repro.match import MatchEngine, MatchQuery, PackedCorpus
 
 
 def main() -> None:
@@ -31,13 +41,48 @@ def main() -> None:
     print(f"reference {len(genome)} chars folded into {frags.shape[0]} rows "
           f"of {frag_len} (overlap {pat_len - 1})")
 
-    # Sample reads from the genome (with a couple of SNPs each).
+    # -- 1. compiled N-wildcard primer scan -----------------------------------
+    # A 24-mer primer whose four degenerate positions are written as IUPAC
+    # codes: N matches anything, R = A|G.  Compile once, reuse every scan.
+    site = 31_337
+    primer_codes = genome[site:site + 24].copy()
+    primer = encoding.decode_dna(primer_codes)
+    primer = primer[:6] + "N" + primer[7:12] + "RN" + primer[14:22] + "NN"
+    query = MatchQuery.iupac(primer, reduction="threshold", threshold=24)
+    scan = engine.compile(query)                   # plan + pack, once
+    hits = scan().hits
+    step = frag_len - (pat_len - 1)
+    glob = [int(r * step + loc) for r, loc, _ in hits]
+    print(f"primer {primer} compiled once ({scan.plan.backend}/"
+          f"{scan.plan.predicate}); full-score sites at {glob} "
+          f"(planted at {site})")
+    # A corpus row write bumps the generation; the same CompiledMatch
+    # serves the new contents -- no re-plan, no re-pack.
+    row = site // step
+    orig = frags[row].copy()                       # set_rows mutates frags
+    edited = orig.copy()
+    edited[site - row * step] ^= 1                 # break the primer site
+    corpus.set_rows(row, edited)
+    print(f"after a row write (generation {corpus.generation}): "
+          f"{scan().hits.shape[0]} full-score sites, "
+          f"{corpus.host_pack_count} host pack event(s)")
+    corpus.set_rows(row, orig)                     # restore
+
+    # -- 2. read alignment with no-calls --------------------------------------
+    # Reads get 2 SNPs (real mismatches) plus 3 sequencing no-calls that
+    # must not count against the alignment: the no-call positions become
+    # full-wildcard accept masks (the predicate API), so a perfect
+    # placement scores pat_len minus the SNPs only.
     n_reads = 64
     starts = rng.integers(0, len(genome) - pat_len, n_reads)
     reads = np.stack([genome[s:s + pat_len].copy() for s in starts])
+    read_masks = (np.uint8(1) << reads).astype(np.uint8)
     for r in range(n_reads):
         snps = rng.integers(0, pat_len, 2)
         reads[r, snps] = rng.integers(0, 4, 2)
+        read_masks[r, snps] = (np.uint8(1) << reads[r, snps])
+        nocalls = rng.integers(0, pat_len, 3)
+        read_masks[r, nocalls] = 0b1111            # N: matches anything
 
     sched = schedule_oracular(frags, reads, k=12)
     print(f"oracular schedule: {sched.n_passes} passes, "
@@ -50,12 +95,12 @@ def main() -> None:
     # afterwards.
     t0 = time.perf_counter()
     recovered = 0
-    step = frag_len - (pat_len - 1)
     for assign in sched.passes:
         rows = sorted(assign)
-        pats = reads[[assign[r] for r in rows]]
-        res = engine.match(pats, backend="swar", mode="per_row", rows=rows,
-                           reduction="best")
+        masks = read_masks[[assign[r] for r in rows]]
+        res = engine.match(MatchQuery.from_masks(
+            masks, mode="per_row", rows=rows, backend="swar",
+            reduction="best"))
         for i, row in enumerate(rows):
             if res.best_scores[i] >= pat_len - 2:     # allow the 2 SNPs
                 glob = row * step + res.best_locs[i]

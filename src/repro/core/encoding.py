@@ -26,17 +26,60 @@ LOW_BIT_MASK_2 = np.uint32(0x55555555)
 LOW_BIT_MASK_8 = np.uint32(0x01010101)
 
 
+# IUPAC ambiguity codes as 4-bit accept masks: bit c set <=> DNA code c
+# (A=0, C=1, G=2, T=3) is accepted at that position.  These are the
+# per-position accept sets consumed by the predicate API
+# (``repro.match.query``); N is the full wildcard.  U (RNA) reads as T.
+IUPAC_MASKS: Dict[str, int] = {
+    "A": 0b0001, "C": 0b0010, "G": 0b0100, "T": 0b1000, "U": 0b1000,
+    "R": 0b0101, "Y": 0b1010, "S": 0b0110, "W": 0b1001,
+    "K": 0b1100, "M": 0b0011,
+    "B": 0b1110, "D": 0b1101, "H": 0b1011, "V": 0b0111,
+    "N": 0b1111,
+}
+
+
 def encode_dna(s: str) -> np.ndarray:
-    """String over ACGT -> uint8 codes (values 0..3)."""
+    """String over ACGT -> uint8 codes (values 0..3).
+
+    Raises ``ValueError`` on any other character: silently folding unknown
+    bases to 'A' fabricates matches.  Ambiguity codes (N, R, ...) are not
+    losses of information to be papered over -- encode them with
+    ``encode_iupac`` and match through the predicate API.
+    """
     lut = np.full(256, 255, np.uint8)
     for c, v in DNA_CODE.items():
         lut[ord(c)] = v
         lut[ord(c.lower())] = v
-    codes = lut[np.frombuffer(s.encode(), np.uint8)]
+    raw = np.frombuffer(s.encode(), np.uint8)
+    codes = lut[raw]
     if (codes == 255).any():
-        # Paper's pipeline assumes pre-cleaned references; map N/other -> A.
-        codes = np.where(codes == 255, 0, codes)
+        # Name offenders from the byte buffer: string indices are char
+        # offsets, not byte offsets (multi-byte chars would misindex).
+        bad = sorted({chr(b) for b in raw[codes == 255][:8]})
+        raise ValueError(
+            f"encode_dna: invalid character(s) {bad} -- not in ACGT. "
+            "Use encode_iupac for ambiguity codes (N, R, Y, ...)")
     return codes
+
+
+def encode_iupac(s: str) -> np.ndarray:
+    """IUPAC string -> uint8 per-position accept masks (values 1..15).
+
+    Bit ``c`` of position ``i`` is set iff DNA code ``c`` is accepted there;
+    plain ACGT positions become one-hot masks, ``N`` becomes 0b1111.  Feed
+    the result to ``repro.match.MatchQuery.iupac`` / ``from_masks``.
+    """
+    lut = np.zeros(256, np.uint8)
+    for c, m in IUPAC_MASKS.items():
+        lut[ord(c)] = m
+        lut[ord(c.lower())] = m
+    raw = np.frombuffer(s.encode(), np.uint8)
+    masks = lut[raw]
+    if (masks == 0).any():
+        bad = sorted({chr(b) for b in raw[masks == 0][:8]})
+        raise ValueError(f"encode_iupac: invalid IUPAC character(s) {bad}")
+    return masks
 
 
 def decode_dna(codes: np.ndarray) -> str:

@@ -187,6 +187,27 @@ def sliding_scores(fragments: np.ndarray, patterns: np.ndarray) -> np.ndarray:
     return (windows == patterns[:, None, :]).sum(-1).astype(np.int32)[:, :n_locs]
 
 
+def sliding_scores_masks(fragments: np.ndarray,
+                         masks: np.ndarray) -> np.ndarray:
+    """NumPy oracle for accept-set predicates (wildcards / IUPAC).
+
+    fragments: (R, F) uint8 codes; masks: (P,) shared or (R, P) per-row
+    uint8 accept masks (bit c set iff code c accepted).  Returns
+    (R, F-P+1) int32 counts of accepted positions.  One-hot masks reduce
+    this to ``sliding_scores`` exactly.
+    """
+    fragments = np.asarray(fragments)
+    masks = np.asarray(masks, np.uint8)
+    if masks.ndim == 1:
+        masks = np.broadcast_to(masks, (fragments.shape[0],) + masks.shape)
+    R, F = fragments.shape
+    P = masks.shape[1]
+    n_locs = F - P + 1
+    windows = np.lib.stride_tricks.sliding_window_view(fragments, P, axis=1)
+    hits = (masks[:, None, :] >> windows) & 1
+    return hits.sum(-1).astype(np.int32)[:, :n_locs]
+
+
 def best_alignment(scores: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Per-row (best_loc, best_score) -- what the host extracts (Sec. 3.2)."""
     locs = scores.argmax(axis=1)

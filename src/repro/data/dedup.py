@@ -15,11 +15,12 @@ production data-plane work.
 
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional
 
 import numpy as np
 
-from repro.match import MatchEngine, PackedCorpus
+from repro.match import MatchEngine, MatchQuery, PackedCorpus
 
 _INITIAL_CAPACITY = 64
 
@@ -45,6 +46,9 @@ class CRAMDedup:
     def __init__(self, fp_len: int = 128, pattern_len: int = 96,
                  threshold: float = 0.9, backend: Optional[str] = None,
                  method: Optional[str] = None):
+        if method is not None:
+            warnings.warn("CRAMDedup(method=...) is deprecated; pass "
+                          "backend=...", DeprecationWarning, stacklevel=2)
         self.fp_len = fp_len
         self.pattern_len = pattern_len
         self.threshold = threshold
@@ -92,7 +96,9 @@ class CRAMDedup:
         if self._n == 0:
             return 0.0
         pat = fingerprint(doc, self.fp_len)[: self.pattern_len]
-        res = self._engine.match(pat, backend=self.backend, reduction="best")
+        query = MatchQuery.exact(pat, reduction="best",
+                                 backend=self.backend)
+        res = self._engine.match(query)
         # Rows beyond _n are empty capacity; trim before reducing.
         return float(res.best_scores[:self._n].max()) / self.pattern_len
 

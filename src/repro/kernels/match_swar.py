@@ -16,6 +16,18 @@ Data layout:
 Grid: one program per row tile; the alignment loop runs inside the kernel so
 the reference tile is read from HBM exactly once per pattern block (the
 paper's data-movement-minimization objective, expressed HBM->VMEM).
+
+``match_swar_masks`` is the accept-set variant (the reconfigurable-logic
+story of the paper, Sec. 1/3: same resident data, reprogrammed match
+logic): instead of one packed pattern word per 16 positions it takes four
+*bit-planes* -- plane c has the low bit of lane i set iff DNA code c is
+accepted at pattern position i -- and a window lane scores a match iff its
+character's plane accepts it.  IUPAC ambiguity codes, N wildcards and
+arbitrary character classes all lower to these planes; exact matching is
+the one-hot special case (but rides the cheaper XOR kernel above).
+
+  pat_planes (R, 4*Wp) uint32 -- planes concatenated along words:
+                                 plane c occupies columns [c*Wp, (c+1)*Wp).
 """
 
 from __future__ import annotations
@@ -31,6 +43,8 @@ M1 = np.uint32(0x55555555)
 M2 = np.uint32(0x33333333)
 M4 = np.uint32(0x0F0F0F0F)
 MUL = np.uint32(0x01010101)
+# Code c replicated into every 2-bit lane (lane equality test operand).
+CODE_LANES = tuple(np.uint32(c * 0x55555555) for c in range(4))
 
 ROW_TILE = 8  # sublane-aligned row tile
 
@@ -86,3 +100,68 @@ def match_swar(ref_words: jnp.ndarray, pat_words: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((R, n_locs), jnp.int32),
         interpret=interpret,
     )(ref_words, pat_words, valid_mask)
+
+
+def _swar_masks_kernel(ref_ref, plane_ref, mask_ref, out_ref, *,
+                       n_locs: int, pattern_chars: int, wp: int):
+    planes = plane_ref[...]                  # (ROW_TILE, 4*Wp)
+    valid = mask_ref[...]                    # (1, Wp)
+
+    def body(loc, _):
+        base = loc // 16
+        sh = (loc % 16).astype(jnp.uint32) * 2
+        seg = ref_ref[:, pl.ds(base, wp + 1)]            # (ROW_TILE, Wp+1)
+        lo = seg[:, :wp] >> sh
+        hi_sh = (jnp.uint32(32) - sh) & jnp.uint32(31)
+        hi = jnp.where(sh == 0, jnp.uint32(0), seg[:, 1:] << hi_sh)
+        window = lo | hi
+        # Accept bit per lane: lane equals code c (both bits of the XOR
+        # clear) AND plane c accepts position i.  Four equality tests
+        # replace the single XOR of the exact kernel -- still branch-free
+        # VPU work, no decode of the 2-bit characters.
+        accept = jnp.zeros_like(window)
+        for c in range(4):
+            diff = window ^ CODE_LANES[c]
+            eq = ~(diff | (diff >> jnp.uint32(1))) & M1
+            accept |= eq & planes[:, c * wp:(c + 1) * wp]
+        mism = valid & ~accept
+        # <=1 bit per 2-bit lane: SWAR popcount starting at stage 2.
+        v = (mism & M2) + ((mism >> jnp.uint32(2)) & M2)
+        v = (v + (v >> jnp.uint32(4))) & M4
+        mismatches = ((v * MUL) >> jnp.uint32(24)).astype(jnp.int32).sum(
+            axis=-1, keepdims=True)
+        out_ref[:, pl.ds(loc, 1)] = pattern_chars - mismatches
+        return 0
+
+    jax.lax.fori_loop(0, n_locs, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_locs", "pattern_chars",
+                                             "interpret"))
+def match_swar_masks(ref_words: jnp.ndarray, pat_planes: jnp.ndarray,
+                     valid_mask: jnp.ndarray, *, n_locs: int,
+                     pattern_chars: int,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Accept-set sliding match: see module docstring for layouts."""
+    R, W = ref_words.shape
+    W4 = pat_planes.shape[1]
+    if W4 % 4:
+        raise ValueError("pat_planes must hold 4 concatenated plane blocks")
+    wp = W4 // 4
+    if R % ROW_TILE:
+        raise ValueError(f"rows must be padded to a multiple of {ROW_TILE}")
+    grid = (R // ROW_TILE,)
+    kernel = functools.partial(_swar_masks_kernel, n_locs=n_locs,
+                               pattern_chars=pattern_chars, wp=wp)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, W), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE, W4), lambda i: (i, 0)),
+            pl.BlockSpec((1, wp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, n_locs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, n_locs), jnp.int32),
+        interpret=interpret,
+    )(ref_words, pat_planes, valid_mask)

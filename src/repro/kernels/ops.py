@@ -15,6 +15,7 @@ CPU container validates them); on TPU it compiles to Mosaic.
 
 from __future__ import annotations
 
+import warnings
 
 from typing import Literal, Optional
 
@@ -37,26 +38,39 @@ def _pad_rows(x: np.ndarray, mult: int) -> np.ndarray:
     return x
 
 
-def match_scores(fragments: np.ndarray, patterns: np.ndarray,
+def match_scores(fragments: np.ndarray, patterns,
                  method: Optional[Literal["swar", "mxu", "ref"]] = None,
-                 interpret: bool | None = None) -> np.ndarray:
+                 interpret: bool | None = None, *,
+                 backend: Optional[str] = None) -> np.ndarray:
     """Similarity scores for all alignments (Algorithm 1 fast path).
 
     fragments: (R, F) uint8 codes.  patterns: (P,) shared, (R, P) per-row,
-    or (Q, P) batched (-> (R, L, Q)).  Returns (R, L) int32 or (R, L, Q)
-    int32, L = F - P + 1.
+    or (Q, P) batched (-> (R, L, Q)) uint8 codes -- or a
+    ``repro.match.MatchQuery`` (whose reduction is forced to "full"),
+    which is how wildcard / IUPAC predicates reach this shim.  Returns
+    (R, L) int32 or (R, L, Q) int32, L = F - P + 1.
 
-    ``method=None`` lets the planner pick the kernel from the workload
-    shape; pass an explicit name to override.  One-shot path: packs the
-    fragments for this call only -- hold a ``repro.match.MatchEngine`` to
-    amortize packing across queries.
+    ``backend=None`` lets the planner pick the kernel from the workload
+    shape; pass an explicit name to override (``method=`` is the
+    deprecated spelling).  One-shot path: packs the fragments for this
+    call only -- hold a ``repro.match.MatchEngine`` to amortize packing
+    across queries.
     """
     from repro.match import MatchEngine
+
+    if method is not None:
+        warnings.warn("ops.match_scores(method=...) is deprecated; pass "
+                      "backend=... or compile a MatchQuery",
+                      DeprecationWarning, stacklevel=2)
+        if backend is None:
+            backend = method
 
     eng = MatchEngine(np.asarray(fragments, np.uint8), interpret=interpret)
     # The streaming executor materializes on host; hand that array back
     # rather than re-uploading (every caller consumes it as numpy).
-    return eng.scores(np.asarray(patterns, np.uint8), backend=method)
+    kw = {} if backend is None else {"backend": backend}
+    return eng.scores(patterns if hasattr(patterns, "masks_b")
+                      else np.asarray(patterns, np.uint8), **kw)
 
 
 def popcount(words: np.ndarray, interpret: bool | None = None) -> jnp.ndarray:

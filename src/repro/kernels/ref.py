@@ -70,6 +70,29 @@ def match_scores_ref(fragments: jnp.ndarray, patterns: jnp.ndarray) -> jnp.ndarr
     return jnp.stack(cols, axis=1)
 
 
+def match_scores_masks_ref(fragments: jnp.ndarray,
+                           masks: jnp.ndarray) -> jnp.ndarray:
+    """Accept-set sliding scores (predicate semantics, Sec. 3e).
+
+    fragments: (R, F) uint8 codes; masks: (P,) or (R, P) uint8 accept
+    masks -- bit c of position i set iff code c matches there.  Returns
+    (R, F-P+1) int32: number of accepted positions per alignment.  With
+    one-hot masks this is exactly ``match_scores_ref``.
+    """
+    fragments = jnp.asarray(fragments)
+    masks = jnp.asarray(masks, jnp.uint8)
+    if masks.ndim == 1:
+        masks = jnp.broadcast_to(masks, (fragments.shape[0], masks.shape[0]))
+    R, F = fragments.shape
+    P = masks.shape[1]
+    L = F - P + 1
+    cols = []
+    for o in range(L):
+        hit = (masks >> fragments[:, o:o + P]) & jnp.uint8(1)
+        cols.append(hit.sum(-1, dtype=jnp.int32))
+    return jnp.stack(cols, axis=1)
+
+
 def match_scores_swar_ref(ref_words: jnp.ndarray, pat_words: jnp.ndarray,
                           valid_mask: jnp.ndarray, n_locs: int,
                           pattern_chars: int) -> jnp.ndarray:

@@ -26,22 +26,36 @@ from repro.serving.ngram_cache import NgramSpeculator, verify
 
 
 def run_match_service(args) -> None:
-    """Synthetic multi-tenant match traffic through one MatchService."""
-    from repro.match import MatchEngine, MatchService
+    """Synthetic multi-tenant match traffic through one MatchService.
+
+    Requests are declarative ``MatchQuery`` objects; ``--predicate
+    wildcard`` turns a few positions of every pattern into ``N`` wildcards
+    (accept-everything masks), exercising the accept-set kernel path under
+    the same coalescing machinery.
+    """
+    from repro.match import MatchEngine, MatchQuery, MatchService
 
     rng = np.random.default_rng(0)
     frags = rng.integers(0, 4, (args.corpus_rows, args.fragment_chars),
                          np.uint8)
     svc = MatchService(MatchEngine(frags))
     pats = rng.integers(0, 4, (args.requests, args.pattern_chars), np.uint8)
+    if args.predicate == "wildcard":
+        masks = (np.uint8(1) << pats).astype(np.uint8)
+        n_wild = max(1, args.pattern_chars // 8)
+        for q in range(args.requests):
+            masks[q, rng.integers(0, args.pattern_chars, n_wild)] = 0b1111
+        queries = [MatchQuery.from_masks(m) for m in masks]
+    else:
+        queries = [MatchQuery.exact(p) for p in pats]
     t0 = time.perf_counter()
-    tickets = [svc.submit(p) for p in pats]
+    tickets = [svc.submit(q) for q in queries]
     svc.flush()
     dt = time.perf_counter() - t0
     assert all(t.done for t in tickets)
     stats = svc.stats.snapshot()
-    print(f"served {len(tickets)} match queries in {dt:.2f}s "
-          f"({len(tickets)/dt:.1f} qps)")
+    print(f"served {len(tickets)} {args.predicate} match queries in "
+          f"{dt:.2f}s ({len(tickets)/dt:.1f} qps)")
     print(f"launches={stats['n_launches']} "
           f"coalesced={stats['n_coalesced_launches']} "
           f"(fused {stats['n_coalesced_queries']} queries) "
@@ -65,6 +79,10 @@ def main() -> None:
                     help="match workload: fragment length")
     ap.add_argument("--pattern-chars", type=int, default=32,
                     help="match workload: query pattern length")
+    ap.add_argument("--predicate", choices=("exact", "wildcard"),
+                    default="exact",
+                    help="match workload: exact queries or N-wildcard "
+                         "accept-mask queries")
     args = ap.parse_args()
 
     if args.workload == "match":

@@ -5,10 +5,16 @@ The single entry point for all string-matching workloads:
 * ``PackedCorpus`` -- fragments packed once into device-resident SWAR and
   one-hot forms, cached across queries (the paper's keep-data-next-to-
   compute discipline, Sec. 2-3).
+* ``MatchQuery`` -- frozen, hashable, declarative query IR: patterns as
+  per-position accept-mask predicates (exact / IUPAC ambiguity / N
+  wildcards / character classes), reduction spec, row subset, backend
+  hints; content-digested for caching.
 * ``Planner`` / ``Plan`` -- roofline-arithmetic kernel selection (swar /
-  mxu / ref) + all tile/pad geometry for one query.
-* ``MatchEngine`` / ``MatchResult`` -- sharded streaming executor with
-  fused best / top-k / threshold reductions per row-chunk.
+  mxu / ref) + all tile/pad geometry for one query, predicate-aware.
+* ``MatchEngine`` / ``CompiledMatch`` / ``MatchResult`` -- query compiler
+  (``compile(query)`` lowers once: plan + packed pattern operands,
+  LRU-cached by query content) over a sharded streaming executor with fused
+  best / top-k / threshold reductions per row-chunk.
 * ``MatchService`` -- micro-batched multi-tenant front end: queues
   concurrent queries, coalesces compatible ones into fused batched
   launches (priced by ``Planner.plan_batch``), caches results (LRU,
@@ -21,9 +27,11 @@ traffic goes through a ``MatchService``.
 """
 
 from .corpus import PackedCorpus
-from .engine import MatchEngine, MatchResult
+from .engine import CompiledMatch, MatchEngine, MatchResult
 from .planner import BatchPlan, Plan, Planner
+from .query import MatchQuery, as_query
 from .service import MatchService, MatchTicket, ServiceStats
 
-__all__ = ["PackedCorpus", "Planner", "Plan", "BatchPlan", "MatchEngine",
-           "MatchResult", "MatchService", "MatchTicket", "ServiceStats"]
+__all__ = ["PackedCorpus", "Planner", "Plan", "BatchPlan", "MatchQuery",
+           "as_query", "CompiledMatch", "MatchEngine", "MatchResult",
+           "MatchService", "MatchTicket", "ServiceStats"]

@@ -1,10 +1,17 @@
-"""Sharded streaming match executor (DESIGN.md Sec. 3c).
+"""Sharded streaming match executor + query compiler (DESIGN.md Sec. 3c/3e).
 
 Single entry point for all string-matching workloads: owns a
-``PackedCorpus`` (device-resident, packed once), asks the ``Planner`` for a
-kernel + geometry, then streams corpus row-chunks through the chosen Pallas
-kernel with a fused per-chunk reduction, so the full (R, L, Q) score tensor
-is never materialized unless explicitly requested.
+``PackedCorpus`` (device-resident, packed once), lowers declarative
+``MatchQuery`` objects through the ``Planner`` into ``CompiledMatch``
+programs (kernel choice + geometry + packed pattern operands, computed
+once and LRU-cached by query content), then streams corpus row-chunks through
+the chosen Pallas kernel with a fused per-chunk reduction, so the full
+(R, L, Q) score tensor is never materialized unless explicitly requested.
+
+The query IR (``repro.match.query``) is the paper's reconfigurable-logic
+discipline at the API: the corpus never moves; a small compiled program
+(the query) is shipped to it.  ``match(patterns, **kwargs)`` remains as a
+thin shim that builds the query for you.
 
 Reductions (fused per chunk):
   best      -- per-row argmax over alignments (the paper's host extract,
@@ -13,6 +20,11 @@ Reductions (fused per chunk):
                chunks): which corpus rows match best.
   threshold -- all (row, loc[, q]) hits with score >= threshold.
   full      -- materialized score tensor (small problems / compat path).
+
+Predicates: exact queries ride the XOR SWAR kernel / one-hot MXU matrix;
+accept-set queries (IUPAC, N wildcards, character classes) ride the
+bit-plane SWAR variant / multi-hot MXU matrix -- same resident corpus
+forms either way.
 
 Sharding: with a ``jax.sharding.Mesh`` the corpus rows distribute over the
 mesh axes mapped by the ``rows`` logical axis (``distributed.sharding``),
@@ -24,6 +36,7 @@ parallel, the direct analogue of the paper's array-level parallelism
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import List, Optional, Tuple, Union
 
 import jax
@@ -39,6 +52,7 @@ from repro.kernels import ref as _kref
 
 from .corpus import PackedCorpus
 from .planner import Plan, Planner
+from .query import _UNSET, MatchQuery, as_query
 
 
 def default_interpret() -> bool:
@@ -59,38 +73,263 @@ class MatchResult:
     n_chunks: int = 0
 
 
-def _pack_pattern_swar(patterns: np.ndarray, wp: int
-                       ) -> Tuple[np.ndarray, np.ndarray]:
-    """Host-pack (tiny) pattern words + valid mask for the SWAR kernel."""
-    P = patterns.shape[-1]
-    pat_words = encoding.pack_codes_u32(patterns)
+def _valid_mask(P: int, wp: int) -> np.ndarray:
+    """(1, Wp) low-bit-of-lane mask of the P valid pattern positions."""
     mask_codes = np.zeros(wp * 16, np.uint32)
     mask_codes[:P] = 1
-    valid_mask = encoding.pack_codes_u32(mask_codes[None, :])
-    return pat_words, valid_mask
+    return encoding.pack_codes_u32(mask_codes[None, :])
 
 
-def _pack_patterns_mxu(patterns: np.ndarray, p_chars: int, q_pad: int
+def _pack_patterns_swar(codes: np.ndarray, wp: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-pack (tiny) exact pattern words + valid mask (SWAR kernel)."""
+    return encoding.pack_codes_u32(codes), _valid_mask(codes.shape[-1], wp)
+
+
+def _pack_mask_planes(masks: np.ndarray, wp: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-pack accept masks into (Q, 4*Wp) uint32 bit-planes + valid mask.
+
+    Plane c has the low bit of lane i set iff code c is accepted at
+    pattern position i (``match_swar_masks`` layout).
+    """
+    planes = [encoding.pack_codes_u32(((masks >> c) & 1).astype(np.uint32))
+              for c in range(4)]
+    return (np.concatenate(planes, axis=-1),
+            _valid_mask(masks.shape[-1], wp))
+
+
+def _pack_patterns_mxu(masks: np.ndarray, p_chars: int, q_pad: int
                        ) -> np.ndarray:
-    """Host-pack (tiny) one-hot pattern matrix (p_chars*4, q_pad)."""
-    Q, P = patterns.shape
+    """Host-pack (tiny) multi-hot pattern matrix (p_chars*4, q_pad).
+
+    Column q gets a 1 at (position i, channel c) iff code c is accepted at
+    position i of pattern q -- one-hot for exact queries (bit-identical to
+    the historical packing), multi-hot for accept-set predicates.  The MXU
+    contraction itself is unchanged: wildcards are free here.
+    """
+    Q, P = masks.shape
     pat_mat = np.zeros((p_chars, 4, q_pad), np.float32)
-    pat_mat[np.arange(P)[:, None], patterns.T, np.arange(Q)[None, :]] = 1.0
+    bits = (masks[:, :, None] >> np.arange(4, dtype=np.uint8)) & 1
+    pat_mat[:P, :, :Q] = bits.astype(np.float32).transpose(1, 2, 0)
     return pat_mat.reshape(p_chars * 4, q_pad)
 
 
+class CompiledMatch:
+    """One ``MatchQuery`` lowered against one engine: reusable, immutable.
+
+    Construction does all per-query host work exactly once -- mode
+    resolution, planning (kernel + geometry), pattern packing (SWAR words
+    / bit-planes / MXU multi-hot matrix), row-subset validation and
+    padding.  ``run()`` then streams the engine's *current* resident
+    corpus through the lowered program, so one compiled query serves every
+    later call and every corpus generation (``set_rows`` content updates)
+    without re-planning or re-packing.  Obtain via ``MatchEngine.compile``
+    (cached by query content) and treat results as read-only.
+    """
+
+    __slots__ = ("engine", "query", "plan", "_packed", "_pats2d", "_sel",
+                 "_idx", "_k_eff", "_k_vec", "_thr_vec", "_empty")
+
+    def __init__(self, engine: "MatchEngine", query: MatchQuery):
+        self.engine = engine
+        self.query = query
+        corpus = engine.corpus
+
+        sel = query.rows
+        self._sel = None if sel is None else np.asarray(sel, np.int64)
+        self._empty = self._sel is not None and self._sel.size == 0
+        if self._empty:
+            # A legal query whose answer is no rows; geometry is still
+            # validated (pattern longer than fragment, empty pattern).
+            self.plan = engine._empty_plan(query)
+            self._packed = self._pats2d = self._idx = None
+            self._k_eff, self._k_vec, self._thr_vec = 0, None, None
+            return
+
+        n_rows = len(self._sel) if self._sel is not None else corpus.n_rows
+        self.plan = engine._plan_query(query, n_rows)
+        plan = self.plan
+
+        # Per-query reduction parameters (batched runs only).
+        k_vec = np.asarray(query.k if query.k else (10,), np.int64)
+        if k_vec.size != 1 and (plan.mode != "batched"
+                                or k_vec.size != plan.n_patterns):
+            raise ValueError("per-query k needs a batched query with one "
+                             "entry per pattern")
+        self._k_vec = k_vec
+        self._k_eff = int(k_vec.max())
+        thr_vec = None
+        if query.reduction == "threshold":
+            thr_vec = np.asarray(query.threshold, np.float64)
+            if plan.mode == "batched":
+                if thr_vec.size == 1:
+                    thr_vec = np.full(plan.n_patterns, thr_vec[0])
+                elif thr_vec.size != plan.n_patterns:
+                    raise ValueError("per-query thresholds need one entry "
+                                     "per pattern")
+            elif thr_vec.size != 1:
+                raise ValueError("per-query thresholds need a batched query")
+        self._thr_vec = thr_vec
+
+        # Pattern operands, packed once (the compile-time win: repeated
+        # runs skip all host-side pattern work).
+        masks2d = query.masks if len(query.shape) == 2 else \
+            query.masks[None, :]
+        if plan.predicate == "exact":
+            codes = query.codes
+            self._pats2d = codes if codes.ndim == 2 else codes[None, :]
+        else:
+            self._pats2d = masks2d
+        if plan.backend == "swar":
+            if plan.predicate == "accept":
+                pat_rows, valid = _pack_mask_planes(masks2d, plan.wp)
+            else:
+                pat_rows, valid = _pack_patterns_swar(self._pats2d, plan.wp)
+            # Upload once at compile time; run() chunks reuse the resident
+            # device operands.
+            self._packed = (jnp.asarray(pat_rows), jnp.asarray(valid))
+        elif plan.backend == "mxu":
+            self._packed = jnp.asarray(
+                _pack_patterns_mxu(masks2d, plan.p_chars_pad, plan.q_pad),
+                jnp.bfloat16)
+        else:
+            self._packed = None
+
+        if self._sel is not None:
+            if self._sel.min() < 0 or self._sel.max() >= corpus.n_rows:
+                # jnp gathers clamp out-of-range indices silently; fail
+                # loudly instead of returning the wrong rows' scores.
+                raise IndexError(
+                    f"rows must be in [0, {corpus.n_rows}), got "
+                    f"[{self._sel.min()}, {self._sel.max()}]")
+            R = len(self._sel)
+            R_pad = -(-R // corpus.row_pad) * corpus.row_pad
+            pad_idx = np.zeros(R_pad, np.int64)
+            pad_idx[:R] = self._sel
+            self._idx = jnp.asarray(pad_idx)
+        else:
+            self._idx = None
+
+    # -- execution ------------------------------------------------------------
+    def run(self) -> MatchResult:
+        """Execute against the engine's current corpus contents."""
+        if self._empty:
+            return self.engine._empty_result(self.query, self.plan)
+        engine, plan, query = self.engine, self.plan, self.query
+        reduction = query.reduction
+        if self._sel is not None:
+            R = len(self._sel)
+            R_pad = self._idx.shape[0]
+        else:
+            R = engine.corpus.n_rows
+            R_pad = engine.corpus.n_rows_padded
+        step = plan.chunk_rows
+        if engine._row_shards > 1:
+            tile = _swar.ROW_TILE * engine._row_shards
+            step = max(tile, (step // tile) * tile)
+
+        best_l: List[np.ndarray] = []
+        best_s: List[np.ndarray] = []
+        full: List[np.ndarray] = []
+        hit_rows: List[np.ndarray] = []
+        run_rows = run_scores = None      # running global top-k state
+        n_chunks = 0
+        thr_vec = self._thr_vec
+
+        for c0 in range(0, R_pad, step):
+            c1 = min(c0 + step, R_pad)
+            valid = min(c1, R) - c0       # rows in this chunk that are real
+            if valid <= 0:
+                break                     # pure-padding tail chunk
+            scores = engine._chunk_scores(plan, self._pats2d, c0, c1,
+                                          self._packed, self._idx)
+            scores = scores[:valid]
+            n_chunks += 1
+            if reduction == "full":
+                # Host materialization is the point of this reduction; the
+                # best reduction is derived from it at the end.
+                full.append(np.asarray(scores))
+                continue
+            # Fused per-chunk reduction: only (chunk, ...) lives at once.
+            bl = jnp.argmax(scores, axis=1)
+            bs = jnp.max(scores, axis=1)
+            best_l.append(np.asarray(bl))
+            best_s.append(np.asarray(bs))
+            # topk / threshold report *corpus* row ids; with a rows= subset
+            # that means mapping chunk positions through the selection.
+            if reduction == "threshold":
+                sc = np.asarray(scores)
+                if plan.mode == "batched":
+                    local = np.argwhere(sc >= thr_vec[None, None, :])
+                else:
+                    local = np.argwhere(sc >= float(thr_vec[0]))
+                if local.size:
+                    vals = sc[tuple(local.T)]
+                    if self._sel is not None:
+                        local[:, 0] = self._sel[local[:, 0] + c0]
+                    else:
+                        local[:, 0] += c0
+                    hit_rows.append(np.concatenate(
+                        [local, vals[:, None].astype(np.int64)], 1))
+            elif reduction == "topk":
+                if self._sel is not None:
+                    chunk_rows_ids = jnp.asarray(self._sel[c0:c0 + valid])
+                else:
+                    chunk_rows_ids = jnp.arange(c0, c0 + valid)
+                if bs.ndim == 2:          # batched: top-k per pattern
+                    chunk_rows_ids = jnp.broadcast_to(
+                        chunk_rows_ids[:, None], bs.shape)
+                cat_s = bs if run_scores is None else jnp.concatenate(
+                    [run_scores, bs], 0)
+                cat_r = chunk_rows_ids if run_rows is None else \
+                    jnp.concatenate([run_rows, chunk_rows_ids], 0)
+                kk = min(self._k_eff, cat_s.shape[0])
+                top_s, top_i = jax.lax.top_k(cat_s.T if cat_s.ndim == 2
+                                             else cat_s, kk)
+                if cat_s.ndim == 2:
+                    run_scores = top_s.T
+                    run_rows = jnp.take_along_axis(cat_r.T, top_i, 1).T
+                else:
+                    run_scores = top_s
+                    run_rows = cat_r[top_i]
+
+        if reduction == "full":
+            all_scores = np.concatenate(full, 0)
+            return MatchResult(plan=plan, best_locs=all_scores.argmax(1),
+                               best_scores=all_scores.max(1),
+                               scores=all_scores, n_chunks=n_chunks)
+        best_locs = np.concatenate(best_l, 0)
+        best_scores = np.concatenate(best_s, 0)
+        res = MatchResult(plan=plan, best_locs=best_locs,
+                          best_scores=best_scores, n_chunks=n_chunks)
+        if reduction == "threshold":
+            width = 3 + (1 if plan.mode == "batched" else 0)
+            res.hits = (np.concatenate(hit_rows, 0) if hit_rows
+                        else np.zeros((0, width), np.int64))
+        elif reduction == "topk":
+            res.topk_rows = np.asarray(run_rows)
+            res.topk_scores = np.asarray(run_scores)
+        return res
+
+    __call__ = run
+
+
 class MatchEngine:
-    """Planner + packed corpus + streaming executor in one object.
+    """Planner + packed corpus + query compiler + streaming executor.
 
     ``corpus`` may be a PackedCorpus or a raw (R, F) uint8 fragment matrix.
     ``mesh`` (optional) shards corpus rows over the mesh axes the ``rows``
     logical rule maps to; pass ``rules`` to use a non-default rule table.
+    ``compile(query)`` is the primary API; ``match`` / ``scores`` are
+    kwarg shims that build (and content-cache) the query for you.
     """
 
     def __init__(self, corpus: Union[PackedCorpus, np.ndarray], *,
                  planner: Optional[Planner] = None,
                  interpret: Optional[bool] = None,
-                 mesh: Optional[Mesh] = None, rules=None):
+                 mesh: Optional[Mesh] = None, rules=None,
+                 compile_cache_size: int = 128):
         n_corpus_rows = (corpus.n_rows if isinstance(corpus, PackedCorpus)
                          else np.asarray(corpus).shape[0])
         if n_corpus_rows < 1:
@@ -123,79 +362,118 @@ class MatchEngine:
                                        row_pad=row_pad)
         self.planner = planner or Planner()
         self.interpret = default_interpret() if interpret is None else interpret
+        self.compile_cache_size = int(compile_cache_size)
+        self._compiled: "OrderedDict[MatchQuery, CompiledMatch]" = \
+            OrderedDict()
+
+    # -- compilation ----------------------------------------------------------
+    def compile(self, query: MatchQuery, *,
+                cached: bool = True) -> CompiledMatch:
+        """Lower a query once (plan + pack); LRU-cached by query content.
+
+        The returned ``CompiledMatch`` is reusable across calls and corpus
+        generations -- the warm path pays zero planning or pattern-packing
+        work.  ``cached=False`` forces a fresh lowering (benchmarks use it
+        to measure exactly that work).
+        """
+        if not isinstance(query, MatchQuery):
+            raise TypeError("compile() takes a MatchQuery; use "
+                            "MatchQuery.exact/from_masks/iupac or the "
+                            "match(patterns, ...) shim")
+        if cached:
+            hit = self._compiled.get(query)
+            if hit is not None:
+                self._compiled.move_to_end(query)
+                return hit
+        cm = CompiledMatch(self, query)
+        if cached:
+            self._compiled[query] = cm
+            while len(self._compiled) > self.compile_cache_size:
+                self._compiled.popitem(last=False)
+        return cm
 
     # -- planning -------------------------------------------------------------
-    def _infer_mode(self, patterns: np.ndarray, mode: Optional[str],
-                    backend: Optional[str], n_rows: int) -> str:
-        if patterns.ndim == 1:
-            if mode not in (None, "shared"):
-                raise ValueError(f"1-D patterns are 'shared', got mode={mode!r}")
+    def _infer_mode(self, query: MatchQuery, n_rows: int) -> str:
+        ndim = len(query.shape)
+        if ndim == 1:
             return "shared"
+        mode = query.mode
         if mode is not None:
-            if mode not in ("per_row", "batched"):
-                raise ValueError(f"2-D patterns need mode 'per_row' or "
-                                 f"'batched', got {mode!r}")
-            if mode == "per_row" and patterns.shape[0] != n_rows:
+            if mode == "per_row" and query.shape[0] != n_rows:
                 raise ValueError("per_row patterns must have one row per "
                                  "corpus row")
             return mode
         # (Q, P) with Q == n_rows is ambiguous; resolve like the historical
         # ops API: the mxu kernel is inherently batched, everything else
         # reads a row-count match as per-row.  Pass mode= to be explicit.
-        if backend == "mxu":
+        if query.backend == "mxu":
             return "batched"
-        return "per_row" if patterns.shape[0] == n_rows else "batched"
+        return "per_row" if query.shape[0] == n_rows else "batched"
 
-    def plan(self, patterns: np.ndarray, *, backend: Optional[str] = None,
-             mode: Optional[str] = None, rows: Optional[np.ndarray] = None,
-             chunk_rows: Optional[int] = None) -> Plan:
-        patterns = np.asarray(patterns, np.uint8)
-        n_rows = self.corpus.n_rows if rows is None else len(rows)
-        mode = self._infer_mode(patterns, mode, backend, n_rows)
+    def _plan_query(self, query: MatchQuery, n_rows: int) -> Plan:
+        mode = self._infer_mode(query, n_rows)
         return self.planner.plan(
             n_rows=n_rows,
             fragment_chars=self.corpus.fragment_chars,
-            pattern_chars=patterns.shape[-1],
-            n_patterns=patterns.shape[0] if mode == "batched" else None,
-            per_row=mode == "per_row", backend=backend, chunk_rows=chunk_rows)
+            pattern_chars=query.pattern_chars,
+            n_patterns=query.n_patterns if mode == "batched" else None,
+            per_row=mode == "per_row", backend=query.backend,
+            chunk_rows=query.chunk_rows, predicate=query.predicate)
+
+    def plan(self, patterns, *, backend=_UNSET, mode=_UNSET, rows=_UNSET,
+             chunk_rows=_UNSET) -> Plan:
+        """Plan without executing (kwarg shim over ``_plan_query``)."""
+        query = as_query(patterns, backend=backend, mode=mode, rows=rows,
+                         chunk_rows=chunk_rows)
+        n_rows = (len(query.rows) if query.rows is not None
+                  else self.corpus.n_rows)
+        return self._plan_query(query, n_rows)
 
     # -- kernel dispatch (one chunk, pure device) -----------------------------
-    def _swar_chunk(self, words: jnp.ndarray, pat_words: jnp.ndarray,
+    def _shard_wrap(self, call, pat_spec=None):
+        if self.mesh is None or self._row_axes is None:
+            return call
+        from jax.experimental.shard_map import shard_map
+        spec = PartitionSpec(self._row_axes if len(self._row_axes) > 1
+                             else self._row_axes[0])
+        return shard_map(call, mesh=self.mesh,
+                         in_specs=(spec, spec if pat_spec is None
+                                   else pat_spec),
+                         out_specs=spec, check_rep=False)
+
+    def _swar_chunk(self, words: jnp.ndarray, pat_rows: jnp.ndarray,
                     mask: jnp.ndarray, plan: Plan) -> jnp.ndarray:
-        def call(w, p):
-            return _swar.match_swar(w, p, mask, n_locs=plan.n_locs,
-                                    pattern_chars=plan.pattern_chars,
-                                    interpret=self.interpret)
-        if self.mesh is not None and self._row_axes is not None:
-            from jax.experimental.shard_map import shard_map
-            spec = PartitionSpec(self._row_axes if len(self._row_axes) > 1
-                                 else self._row_axes[0])
-            call = shard_map(call, mesh=self.mesh, in_specs=(spec, spec),
-                             out_specs=spec, check_rep=False)
-        return call(words, pat_words)
+        if plan.predicate == "accept":
+            def call(w, p):
+                return _swar.match_swar_masks(
+                    w, p, mask, n_locs=plan.n_locs,
+                    pattern_chars=plan.pattern_chars,
+                    interpret=self.interpret)
+        else:
+            def call(w, p):
+                return _swar.match_swar(w, p, mask, n_locs=plan.n_locs,
+                                        pattern_chars=plan.pattern_chars,
+                                        interpret=self.interpret)
+        return self._shard_wrap(call)(words, pat_rows)
 
     def _mxu_chunk(self, ref_flat: jnp.ndarray, pat_mat: jnp.ndarray,
                    plan: Plan) -> jnp.ndarray:
         def call(r, p):
             return _mxu.match_mxu(r, p, l_pad=plan.l_pad,
                                   interpret=self.interpret)
-        if self.mesh is not None and self._row_axes is not None:
-            from jax.experimental.shard_map import shard_map
-            spec = PartitionSpec(self._row_axes if len(self._row_axes) > 1
-                                 else self._row_axes[0])
-            call = shard_map(call, mesh=self.mesh,
-                             in_specs=(spec, PartitionSpec(None, None)),
-                             out_specs=spec, check_rep=False)
-        return call(ref_flat, pat_mat)
+        return self._shard_wrap(call, PartitionSpec(None, None))(
+            ref_flat, pat_mat)
 
-    def _chunk_scores(self, plan: Plan, patterns: np.ndarray, c0: int,
+    def _chunk_scores(self, plan: Plan, pats2d: np.ndarray, c0: int,
                       c1: int, packed, idx: Optional[jnp.ndarray]
                       ) -> jnp.ndarray:
         """Scores for query rows [c0, c1): (rows, L) or (rows, L, Q).
 
-        ``idx`` (padded corpus-row indices) is set for row-subset queries:
-        the chunk is gathered from the resident device forms instead of
-        sliced -- still no host repacking.
+        ``pats2d`` is the 2-D pattern operand for the ref backend -- codes
+        for exact plans, accept masks for accept plans.  ``idx`` (padded
+        corpus-row indices) is set for row-subset queries: the chunk is
+        gathered from the resident device forms instead of sliced -- still
+        no host repacking.
         """
         if plan.backend == "ref":
             if idx is not None:
@@ -204,22 +482,23 @@ class MatchEngine:
             else:
                 frags = jnp.asarray(self.corpus.fragments[c0:min(c1,
                                     self.corpus.n_rows)])
+            fn = (_kref.match_scores_masks_ref if plan.predicate == "accept"
+                  else _kref.match_scores_ref)
             if plan.mode == "batched":
-                outs = [_kref.match_scores_ref(frags, patterns[q])
-                        for q in range(plan.n_patterns)]
+                outs = [fn(frags, pats2d[q]) for q in range(plan.n_patterns)]
                 return jnp.stack(outs, -1)
-            pats = patterns[c0:c1] if plan.mode == "per_row" else patterns
-            return _kref.match_scores_ref(frags, pats)
+            pats = pats2d[c0:c1] if plan.mode == "per_row" else pats2d
+            return fn(frags, pats)
 
         if plan.backend == "swar":
             base = self.corpus.swar_words(plan.need_words)
             words = base[idx[c0:c1]] if idx is not None else base[c0:c1]
-            pat_words, mask = packed
+            pat_rows, mask = packed
+            pat_rows = jnp.asarray(pat_rows)   # (Q, Wp) words or (Q, 4*Wp)
             mask = jnp.asarray(mask)
             if plan.mode == "per_row":
-                pw = jnp.asarray(pat_words)
                 r_pad = words.shape[0]
-                rows = pw[c0:min(c1, pw.shape[0])]
+                rows = pat_rows[c0:min(c1, pat_rows.shape[0])]
                 if rows.shape[0] < r_pad:
                     rows = jnp.concatenate(
                         [rows, jnp.zeros((r_pad - rows.shape[0],
@@ -233,11 +512,11 @@ class MatchEngine:
                 Q = plan.n_patterns
                 Rc = words.shape[0]
                 words_t = jnp.tile(words, (Q, 1))
-                pw_t = jnp.repeat(jnp.asarray(pat_words), Rc, axis=0)
+                pw_t = jnp.repeat(pat_rows, Rc, axis=0)
                 out = self._swar_chunk(words_t, pw_t, mask, plan)
                 return out.reshape(Q, Rc, plan.n_locs).transpose(1, 2, 0)
-            pw = jnp.broadcast_to(jnp.asarray(pat_words[0])[None, :],
-                                  (words.shape[0], plan.wp))
+            pw = jnp.broadcast_to(pat_rows[0][None, :],
+                                  (words.shape[0], pat_rows.shape[1]))
             return self._swar_chunk(words, pw, mask, plan)
 
         # mxu
@@ -249,206 +528,77 @@ class MatchEngine:
         return scores[:, :, 0] if plan.mode != "batched" else scores
 
     # -- empty subsets --------------------------------------------------------
-    def _empty_result(self, patterns: np.ndarray, mode: Optional[str],
-                      reduction: str) -> MatchResult:
-        """Well-formed all-empty MatchResult for a zero-row subset query.
+    def _empty_plan(self, query: MatchQuery) -> Plan:
+        """Zero-row plan for an empty row-subset query (geometry checked).
 
         The planner (rightly) refuses zero-row workloads and the streaming
         loop would otherwise ``np.concatenate`` empty chunk lists; an empty
         subset is a legal query whose answer is simply no rows.
         """
-        P = int(patterns.shape[-1])
+        P = query.pattern_chars
         F = self.corpus.fragment_chars
         if P < 1:
             raise ValueError("pattern must have at least one character")
         L = F - P + 1
         if L <= 0:
             raise ValueError("pattern longer than fragment")
-        if patterns.ndim == 1:
-            mode_r, Q = "shared", 1
+        if len(query.shape) == 1:
+            mode, Q = "shared", 1
         else:
-            mode_r = mode if mode is not None else "batched"
-            Q = int(patterns.shape[0])
-        batched = mode_r == "batched"
-        plan = Plan(backend="ref", mode=mode_r, n_rows=0, fragment_chars=F,
-                    pattern_chars=P, n_patterns=Q if batched else 1,
-                    n_locs=L, chunk_rows=0, reason="empty row subset")
+            mode = query.mode if query.mode is not None else "batched"
+            Q = query.n_patterns
+        return Plan(backend="ref", mode=mode, n_rows=0, fragment_chars=F,
+                    pattern_chars=P, n_patterns=Q if mode == "batched"
+                    else 1, n_locs=L, chunk_rows=0,
+                    reason="empty row subset", predicate=query.predicate)
+
+    def _empty_result(self, query: MatchQuery, plan: Plan) -> MatchResult:
+        """Well-formed all-empty MatchResult for a zero-row subset query."""
+        batched = plan.mode == "batched"
+        Q = plan.n_patterns
         shape0 = (0, Q) if batched else (0,)
         res = MatchResult(plan=plan,
                           best_locs=np.zeros(shape0, np.int32),
                           best_scores=np.zeros(shape0, np.int32))
-        if reduction == "full":
-            res.scores = np.zeros((0, L, Q) if batched else (0, L), np.int32)
-        elif reduction == "topk":
+        if query.reduction == "full":
+            res.scores = np.zeros((0, plan.n_locs, Q) if batched
+                                  else (0, plan.n_locs), np.int32)
+        elif query.reduction == "topk":
             res.topk_rows = np.zeros(shape0, np.int32)
             res.topk_scores = np.zeros(shape0, np.int32)
-        elif reduction == "threshold":
+        elif query.reduction == "threshold":
             res.hits = np.zeros((0, 4 if batched else 3), np.int64)
         return res
 
     # -- execution ------------------------------------------------------------
-    def match(self, patterns: np.ndarray, *, backend: Optional[str] = None,
-              mode: Optional[str] = None, rows: Optional[np.ndarray] = None,
-              reduction: str = "best", k=10,
-              threshold=None,
-              chunk_rows: Optional[int] = None) -> MatchResult:
+    def match(self, patterns, *, backend=_UNSET, mode=_UNSET, rows=_UNSET,
+              reduction=_UNSET, k=_UNSET, threshold=_UNSET,
+              chunk_rows=_UNSET) -> MatchResult:
         """Run one query; see module docstring for reductions.
 
-        patterns: (P,) shared, (R, P) per-row, or (Q, P) batched uint8.
-        ``mode`` disambiguates 2-D patterns ("per_row" / "batched") when the
-        shape alone is ambiguous.  ``rows`` restricts the query to a subset
-        of corpus rows (device gather from the resident forms; results are
-        in subset order; an empty subset yields an all-empty result).
-        ``threshold`` is in characters (absolute score).  In batched mode
-        ``k`` and ``threshold`` may be per-query sequences of length Q (the
-        top-k merge runs at max(k); slice ``topk_rows[:k_q, q]`` per query).
+        ``patterns`` is either a ``MatchQuery`` (the declarative API; any
+        explicit kwarg alongside it is rejected) or a uint8 code array --
+        (P,) shared, (R, P) per-row, (Q, P) batched -- with the legacy
+        kwargs (defaults: reduction="best", k=10), which this shim folds
+        into a ``MatchQuery`` and compiles (content-cached, so repeated
+        calls hit the warm path).  ``rows`` restricts the query to a
+        subset of corpus rows (device gather from the resident forms;
+        results are in subset order; an empty subset yields an all-empty
+        result).  ``threshold`` is in characters (absolute score).  In
+        batched mode ``k`` and ``threshold`` may be per-query sequences of
+        length Q (the top-k merge runs at max(k); slice
+        ``topk_rows[:k_q, q]`` per query).
         """
-        if reduction not in ("best", "topk", "threshold", "full"):
-            raise ValueError(f"unknown reduction {reduction!r}")
-        if reduction == "threshold" and threshold is None:
-            raise ValueError("reduction='threshold' requires a threshold")
-        patterns = np.asarray(patterns, np.uint8)
-        sel = (np.asarray(rows, np.int64).reshape(-1) if rows is not None
-               else None)
-        if sel is not None and sel.size == 0:
-            return self._empty_result(patterns, mode, reduction)
-        plan = self.plan(patterns, backend=backend, mode=mode, rows=rows,
+        query = as_query(patterns, backend=backend, mode=mode, rows=rows,
+                         reduction=reduction, k=k, threshold=threshold,
                          chunk_rows=chunk_rows)
-        pats2d = patterns if patterns.ndim == 2 else patterns[None, :]
+        return self.compile(query).run()
 
-        # Per-query reduction parameters (batched runs only).
-        k_vec = np.atleast_1d(np.asarray(k, np.int64))
-        if k_vec.size != 1 and (plan.mode != "batched"
-                                or k_vec.size != plan.n_patterns):
-            raise ValueError("per-query k needs a batched query with one "
-                             "entry per pattern")
-        k_eff = int(k_vec.max())
-        thr_vec = None
-        if reduction == "threshold":
-            thr_vec = np.asarray(threshold, np.float64).reshape(-1)
-            if plan.mode == "batched":
-                if thr_vec.size == 1:
-                    thr_vec = np.full(plan.n_patterns, thr_vec[0])
-                elif thr_vec.size != plan.n_patterns:
-                    raise ValueError("per-query thresholds need one entry "
-                                     "per pattern")
-            elif thr_vec.size != 1:
-                raise ValueError("per-query thresholds need a batched query")
-
-        if plan.backend == "swar":
-            packed = _pack_pattern_swar(pats2d, plan.wp)
-        elif plan.backend == "mxu":
-            packed = jnp.asarray(
-                _pack_patterns_mxu(pats2d, plan.p_chars_pad, plan.q_pad),
-                jnp.bfloat16)
-        else:
-            packed = None
-
-        if sel is not None:
-            if sel.min() < 0 or sel.max() >= self.corpus.n_rows:
-                # jnp gathers clamp out-of-range indices silently; fail
-                # loudly instead of returning the wrong rows' scores.
-                raise IndexError(
-                    f"rows must be in [0, {self.corpus.n_rows}), got "
-                    f"[{sel.min()}, {sel.max()}]")
-            R = len(sel)
-            R_pad = -(-R // self.corpus.row_pad) * self.corpus.row_pad
-            pad_idx = np.zeros(R_pad, np.int64)
-            pad_idx[:R] = sel
-            idx = jnp.asarray(pad_idx)
-        else:
-            R = self.corpus.n_rows
-            R_pad = self.corpus.n_rows_padded
-            idx = None
-        step = plan.chunk_rows
-        if self._row_shards > 1:
-            tile = _swar.ROW_TILE * self._row_shards
-            step = max(tile, (step // tile) * tile)
-
-        best_l: List[np.ndarray] = []
-        best_s: List[np.ndarray] = []
-        full: List[np.ndarray] = []
-        hit_rows: List[np.ndarray] = []
-        run_rows = run_scores = None      # running global top-k state
-        n_chunks = 0
-
-        for c0 in range(0, R_pad, step):
-            c1 = min(c0 + step, R_pad)
-            valid = min(c1, R) - c0       # rows in this chunk that are real
-            if valid <= 0:
-                break                     # pure-padding tail chunk
-            scores = self._chunk_scores(plan, pats2d, c0, c1, packed, idx)
-            scores = scores[:valid]
-            n_chunks += 1
-            if reduction == "full":
-                # Host materialization is the point of this reduction; the
-                # best reduction is derived from it at the end.
-                full.append(np.asarray(scores))
-                continue
-            # Fused per-chunk reduction: only (chunk, ...) lives at once.
-            bl = jnp.argmax(scores, axis=1)
-            bs = jnp.max(scores, axis=1)
-            best_l.append(np.asarray(bl))
-            best_s.append(np.asarray(bs))
-            # topk / threshold report *corpus* row ids; with a rows= subset
-            # that means mapping chunk positions through the selection.
-            if reduction == "threshold":
-                sc = np.asarray(scores)
-                if plan.mode == "batched":
-                    local = np.argwhere(sc >= thr_vec[None, None, :])
-                else:
-                    local = np.argwhere(sc >= float(thr_vec[0]))
-                if local.size:
-                    vals = sc[tuple(local.T)]
-                    if rows is not None:
-                        local[:, 0] = sel[local[:, 0] + c0]
-                    else:
-                        local[:, 0] += c0
-                    hit_rows.append(np.concatenate(
-                        [local, vals[:, None].astype(np.int64)], 1))
-            elif reduction == "topk":
-                if rows is not None:
-                    chunk_rows_ids = jnp.asarray(sel[c0:c0 + valid])
-                else:
-                    chunk_rows_ids = jnp.arange(c0, c0 + valid)
-                if bs.ndim == 2:          # batched: top-k per pattern
-                    chunk_rows_ids = jnp.broadcast_to(
-                        chunk_rows_ids[:, None], bs.shape)
-                cat_s = bs if run_scores is None else jnp.concatenate(
-                    [run_scores, bs], 0)
-                cat_r = chunk_rows_ids if run_rows is None else \
-                    jnp.concatenate([run_rows, chunk_rows_ids], 0)
-                kk = min(k_eff, cat_s.shape[0])
-                top_s, top_i = jax.lax.top_k(cat_s.T if cat_s.ndim == 2
-                                             else cat_s, kk)
-                if cat_s.ndim == 2:
-                    run_scores = top_s.T
-                    run_rows = jnp.take_along_axis(cat_r.T, top_i, 1).T
-                else:
-                    run_scores = top_s
-                    run_rows = cat_r[top_i]
-
-        if reduction == "full":
-            all_scores = np.concatenate(full, 0)
-            return MatchResult(plan=plan, best_locs=all_scores.argmax(1),
-                               best_scores=all_scores.max(1),
-                               scores=all_scores, n_chunks=n_chunks)
-        best_locs = np.concatenate(best_l, 0)
-        best_scores = np.concatenate(best_s, 0)
-        res = MatchResult(plan=plan, best_locs=best_locs,
-                          best_scores=best_scores, n_chunks=n_chunks)
-        if reduction == "threshold":
-            width = 3 + (1 if plan.mode == "batched" else 0)
-            res.hits = (np.concatenate(hit_rows, 0) if hit_rows
-                        else np.zeros((0, width), np.int64))
-        elif reduction == "topk":
-            res.topk_rows = np.asarray(run_rows)
-            res.topk_scores = np.asarray(run_scores)
-        return res
-
-    def scores(self, patterns: np.ndarray, *, backend: Optional[str] = None,
-               mode: Optional[str] = None, rows: Optional[np.ndarray] = None,
-               chunk_rows: Optional[int] = None) -> np.ndarray:
+    def scores(self, patterns, *, backend=_UNSET, mode=_UNSET, rows=_UNSET,
+               chunk_rows=_UNSET) -> np.ndarray:
         """Full materialized score tensor (compat path for small problems)."""
-        return self.match(patterns, backend=backend, mode=mode, rows=rows,
-                          reduction="full", chunk_rows=chunk_rows).scores
+        query = as_query(patterns, backend=backend, mode=mode, rows=rows,
+                         chunk_rows=chunk_rows)
+        query = dataclasses.replace(query, reduction="full", k=(),
+                                    threshold=None)
+        return self.match(query).scores

@@ -35,6 +35,9 @@ DISPATCH_OVERHEAD_S = 5e-6
 TINY_OPS = 4096
 # SWAR integer ops per (row, loc, word): shift/or/xor/and + popcount tree.
 SWAR_OPS_PER_WORD = 12
+# Accept-set SWAR variant: four lane-equality tests + plane ANDs replace
+# the single XOR (see match_swar_masks) -- ~2.5x the integer work.
+SWAR_OPS_PER_WORD_MASKS = 30
 # The SWAR kernel runs on the VPU, whose integer throughput is a small
 # fraction of MXU bf16 peak (8x128 lanes vs. the systolic array); this
 # divisor calibrates swar compute against ``peak_bf16_flops``.
@@ -68,6 +71,8 @@ class Plan:
     chunk_rows: int = 0         # rows per executor chunk (mult of row tile)
     est_seconds: float = 0.0    # roofline estimate for the whole query
     reason: str = ""            # human-readable selection rationale
+    # Predicate.
+    predicate: str = "exact"    # "exact" | "accept" (accept-set masks)
 
 
 def _swar_geometry(P: int, L: int) -> tuple[int, int]:
@@ -110,18 +115,25 @@ class Planner:
         self.memory_budget_bytes = memory_budget_bytes
 
     # -- cost terms -----------------------------------------------------------
-    def swar_seconds(self, R: int, L: int, P: int, Q: int = 1) -> float:
+    def swar_seconds(self, R: int, L: int, P: int, Q: int = 1,
+                     predicate: str = "exact") -> float:
         """One fused SWAR dispatch over Q pattern sets.
 
         The executor tiles the corpus chunk Q times and rides each pattern
         as a per-row pattern, so a batched query is a single launch whose
         compute and memory (the corpus is re-read per pattern) scale with
         Q -- where the MXU formulation amortizes the reference read across
-        patterns instead.
+        patterns instead.  Accept-set predicates pay ~2.5x the integer ops
+        (four lane-equality tests per word) and read 4 plane words per
+        pattern word -- the MXU, where wildcards are free, wins sooner.
         """
         wp, need = _swar_geometry(P, L)
-        ops = Q * R * L * wp * SWAR_OPS_PER_WORD
-        bytes_hbm = Q * (R * need * 4 + R * wp * 4 + R * L * 4)
+        if predicate == "accept":
+            ops_per_word, pat_words = SWAR_OPS_PER_WORD_MASKS, 4 * wp
+        else:
+            ops_per_word, pat_words = SWAR_OPS_PER_WORD, wp
+        ops = Q * R * L * wp * ops_per_word
+        bytes_hbm = Q * (R * need * 4 + R * pat_words * 4 + R * L * 4)
         t_compute = ops / (self.roofline.peak_bf16_flops / VPU_SLOWDOWN)
         t_mem = bytes_hbm / self.roofline.hbm_bw
         return max(t_compute, t_mem) + DISPATCH_OVERHEAD_S
@@ -131,7 +143,13 @@ class Planner:
         return Q * (R * L * P / REF_OPS_PER_S + REF_CALL_OVERHEAD_S)
 
     def mxu_seconds(self, R: int, L: int, P: int, Q: int = 1) -> float:
-        """One batched MXU pass over all Q patterns."""
+        """One batched MXU pass over all Q patterns.
+
+        Identical for exact and accept-set predicates: a wildcard is just a
+        multi-hot column in the pattern matrix, same contraction shape --
+        the "wildcards are nearly free on the MXU" property the planner
+        exploits.
+        """
         l_pad, p_chars, q_pad, f_chars = _mxu_geometry(P, L, Q)
         n_chunks = p_chars // _mxu.CHARS_PER_CHUNK
         flops = R * l_pad * (n_chunks * _mxu.K_CHUNK) * 2 * q_pad
@@ -155,7 +173,8 @@ class Planner:
     def plan(self, *, n_rows: int, fragment_chars: int, pattern_chars: int,
              n_patterns: Optional[int] = None, per_row: bool = False,
              backend: Optional[str] = None,
-             chunk_rows: Optional[int] = None) -> Plan:
+             chunk_rows: Optional[int] = None,
+             predicate: str = "exact") -> Plan:
         R, F, P = n_rows, fragment_chars, pattern_chars
         if R < 1:
             raise ValueError("corpus has no rows")
@@ -166,6 +185,8 @@ class Planner:
             raise ValueError("pattern longer than fragment")
         if per_row and n_patterns is not None:
             raise ValueError("per_row and batched are mutually exclusive")
+        if predicate not in ("exact", "accept"):
+            raise ValueError(f"unknown predicate {predicate!r}")
         Q = 1 if n_patterns is None else int(n_patterns)
         mode = "per_row" if per_row else ("batched" if n_patterns is not None
                                           else "shared")
@@ -174,7 +195,7 @@ class Planner:
         if backend == "mxu" and per_row:
             raise ValueError("mxu kernel has no per-row-pattern formulation")
 
-        t_swar = self.swar_seconds(R, L, P, Q)
+        t_swar = self.swar_seconds(R, L, P, Q, predicate)
         t_mxu = self.mxu_seconds(R, L, P, Q)
 
         if backend is not None:
@@ -199,8 +220,10 @@ class Planner:
 
         if chosen == "swar":
             # Batched swar tiles each chunk Q times (one fused launch), so
-            # a chunk's footprint scales with Q.
-            bytes_per_row = (need * 4 + wp * 4 + L * 4) * Q
+            # a chunk's footprint scales with Q; accept-set planes are 4
+            # words per pattern word.
+            pat_words = 4 * wp if predicate == "accept" else wp
+            bytes_per_row = (need * 4 + pat_words * 4 + L * 4) * Q
             row_tile = _swar.ROW_TILE
             est = t_swar
         elif chosen == "mxu":
@@ -217,13 +240,14 @@ class Planner:
                     pattern_chars=P, n_patterns=Q, n_locs=L, wp=wp,
                     need_words=need, l_pad=l_pad, p_chars_pad=p_chars,
                     q_pad=q_pad, f_chars=f_chars, chunk_rows=chunk,
-                    est_seconds=est, reason=reason)
+                    est_seconds=est, reason=reason, predicate=predicate)
 
     # -- batch pricing --------------------------------------------------------
     def plan_batch(self, *, n_rows: int, fragment_chars: int,
                    pattern_chars: int, n_queries: int,
                    backend: Optional[str] = None,
-                   chunk_rows: Optional[int] = None) -> BatchPlan:
+                   chunk_rows: Optional[int] = None,
+                   predicate: str = "exact") -> BatchPlan:
         """Price Q compatible shared-mode queries: coalesced vs. sequential.
 
         Sequential is Q independent single-pattern launches (each paying
@@ -237,7 +261,7 @@ class Planner:
             raise ValueError("n_queries must be >= 1")
         single = self.plan(n_rows=n_rows, fragment_chars=fragment_chars,
                            pattern_chars=pattern_chars, backend=backend,
-                           chunk_rows=chunk_rows)
+                           chunk_rows=chunk_rows, predicate=predicate)
         if n_queries == 1:
             return BatchPlan(coalesced=False, plan=single, n_queries=1,
                              est_coalesced_s=single.est_seconds,
@@ -246,7 +270,7 @@ class Planner:
         batched = self.plan(n_rows=n_rows, fragment_chars=fragment_chars,
                             pattern_chars=pattern_chars,
                             n_patterns=n_queries, backend=backend,
-                            chunk_rows=chunk_rows)
+                            chunk_rows=chunk_rows, predicate=predicate)
         est_seq = n_queries * single.est_seconds
         est_co = batched.est_seconds
         coalesced = est_co <= est_seq

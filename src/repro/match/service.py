@@ -11,18 +11,23 @@ reference in lock step (Sec. 3.4); the service is the TPU analogue:
   ``MatchTicket``; ``tick`` drains the queue once.  The service is
   cooperative (no threads): callers drive it via ``tick`` / ``flush`` /
   ``MatchTicket.wait``.
+* **Declarative requests.**  Every submission is normalized to a frozen
+  ``MatchQuery`` at the door (legacy kwargs ride the ``as_query`` shim),
+  so validation happens at submit time and both the result cache and the
+  coalescing groups key off the query IR itself (content equality;
+  ``MatchQuery.digest`` is the external spelling), not an ad-hoc kwarg
+  tuple.
 * **Coalescing.**  Pending shared-mode queries that are compatible -- same
   corpus generation (always true within one tick), same pattern length,
-  same reduction, same row subset (by content), same backend override --
-  are grouped,
-  priced by ``Planner.plan_batch`` (one fused ``mode="batched"`` launch
-  vs. Q sequential launches), and executed the cheaper way.  Per-request
-  results are scattered back from the batched tensors, bit-identical to
-  what Q separate ``MatchEngine.match`` calls would return.
-* **Result cache.**  An LRU keyed by (pattern bytes, reduction,
-  rows-subset bytes, k, threshold, backend).  The cache is dropped whenever
-  ``PackedCorpus.generation`` changes (``set_rows`` / ``invalidate``), so
-  a row write never serves stale scores.
+  same predicate kind, same reduction, same row subset (by content), same
+  backend override -- are grouped, priced by ``Planner.plan_batch`` (one
+  fused ``mode="batched"`` launch vs. Q sequential launches), and executed
+  the cheaper way.  Per-request results are scattered back from the
+  batched tensors, bit-identical to what Q separate ``MatchEngine.match``
+  calls would return.
+* **Result cache.**  An LRU keyed by the query.  The cache is dropped
+  whenever ``PackedCorpus.generation`` changes (``set_rows`` /
+  ``invalidate``), so a row write never serves stale scores.
 * **Stats.**  Per-request latency plus launch/coalescing/cache counters;
   ``ServiceStats.snapshot()`` is what the service benchmark and the
   launcher report.
@@ -39,8 +44,7 @@ import numpy as np
 
 from .engine import MatchEngine, MatchResult
 from .planner import BatchPlan
-
-REDUCTIONS = ("best", "topk", "threshold", "full")
+from .query import _UNSET, MatchQuery, as_query
 
 
 @dataclasses.dataclass
@@ -124,15 +128,8 @@ class MatchTicket:
 @dataclasses.dataclass
 class _Pending:
     ticket: MatchTicket
-    patterns: np.ndarray
-    reduction: str
-    k: Tuple[int, ...]                 # normalized; len 1 unless per-query
-    threshold: Optional[Tuple[float, ...]]
-    rows: Optional[np.ndarray]
-    backend: Optional[str]
-    mode: Optional[str]
+    query: MatchQuery
     t_submit: float
-    cache_key: Tuple
     group_key: Optional[Tuple]         # None -> not coalescible
 
 
@@ -149,60 +146,44 @@ class MatchService:
         self.cache_size = int(cache_size)
         self.stats = ServiceStats()
         self._queue: List[_Pending] = []
-        self._cache: "OrderedDict[Tuple, MatchResult]" = OrderedDict()
+        self._cache: "OrderedDict[MatchQuery, MatchResult]" = OrderedDict()
         self._cache_generation = engine.corpus.generation
 
     # -- submission -----------------------------------------------------------
-    def submit(self, patterns: np.ndarray, *, reduction: str = "best",
-               k=10, threshold=None, rows: Optional[np.ndarray] = None,
-               backend: Optional[str] = None,
-               mode: Optional[str] = None) -> MatchTicket:
+    def submit(self, patterns, *, reduction=_UNSET, k=_UNSET,
+               threshold=_UNSET, rows=_UNSET, backend=_UNSET,
+               mode=_UNSET) -> MatchTicket:
         """Enqueue one query; returns a ticket (drive ``tick`` to fill it).
 
-        Same query surface as ``MatchEngine.match``.  Only 1-D shared-mode
-        patterns coalesce; 2-D (per-row / batched) queries pass through as
-        singleton launches.
+        ``patterns`` is a ``MatchQuery`` (any explicit kwarg alongside it
+        is rejected) or a uint8 code array with the legacy kwargs
+        (defaults: reduction="best", k=10; normalized through
+        ``as_query``, so malformed queries -- unknown reduction,
+        out-of-range codes -- fail *here*, at submit).  Only shared-mode
+        (1-D pattern) queries coalesce; 2-D (per-row / batched) queries
+        pass through as singleton launches.
         """
-        if reduction not in REDUCTIONS:
-            raise ValueError(f"unknown reduction {reduction!r}")
-        if reduction == "threshold" and threshold is None:
-            raise ValueError("reduction='threshold' requires a threshold")
-        patterns = np.asarray(patterns, np.uint8)
-        if patterns.ndim not in (1, 2):
-            raise ValueError("patterns must be 1-D (shared) or 2-D")
-        if patterns.ndim == 1 and mode == "shared":
-            mode = None                # explicit "shared" == the default
-        k_norm = tuple(int(x) for x in np.atleast_1d(np.asarray(k)))
-        thr_norm = (tuple(float(x) for x in
-                          np.atleast_1d(np.asarray(threshold, np.float64)))
-                    if threshold is not None else None)
-        sel = (np.asarray(rows, np.int64).reshape(-1) if rows is not None
-               else None)
-        # Keyed by the subset bytes themselves, like the pattern bytes: a
-        # hash collision here would silently coalesce or cache-serve the
-        # wrong rows' scores.
-        rows_key = sel.tobytes() if sel is not None else None
-        cache_key = (patterns.tobytes(), patterns.shape, reduction,
-                     rows_key, k_norm if reduction == "topk" else None,
-                     thr_norm, backend, mode)
-        coalescible = (patterns.ndim == 1 and mode is None
-                       and len(k_norm) == 1
-                       and (thr_norm is None or len(thr_norm) == 1))
-        group_key = ((patterns.shape[-1], reduction, rows_key, backend)
+        query = as_query(patterns, reduction=reduction, k=k,
+                         threshold=threshold, rows=rows, backend=backend,
+                         mode=mode)
+        # Coalescing key straight off the IR: 1-D queries whose fused
+        # batched execution is well-defined group by everything that must
+        # agree for one launch to serve them all.  Predicate kind is part
+        # of the key so exact groups keep riding the exact kernels.
+        coalescible = len(query.shape) == 1
+        group_key = ((query.pattern_chars, query.reduction, query.rows_b,
+                      query.backend, query.chunk_rows, query.is_exact)
                      if coalescible else None)
         ticket = MatchTicket(self)
         now = time.perf_counter()
-        pend = _Pending(ticket=ticket, patterns=patterns,
-                        reduction=reduction, k=k_norm, threshold=thr_norm,
-                        rows=sel, backend=backend, mode=mode, t_submit=now,
-                        cache_key=cache_key, group_key=group_key)
-        self._queue.append(pend)
+        self._queue.append(_Pending(ticket=ticket, query=query,
+                                    t_submit=now, group_key=group_key))
         self.stats.n_submitted += 1
         if self.stats._t_first_submit is None:
             self.stats._t_first_submit = now
         return ticket
 
-    def match(self, patterns: np.ndarray, **kw) -> MatchResult:
+    def match(self, patterns, **kw) -> MatchResult:
         """Blocking convenience: submit + tick until done."""
         return self.submit(patterns, **kw).wait()
 
@@ -216,13 +197,13 @@ class MatchService:
             ticks += 1
 
     # -- cache ----------------------------------------------------------------
-    def _cache_get(self, key: Tuple) -> Optional[MatchResult]:
+    def _cache_get(self, key: MatchQuery) -> Optional[MatchResult]:
         res = self._cache.get(key)
         if res is not None:
             self._cache.move_to_end(key)
         return res
 
-    def _cache_put(self, key: Tuple, res: MatchResult) -> None:
+    def _cache_put(self, key: MatchQuery, res: MatchResult) -> None:
         self._cache[key] = res
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_size:
@@ -246,15 +227,8 @@ class MatchService:
 
     # -- execution ------------------------------------------------------------
     def _run_single(self, pend: _Pending) -> MatchResult:
-        kw = dict(reduction=pend.reduction, backend=pend.backend,
-                  mode=pend.mode, rows=pend.rows)
-        if pend.reduction == "topk":
-            kw["k"] = pend.k if len(pend.k) > 1 else pend.k[0]
-        if pend.threshold is not None:
-            kw["threshold"] = (pend.threshold if len(pend.threshold) > 1
-                               else pend.threshold[0])
         self.stats.n_launches += 1
-        return self.engine.match(pend.patterns, **kw)
+        return self.engine.match(pend.query)
 
     def _scatter(self, res: MatchResult, q: int, n_q: int,
                  k_q: int) -> MatchResult:
@@ -281,18 +255,36 @@ class MatchService:
             out.hits = np.ascontiguousarray(mine[:, [0, 1, 3]])
         return out
 
+    def _fuse_queries(self, members: List[List[_Pending]]) -> MatchQuery:
+        """Stack one group's shared-mode queries into one batched query.
+
+        Pure IR-to-IR lowering: stacked accept masks + per-query k /
+        threshold vectors; everything else (rows, backend, chunking) is
+        identical across the group by construction of the group key.
+        """
+        first = members[0][0].query
+        stacked = np.stack([m[0].query.masks for m in members])
+        kw = dict(mode="batched", reduction=first.reduction,
+                  rows=first.rows, backend=first.backend,
+                  chunk_rows=first.chunk_rows)
+        if first.reduction == "topk":
+            kw["k"] = [m[0].query.k[0] for m in members]
+        if first.reduction == "threshold":
+            kw["threshold"] = [m[0].query.threshold[0] for m in members]
+        return MatchQuery.from_masks(stacked, **kw)
+
     def _run_group(self, grp: List[_Pending]) -> None:
         """Execute one compatible group: coalesced or sequential.
 
-        Within the group, requests with identical cache keys share one
-        executed query (same-tick dedup).
+        Within the group, requests with identical queries share one
+        executed column (same-tick dedup).
         """
-        uniq: "OrderedDict[Tuple, List[_Pending]]" = OrderedDict()
+        uniq: "OrderedDict[MatchQuery, List[_Pending]]" = OrderedDict()
         for p in grp:
-            uniq.setdefault(p.cache_key, []).append(p)
+            uniq.setdefault(p.query, []).append(p)
         members = list(uniq.values())
         n_q = len(members)
-        first = members[0][0]
+        first = members[0][0].query
         n_rows = (len(first.rows) if first.rows is not None
                   else self.engine.corpus.n_rows)
         bp: Optional[BatchPlan] = None
@@ -302,24 +294,19 @@ class MatchService:
             bp = self.engine.planner.plan_batch(
                 n_rows=n_rows,
                 fragment_chars=self.engine.corpus.fragment_chars,
-                pattern_chars=int(first.patterns.shape[-1]), n_queries=n_q,
-                backend=first.backend)
+                pattern_chars=first.pattern_chars, n_queries=n_q,
+                backend=first.backend, chunk_rows=first.chunk_rows,
+                predicate=first.predicate)
         if bp is not None and bp.coalesced:
-            stacked = np.stack([m[0].patterns for m in members])
-            kw = dict(mode="batched", reduction=first.reduction,
-                      backend=first.backend, rows=first.rows)
-            ks = [m[0].k[0] for m in members]
-            if first.reduction == "topk":
-                kw["k"] = ks
-            if first.reduction == "threshold":
-                kw["threshold"] = [m[0].threshold[0] for m in members]
+            fused = self._fuse_queries(members)
             self.stats.n_launches += 1
             self.stats.n_coalesced_launches += 1
             self.stats.n_coalesced_queries += len(grp)
-            batched = self.engine.match(stacked, **kw)
+            batched = self.engine.match(fused)
             for q, mem in enumerate(members):
-                res = self._scatter(batched, q, n_q, ks[q])
-                self._cache_put(mem[0].cache_key, res)
+                k_q = mem[0].query.k[0] if mem[0].query.k else 0
+                res = self._scatter(batched, q, n_q, k_q)
+                self._cache_put(mem[0].query, res)
                 for p in mem:
                     self._complete(p, res, cached=False)
         else:
@@ -327,7 +314,7 @@ class MatchService:
                 self.stats.n_sequential_fallback += len(grp)
             for mem in members:
                 res = self._run_single(mem[0])
-                self._cache_put(mem[0].cache_key, res)
+                self._cache_put(mem[0].query, res)
                 for p in mem:
                     self._complete(p, res, cached=False)
 
@@ -346,7 +333,7 @@ class MatchService:
         before = self.stats.n_completed
         groups: "OrderedDict[Tuple, List[_Pending]]" = OrderedDict()
         for p in pending:
-            hit = self._cache_get(p.cache_key)
+            hit = self._cache_get(p.query)
             if hit is not None:
                 self._complete(p, hit, cached=True)
                 continue

@@ -53,7 +53,8 @@ class NgramSpeculator:
         pat = tokens_to_crumbs(suffix)
         frag_len = min(self.fragment_tokens * CRUMBS_PER_TOKEN, len(crumbs))
         frags = encoding.fold_reference(crumbs, frag_len, len(pat))
-        scores = np.asarray(ops.match_scores(frags, pat, method=self.method))
+        scores = np.asarray(ops.match_scores(frags, pat,
+                                             backend=self.method))
         r, loc = np.unravel_index(scores.argmax(), scores.shape)
         conf = float(scores[r, loc]) / len(pat)
         # Token index right after the matched suffix in the original stream.

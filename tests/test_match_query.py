@@ -1,0 +1,492 @@
+"""Query-IR tests: MatchQuery construction/canonicalization/digests,
+wildcard + IUPAC predicate oracle equivalence on every backend, compiled
+query reuse across corpus generations, early code validation, and the
+legacy kwarg deprecation shims.
+
+The load-bearing property: an accept-mask query must be bit-identical to
+the NumPy accept-mask oracle (``matcher.sliding_scores_masks``) on every
+backend, and a one-hot accept mask must be indistinguishable from the
+exact query it encodes -- same scores, same digest.
+"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import encoding
+from repro.core.matcher import sliding_scores, sliding_scores_masks
+from repro.match import (CompiledMatch, MatchEngine, MatchQuery,
+                         MatchService, Planner, as_query)
+
+
+def mask_case(r, f, p, *, q=None, per_row=False, n_wild=3, seed=0):
+    """Random fragments + exact-derived masks with some wildcard positions."""
+    rng = np.random.default_rng(seed)
+    frags = rng.integers(0, 4, (r, f), np.uint8)
+    if q is not None:
+        codes = rng.integers(0, 4, (q, p), np.uint8)
+    elif per_row:
+        codes = rng.integers(0, 4, (r, p), np.uint8)
+    else:
+        codes = rng.integers(0, 4, p, np.uint8)
+    masks = (np.uint8(1) << codes).astype(np.uint8)
+    flat = masks.reshape(-1)
+    idx = rng.integers(0, flat.size, min(n_wild, flat.size))
+    flat[idx] = rng.integers(1, 16, len(idx), np.uint8)
+    return frags, masks
+
+
+class TestMatchQueryIR:
+    def test_frozen_hashable_and_digest_stable(self):
+        pat = np.array([0, 1, 2, 3], np.uint8)
+        a = MatchQuery.exact(pat, reduction="topk", k=3)
+        b = MatchQuery.exact(pat, reduction="topk", k=3)
+        assert a == b and hash(a) == hash(b) and a.digest == b.digest
+        assert {a: 1}[b] == 1
+        c = MatchQuery.exact(pat, reduction="topk", k=4)
+        assert c != a and c.digest != a.digest
+
+    def test_exact_and_onehot_masks_canonicalize_identically(self):
+        """Two spellings of the same query -> same IR, same digest."""
+        pat = np.array([2, 0, 3, 1], np.uint8)
+        via_codes = MatchQuery.exact(pat)
+        via_masks = MatchQuery.from_masks(
+            (np.uint8(1) << pat).astype(np.uint8))
+        assert via_codes == via_masks
+        assert via_codes.digest == via_masks.digest
+        assert via_masks.is_exact and via_masks.predicate == "exact"
+        np.testing.assert_array_equal(via_masks.codes, pat)
+
+    def test_wildcard_query_is_accept_predicate(self):
+        masks = encoding.encode_iupac("ACNGT")
+        q = MatchQuery.from_masks(masks)
+        assert not q.is_exact and q.predicate == "accept"
+        with pytest.raises(ValueError, match="only defined for exact"):
+            q.codes
+
+    def test_iupac_constructor_matches_encode_iupac(self):
+        q = MatchQuery.iupac("ACGRN")
+        np.testing.assert_array_equal(q.masks,
+                                      encoding.encode_iupac("ACGRN"))
+        qb = MatchQuery.iupac(["ACGR", "NNTT"], mode="batched")
+        assert qb.shape == (2, 4) and qb.mode == "batched"
+
+    def test_validation(self):
+        pat = np.zeros(4, np.uint8)
+        with pytest.raises(ValueError, match="unknown reduction"):
+            MatchQuery.exact(pat, reduction="nope")
+        with pytest.raises(ValueError, match="requires a threshold"):
+            MatchQuery.exact(pat, reduction="threshold")
+        with pytest.raises(ValueError, match="unknown backend"):
+            MatchQuery.exact(pat, backend="gpu")
+        with pytest.raises(ValueError, match="1-D patterns are 'shared'"):
+            MatchQuery.exact(pat, mode="batched")
+        with pytest.raises(ValueError, match="per-query k"):
+            MatchQuery.exact(pat, reduction="topk", k=[1, 2])
+        with pytest.raises(ValueError, match="accept masks"):
+            MatchQuery.from_masks(np.zeros(4, np.uint8))   # 0 accepts nothing
+        with pytest.raises(ValueError, match="at least one character"):
+            MatchQuery.exact(np.zeros(0, np.uint8))
+
+    def test_out_of_range_codes_rejected_at_construction(self):
+        with pytest.raises(ValueError, match="pattern codes must be < 4"):
+            MatchQuery.exact(np.array([0, 1, 7], np.uint8))
+        with pytest.raises(ValueError, match="pattern codes must be < 4"):
+            MatchQuery.exact(np.array([[0, 1], [4, 2]], np.uint8))
+
+    def test_shared_mode_canonicalized(self):
+        pat = np.zeros(4, np.uint8)
+        assert MatchQuery.exact(pat, mode="shared") == MatchQuery.exact(pat)
+        # Only 1-D patterns are shared: 2-D + mode='shared' stays a hard
+        # error (silently inferring per_row/batched would be
+        # shape-dependent semantics).
+        with pytest.raises(ValueError, match="per_row"):
+            MatchQuery.exact(np.zeros((2, 4), np.uint8), mode="shared")
+
+    def test_k_only_kept_for_topk(self):
+        pat = np.zeros(4, np.uint8)
+        assert MatchQuery.exact(pat, k=7) == MatchQuery.exact(pat, k=99)
+        assert MatchQuery.exact(pat, reduction="topk", k=7) != \
+            MatchQuery.exact(pat, reduction="topk", k=99)
+
+    def test_rows_in_digest(self):
+        pat = np.zeros(4, np.uint8)
+        a = MatchQuery.exact(pat, rows=[1, 2])
+        b = MatchQuery.exact(pat, rows=[2, 1])
+        assert a != b and a.digest != b.digest
+        np.testing.assert_array_equal(a.rows, [1, 2])
+
+    def test_as_query_rejects_query_plus_kwargs(self):
+        q = MatchQuery.exact(np.zeros(4, np.uint8))
+        assert as_query(q) is q
+        with pytest.raises(ValueError, match="keyword overrides"):
+            as_query(q, reduction="topk")
+        # Explicitly passing a *default* value is still an override: the
+        # shim must never silently drop a kwarg the caller spelled out.
+        with pytest.raises(ValueError, match="keyword overrides"):
+            as_query(q, reduction="best")
+        rng = np.random.default_rng(0)
+        eng = MatchEngine(rng.integers(0, 4, (8, 40), np.uint8))
+        qq = MatchQuery.exact(np.zeros(4, np.uint8), reduction="topk", k=5)
+        with pytest.raises(ValueError, match="keyword overrides"):
+            eng.match(qq, reduction="best")
+
+
+class TestEncodingSatellites:
+    def test_encode_dna_raises_on_invalid(self):
+        with pytest.raises(ValueError, match="invalid character"):
+            encoding.encode_dna("ACGTN")
+        with pytest.raises(ValueError, match="invalid character"):
+            encoding.encode_dna("ACG-T")
+        # Non-ASCII input must raise the documented ValueError, not
+        # IndexError from byte-offset indexing into the str.
+        with pytest.raises(ValueError, match="invalid character"):
+            encoding.encode_dna("ACGTé")
+        with pytest.raises(ValueError, match="invalid IUPAC"):
+            encoding.encode_iupac("ACGN€")
+
+    def test_encode_dna_roundtrip_still_works(self):
+        s = "ACGTACGTTGCA"
+        assert encoding.decode_dna(encoding.encode_dna(s)) == s
+        np.testing.assert_array_equal(encoding.encode_dna("acgt"),
+                                      [0, 1, 2, 3])
+
+    def test_encode_iupac_table(self):
+        np.testing.assert_array_equal(
+            encoding.encode_iupac("ACGT"), [1, 2, 4, 8])
+        assert encoding.encode_iupac("N")[0] == 0b1111
+        assert encoding.encode_iupac("R")[0] == 0b0101   # A|G
+        assert encoding.encode_iupac("Y")[0] == 0b1010   # C|T
+        assert encoding.encode_iupac("U")[0] == 0b1000   # RNA T
+        assert encoding.encode_iupac("n")[0] == 0b1111   # lowercase
+        with pytest.raises(ValueError, match="invalid IUPAC"):
+            encoding.encode_iupac("ACGX")
+
+    def test_iupac_semantics_through_oracle(self):
+        """R accepts A and G only; N accepts everything."""
+        frags = np.array([[0, 1, 2, 3]], np.uint8)        # A C G T
+        scores = sliding_scores_masks(frags, encoding.encode_iupac("RN"))
+        # windows: AC, CG, GT -> R matches A/G, N matches all.
+        np.testing.assert_array_equal(scores, [[2, 1, 2]])
+
+
+class TestPredicateOracleEquivalence:
+    """Wildcard/IUPAC queries bit-identical to the NumPy oracle."""
+
+    @pytest.mark.parametrize("r,f,p", [
+        (3, 33, 16), (13, 70, 20),               # R not multiple of 8
+        (8, 64, 64),                             # P == F
+        (5, 128, 1), (7, 257, 31),
+    ])
+    @pytest.mark.parametrize("backend", ["swar", "mxu", "ref", None])
+    def test_shared_wildcard(self, r, f, p, backend):
+        frags, masks = mask_case(r, f, p, seed=r * f + p)
+        q = MatchQuery.from_masks(masks, reduction="full", backend=backend)
+        got = np.asarray(MatchEngine(frags).match(q).scores)
+        np.testing.assert_array_equal(got, sliding_scores_masks(frags,
+                                                                masks))
+
+    @pytest.mark.parametrize("r,f,p,q", [(2, 40, 8, 3), (5, 300, 100, 4)])
+    @pytest.mark.parametrize("backend", ["swar", "mxu", "ref"])
+    def test_batched_wildcard(self, r, f, p, q, backend):
+        frags, masks = mask_case(r, f, p, q=q, n_wild=6, seed=r + f + p)
+        mq = MatchQuery.from_masks(masks, mode="batched", reduction="full",
+                                   backend=backend)
+        got = np.asarray(MatchEngine(frags).match(mq).scores)
+        want = np.stack([sliding_scores_masks(frags, masks[i])
+                         for i in range(q)], -1)
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("backend", ["swar", "ref"])
+    def test_per_row_wildcard(self, backend):
+        frags, masks = mask_case(9, 120, 48, per_row=True, n_wild=12,
+                                 seed=21)
+        mq = MatchQuery.from_masks(masks, mode="per_row", reduction="full",
+                                   backend=backend)
+        got = np.asarray(MatchEngine(frags).match(mq).scores)
+        np.testing.assert_array_equal(got, sliding_scores_masks(frags,
+                                                                masks))
+
+    def test_all_n_pattern_scores_full_everywhere(self):
+        frags = np.random.default_rng(5).integers(0, 4, (4, 30), np.uint8)
+        q = MatchQuery.iupac("N" * 6, reduction="full")
+        got = np.asarray(MatchEngine(frags).match(q).scores)
+        assert (got == 6).all()
+
+    def test_onehot_masks_equal_exact_scores_all_backends(self):
+        rng = np.random.default_rng(6)
+        frags = rng.integers(0, 4, (6, 80), np.uint8)
+        pat = rng.integers(0, 4, 24, np.uint8)
+        for backend in ("swar", "mxu", "ref"):
+            exact = np.asarray(MatchEngine(frags).scores(pat,
+                                                         backend=backend))
+            via_masks = np.asarray(MatchEngine(frags).match(
+                MatchQuery.from_masks((np.uint8(1) << pat).astype(np.uint8),
+                                      reduction="full",
+                                      backend=backend)).scores)
+            np.testing.assert_array_equal(exact, via_masks)
+            np.testing.assert_array_equal(exact, sliding_scores(frags, pat))
+
+    def test_wildcard_reductions_match_oracle(self):
+        frags, masks = mask_case(14, 72, 18, seed=31)
+        oracle = sliding_scores_masks(frags, masks)
+        eng = MatchEngine(frags)
+        res = eng.match(MatchQuery.from_masks(masks, reduction="best",
+                                              backend="swar"))
+        np.testing.assert_array_equal(res.best_scores, oracle.max(1))
+        thr = int(oracle.max()) - 1
+        res = eng.match(MatchQuery.from_masks(masks, reduction="threshold",
+                                              threshold=thr,
+                                              backend="swar"))
+        want = np.argwhere(oracle >= thr)
+        np.testing.assert_array_equal(res.hits[:, :2], want)
+        res = eng.match(MatchQuery.from_masks(masks, reduction="topk", k=4,
+                                              backend="swar"))
+        np.testing.assert_array_equal(np.sort(res.topk_scores),
+                                      np.sort(np.sort(oracle.max(1))[-4:]))
+
+    def test_wildcard_rows_subset(self):
+        frags, masks = mask_case(20, 80, 16, seed=32)
+        sub = [17, 3, 11]
+        q = MatchQuery.from_masks(masks, rows=sub, reduction="full",
+                                  backend="swar")
+        got = np.asarray(MatchEngine(frags).match(q).scores)
+        np.testing.assert_array_equal(
+            got, sliding_scores_masks(frags[sub], masks))
+
+
+class TestCompiledReuse:
+    def test_compile_cache_hit_same_object(self):
+        rng = np.random.default_rng(40)
+        eng = MatchEngine(rng.integers(0, 4, (10, 60), np.uint8))
+        pat = rng.integers(0, 4, 12, np.uint8)
+        q1 = MatchQuery.exact(pat, reduction="topk", k=2)
+        q2 = MatchQuery.exact(pat.copy(), reduction="topk", k=2)
+        cm = eng.compile(q1)
+        assert isinstance(cm, CompiledMatch)
+        assert eng.compile(q2) is cm               # content-keyed
+        assert eng.compile(q1, cached=False) is not cm
+
+    def test_compiled_reuse_across_generations(self):
+        """One CompiledMatch serves every corpus generation: set_rows
+        changes the answer, never the program, and never repacks."""
+        rng = np.random.default_rng(41)
+        frags = rng.integers(0, 4, (10, 60), np.uint8)
+        eng = MatchEngine(frags)
+        pat = rng.integers(0, 4, 12, np.uint8)
+        cm = eng.compile(MatchQuery.exact(pat, backend="swar"))
+        r1 = cm.run()
+        np.testing.assert_array_equal(
+            r1.best_scores, sliding_scores(frags, pat).max(1))
+        gen = eng.corpus.generation
+        new_row = rng.integers(0, 4, 60, np.uint8)
+        new_row[7:19] = pat                        # plant an exact hit
+        eng.corpus.set_rows(4, new_row)
+        assert eng.corpus.generation > gen
+        r2 = cm.run()
+        assert r2.best_scores[4] == 12 and r2.best_locs[4] == 7
+        np.testing.assert_array_equal(
+            r2.best_scores,
+            sliding_scores(eng.corpus.fragments, pat).max(1))
+        assert eng.corpus.swar_pack_count == 1     # packed once, ever
+
+    def test_compiled_wildcard_reuse_no_repack(self):
+        rng = np.random.default_rng(42)
+        frags, masks = mask_case(12, 64, 16, seed=42)
+        eng = MatchEngine(frags)
+        cm = eng.compile(MatchQuery.from_masks(masks, backend="swar"))
+        for _ in range(3):
+            res = cm()
+        np.testing.assert_array_equal(
+            res.best_scores, sliding_scores_masks(frags, masks).max(1))
+        assert eng.corpus.swar_pack_count == 1
+        assert res.plan.predicate == "accept"
+
+    def test_compile_rejects_non_query(self):
+        rng = np.random.default_rng(43)
+        eng = MatchEngine(rng.integers(0, 4, (8, 40), np.uint8))
+        with pytest.raises(TypeError, match="MatchQuery"):
+            eng.compile(np.zeros(4, np.uint8))
+
+    def test_compile_cache_bounded(self):
+        rng = np.random.default_rng(44)
+        eng = MatchEngine(rng.integers(0, 4, (8, 40), np.uint8),
+                          compile_cache_size=2)
+        for i in range(5):
+            eng.compile(MatchQuery.exact(
+                rng.integers(0, 4, 8, np.uint8)))
+        assert len(eng._compiled) == 2
+
+
+class TestPlannerPredicates:
+    def test_accept_swar_priced_higher(self):
+        pl = Planner()
+        exact = pl.swar_seconds(512, 900, 100)
+        accept = pl.swar_seconds(512, 900, 100, predicate="accept")
+        assert accept > exact
+        assert pl.mxu_seconds(512, 900, 100) == pl.mxu_seconds(512, 900,
+                                                               100)
+
+    def test_plan_carries_predicate(self):
+        pl = Planner()
+        p = pl.plan(n_rows=64, fragment_chars=256, pattern_chars=32,
+                    predicate="accept")
+        assert p.predicate == "accept"
+        assert "accept" not in (pl.plan(
+            n_rows=64, fragment_chars=256,
+            pattern_chars=32).predicate)
+
+    def test_unknown_predicate_rejected(self):
+        with pytest.raises(ValueError, match="unknown predicate"):
+            Planner().plan(n_rows=8, fragment_chars=64, pattern_chars=16,
+                           predicate="fuzzy")
+
+    def test_wildcards_tip_selection_toward_mxu(self):
+        """At a Q where exact swar still wins, the accept-predicate cost
+        premium must never flip the choice *away* from mxu."""
+        pl = Planner()
+        kw = dict(n_rows=256, fragment_chars=512, pattern_chars=64)
+        for q in (1, 4, 16, 64):
+            exact_backend = pl.plan(**kw, n_patterns=q).backend
+            accept_backend = pl.plan(**kw, n_patterns=q,
+                                     predicate="accept").backend
+            if exact_backend == "mxu":
+                assert accept_backend == "mxu"
+
+
+class TestServicePredicates:
+    def setup_method(self):
+        rng = np.random.default_rng(50)
+        self.rng = rng
+        self.frags = rng.integers(0, 4, (24, 96), np.uint8)
+        self.eng = MatchEngine(self.frags)
+        self.svc = MatchService(self.eng)
+
+    def test_wildcard_queries_coalesce_bit_identical(self):
+        masks = []
+        for s in range(6):
+            m = mask_case(1, 1, 16, seed=s)[1]
+            m[0] = 0b1111                  # guarantee non-exact: one group
+            masks.append(m)
+        tickets = [self.svc.submit(MatchQuery.from_masks(m))
+                   for m in masks]
+        self.svc.flush()
+        assert self.svc.stats.n_coalesced_launches == 1
+        for t, m in zip(tickets, masks):
+            want = self.eng.match(MatchQuery.from_masks(m))
+            np.testing.assert_array_equal(t.result.best_scores,
+                                          want.best_scores)
+            np.testing.assert_array_equal(t.result.best_locs,
+                                          want.best_locs)
+
+    def test_exact_and_wildcard_group_separately(self):
+        pat = self.rng.integers(0, 4, 16, np.uint8)
+        masks = mask_case(1, 1, 16, seed=9)[1]
+        masks[0] = 0b1111                  # guarantee non-exact
+        self.svc.submit(MatchQuery.exact(pat))
+        self.svc.submit(MatchQuery.from_masks(masks))
+        self.svc.tick()
+        assert self.svc.stats.n_launches == 2
+        assert self.svc.stats.n_coalesced_launches == 0
+
+    def test_submit_rejects_bad_codes_early(self):
+        with pytest.raises(ValueError, match="pattern codes must be < 4"):
+            self.svc.submit(np.array([0, 9], np.uint8))
+
+    def test_wildcard_cache_hit(self):
+        masks = mask_case(1, 1, 16, seed=10)[1]
+        q = MatchQuery.from_masks(masks)
+        self.svc.match(q)
+        t = self.svc.submit(q)
+        self.svc.tick()
+        assert t.cached
+        assert self.svc.stats.n_cache_hits == 1
+
+
+class TestDeprecationShims:
+    def test_ops_method_kwarg_warns_and_matches(self):
+        rng = np.random.default_rng(60)
+        frags = rng.integers(0, 4, (6, 50), np.uint8)
+        pat = rng.integers(0, 4, 10, np.uint8)
+        from repro.kernels import ops
+        with pytest.warns(DeprecationWarning, match="method="):
+            old = np.asarray(ops.match_scores(frags, pat, method="swar"))
+        new = np.asarray(ops.match_scores(frags, pat, backend="swar"))
+        np.testing.assert_array_equal(old, new)
+        np.testing.assert_array_equal(old, sliding_scores(frags, pat))
+
+    def test_ops_accepts_query(self):
+        rng = np.random.default_rng(61)
+        frags = rng.integers(0, 4, (6, 50), np.uint8)
+        masks = mask_case(1, 1, 10, seed=61)[1]
+        from repro.kernels import ops
+        got = np.asarray(ops.match_scores(frags,
+                                          MatchQuery.from_masks(masks)))
+        np.testing.assert_array_equal(got,
+                                      sliding_scores_masks(frags, masks))
+
+    def test_engine_kwargs_roundtrip_to_query(self):
+        """The legacy kwarg surface and the query IR are the same query:
+        same results, and the shim hits the same compile cache entry."""
+        rng = np.random.default_rng(62)
+        frags = rng.integers(0, 4, (12, 64), np.uint8)
+        pat = rng.integers(0, 4, 16, np.uint8)
+        eng = MatchEngine(frags)
+        via_kwargs = eng.match(pat, reduction="topk", k=3, backend="swar")
+        q = MatchQuery.exact(pat, reduction="topk", k=3, backend="swar")
+        via_query = eng.match(q)
+        np.testing.assert_array_equal(via_kwargs.topk_scores,
+                                      via_query.topk_scores)
+        np.testing.assert_array_equal(via_kwargs.topk_rows,
+                                      via_query.topk_rows)
+        assert eng.compile(q) is eng.compile(q)
+
+    def test_service_kwargs_roundtrip(self):
+        rng = np.random.default_rng(63)
+        frags = rng.integers(0, 4, (12, 64), np.uint8)
+        pat = rng.integers(0, 4, 16, np.uint8)
+        eng = MatchEngine(frags)
+        svc = MatchService(eng)
+        a = svc.match(pat, reduction="threshold", threshold=8)
+        b = svc.submit(MatchQuery.exact(pat, reduction="threshold",
+                                        threshold=8))
+        svc.tick()
+        assert b.cached                    # same query -> cache hit
+        np.testing.assert_array_equal(a.hits, b.result.hits)
+
+    def test_dedup_method_kwarg_warns(self):
+        from repro.data.dedup import CRAMDedup
+        with pytest.warns(DeprecationWarning, match="method="):
+            CRAMDedup(method="swar")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            CRAMDedup(backend="swar")      # new spelling: no warning
+
+    def test_scores_accepts_query_and_forces_full(self):
+        rng = np.random.default_rng(64)
+        frags = rng.integers(0, 4, (6, 40), np.uint8)
+        masks = mask_case(1, 1, 8, seed=64)[1]
+        q = MatchQuery.from_masks(masks, reduction="topk", k=2)
+        got = np.asarray(MatchEngine(frags).scores(q))
+        np.testing.assert_array_equal(got,
+                                      sliding_scores_masks(frags, masks))
+
+
+class TestQueryBenchSchema:
+    def test_smoke_record_validates(self):
+        import pathlib
+        import sys
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent
+                               .parent / "benchmarks"))
+        try:
+            import query_bench
+        finally:
+            sys.path.pop(0)
+        record = query_bench.run_bench(smoke=True)
+        assert record["smoke"] is True
+        assert {r["predicate"] for r in record["results"]} == \
+            {"exact", "wildcard"}
+        for row in record["results"]:
+            assert row["identical"] and row["oracle_ok"]

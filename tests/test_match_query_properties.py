@@ -1,0 +1,81 @@
+"""Randomized property tests for the predicate API (hypothesis-driven).
+
+Split out of ``test_match_query.py`` so a missing ``hypothesis`` install
+skips only this module (repo convention, see
+``test_kernels_properties.py``); install dev deps with
+``pip install -r requirements-dev.txt``.
+
+Property: for any fragments and any accept-mask pattern, every backend is
+bit-identical to the NumPy oracle ``matcher.sliding_scores_masks`` -- and
+one-hot masks degenerate to exact matching exactly.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.matcher import sliding_scores, sliding_scores_masks  # noqa: E402
+from repro.match import MatchEngine, MatchQuery  # noqa: E402
+
+
+def random_masks(rng, shape):
+    """Biased mix: mostly one-hot, some multi-accept, some full N."""
+    codes = rng.integers(0, 4, shape, np.uint8)
+    masks = (np.uint8(1) << codes).astype(np.uint8)
+    wild = rng.random(shape) < 0.25
+    masks[wild] = rng.integers(1, 16, int(wild.sum()), np.uint8)
+    return masks
+
+
+class TestPredicateProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 6), st.integers(2, 60), st.data())
+    def test_property_masks_match_oracle_swar(self, r, f, data):
+        p = data.draw(st.integers(1, f))
+        seed = data.draw(st.integers(0, 2**31))
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (r, f), np.uint8)
+        masks = random_masks(rng, p)
+        q = MatchQuery.from_masks(masks, reduction="full", backend="swar")
+        got = np.asarray(MatchEngine(frags).match(q).scores)
+        np.testing.assert_array_equal(got,
+                                      sliding_scores_masks(frags, masks))
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_backends_agree(self, seed):
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (3, 70), np.uint8)
+        masks = random_masks(rng, int(rng.integers(2, 32)))
+        outs = [np.asarray(MatchEngine(frags).match(
+                    MatchQuery.from_masks(masks, reduction="full",
+                                          backend=b)).scores)
+                for b in ("swar", "mxu", "ref")]
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[0], outs[2])
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_onehot_degenerates_to_exact(self, seed):
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (4, 50), np.uint8)
+        pat = rng.integers(0, 4, 12, np.uint8)
+        masks = (np.uint8(1) << pat).astype(np.uint8)
+        q = MatchQuery.from_masks(masks, reduction="full", backend="swar")
+        got = np.asarray(MatchEngine(frags).match(q).scores)
+        np.testing.assert_array_equal(got, sliding_scores(frags, pat))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_score_bounds_and_wildcard_hits(self, seed):
+        """Scores stay within [0, P]; an all-N window always scores P."""
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (4, 40), np.uint8)
+        p = int(rng.integers(1, 12))
+        masks = random_masks(rng, p)
+        masks[: max(1, p // 2)] = 0b1111
+        q = MatchQuery.from_masks(masks, reduction="full", backend="swar")
+        s = np.asarray(MatchEngine(frags).match(q).scores)
+        assert (s >= (masks == 0b1111).sum()).all() and (s <= p).all()
