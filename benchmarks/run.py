@@ -13,6 +13,7 @@ Modules (one per paper table/figure + assignment deliverables):
   kernel_bench      -- TPU-adapted kernel engine (beyond paper)
   service_bench     -- multi-tenant match service coalescing (beyond paper)
   query_bench       -- compiled-query reuse + wildcard predicates (beyond)
+  ingest_bench      -- online ingestion into a live store (beyond paper)
   roofline          -- dry-run roofline table (assignment)
 """
 
@@ -24,7 +25,7 @@ MODULES = [
     "table1_gates", "fig5_throughput", "fig6_breakdown", "fig7_patlen",
     "fig8_tech", "fig9_10_nmp", "fig11_gates", "table4_apps",
     "sec5_5_variation", "kernel_bench", "service_bench", "query_bench",
-    "roofline",
+    "ingest_bench", "roofline",
 ]
 
 

@@ -4,8 +4,9 @@ The paper's row-parallel string matcher doing production data-plane work:
 documents are fingerprinted into the 2-bit alphabet and matched against a
 device-resident store through the match engine; near-duplicates (including
 shifted copies) are dropped before they reach the tokenizer.  Each add is
-an incremental packed-row write (no host repacking of the resident store);
-repacking happens only on capacity doubling.
+an in-place packed-row append into a growable corpus: capacity doubles on
+device, the engine survives growth, and the resident rows are never
+repacked -- the store ingests while it serves.
 
 Run:  PYTHONPATH=src python examples/dedup_pipeline.py
 """
@@ -33,7 +34,9 @@ def main() -> None:
     rng.shuffle(corpus)
 
     dedup = CRAMDedup(threshold=0.85)
+    engine_before = dedup.engine                   # held for the lifetime
     kept = dedup.filter(corpus)
+    assert dedup.engine is engine_before           # growth never rebuilds it
     print(f"corpus {len(corpus)} docs -> kept {len(kept)} "
           f"({len(corpus) - len(kept)} near-dups dropped)")
     # every base doc survives; the large majority of injected dups drop

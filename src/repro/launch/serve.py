@@ -7,8 +7,10 @@ n-gram speculator acceptance (the paper's matcher in the serving plane).
 
 ``--workload match`` serves synthetic string-match traffic instead: many
 small shared-mode queries through a ``MatchService`` over one resident
-corpus (micro-batched multi-tenant execution, DESIGN.md Sec. 3d), and
-reports coalescing + cache stats alongside QPS.
+corpus (micro-batched multi-tenant execution, DESIGN.md Sec. 3d), mixed
+with online ingestion (``--ingest-every``: the corpus grows in place under
+load, Sec. 3f), and reports coalescing + cache + ingest stats alongside
+QPS.
 """
 
 from __future__ import annotations
@@ -31,14 +33,19 @@ def run_match_service(args) -> None:
     Requests are declarative ``MatchQuery`` objects; ``--predicate
     wildcard`` turns a few positions of every pattern into ``N`` wildcards
     (accept-everything masks), exercising the accept-set kernel path under
-    the same coalescing machinery.
+    the same coalescing machinery.  ``--ingest-every K`` mixes online
+    ingestion into the stream: every Kth request also appends a fresh
+    corpus row through ``service.ingest`` (batched per tick, in-place
+    ``append_rows`` -- the corpus grows under load without ever repacking
+    its resident rows or rebuilding the engine).
     """
     from repro.match import MatchEngine, MatchQuery, MatchService
 
     rng = np.random.default_rng(0)
     frags = rng.integers(0, 4, (args.corpus_rows, args.fragment_chars),
                          np.uint8)
-    svc = MatchService(MatchEngine(frags))
+    eng = MatchEngine(frags)
+    svc = MatchService(eng)
     pats = rng.integers(0, 4, (args.requests, args.pattern_chars), np.uint8)
     if args.predicate == "wildcard":
         masks = (np.uint8(1) << pats).astype(np.uint8)
@@ -48,11 +55,21 @@ def run_match_service(args) -> None:
         queries = [MatchQuery.from_masks(m) for m in masks]
     else:
         queries = [MatchQuery.exact(p) for p in pats]
+    # Warm the forms so the ingest counters below isolate growth behavior.
+    eng.match(queries[0])
+    rows_before = eng.corpus.n_rows
     t0 = time.perf_counter()
-    tickets = [svc.submit(q) for q in queries]
+    tickets, ingests = [], []
+    for i, q in enumerate(queries):
+        if args.ingest_every and i % args.ingest_every == 0:
+            ingests.append(svc.ingest(
+                rng.integers(0, 4, args.fragment_chars, np.uint8)))
+        tickets.append(svc.submit(q))
+        if args.tick_every and (i + 1) % args.tick_every == 0:
+            svc.tick()                 # mixed ingest+query ticks under load
     svc.flush()
     dt = time.perf_counter() - t0
-    assert all(t.done for t in tickets)
+    assert all(t.done for t in tickets) and all(t.done for t in ingests)
     stats = svc.stats.snapshot()
     print(f"served {len(tickets)} {args.predicate} match queries in "
           f"{dt:.2f}s ({len(tickets)/dt:.1f} qps)")
@@ -61,6 +78,19 @@ def run_match_service(args) -> None:
           f"(fused {stats['n_coalesced_queries']} queries) "
           f"cache_hits={stats['n_cache_hits']} "
           f"avg_latency={stats['avg_latency_s']*1e3:.1f}ms")
+    if ingests:
+        grew = eng.corpus.n_rows - rows_before
+        # Resident repacks = host packs beyond the lazy first one per form
+        # (a coalesced launch may legitimately first-pack the *other* form
+        # when the batched roofline picks the other kernel).
+        repacks = (max(0, eng.corpus.swar_pack_count - 1)
+                   + max(0, eng.corpus.onehot_pack_count - 1))
+        assert repacks == 0, "resident rows must never repack during ingest"
+        print(f"ingested {stats['n_ingested_rows']} rows in "
+              f"{stats['n_ingest_batches']} batched appends "
+              f"({rows_before} -> {eng.corpus.n_rows} rows, capacity "
+              f"{eng.corpus.capacity}, resident repacks: {repacks})")
+        assert grew == stats["n_ingested_rows"]
 
 
 def main() -> None:
@@ -83,6 +113,12 @@ def main() -> None:
                     default="exact",
                     help="match workload: exact queries or N-wildcard "
                          "accept-mask queries")
+    ap.add_argument("--ingest-every", type=int, default=4,
+                    help="match workload: ingest one fresh corpus row "
+                         "every K requests (0 disables ingestion)")
+    ap.add_argument("--tick-every", type=int, default=8,
+                    help="match workload: drive a service tick every K "
+                         "submissions (0: one big flush at the end)")
     args = ap.parse_args()
 
     if args.workload == "match":

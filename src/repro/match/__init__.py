@@ -4,7 +4,9 @@ The single entry point for all string-matching workloads:
 
 * ``PackedCorpus`` -- fragments packed once into device-resident SWAR and
   one-hot forms, cached across queries (the paper's keep-data-next-to-
-  compute discipline, Sec. 2-3).
+  compute discipline, Sec. 2-3); growable in place (``append_rows`` /
+  ``reserve``): capacity-reserved row slots, device-side capacity
+  doubling, zero host repacks of resident rows.
 * ``MatchQuery`` -- frozen, hashable, declarative query IR: patterns as
   per-position accept-mask predicates (exact / IUPAC ambiguity / N
   wildcards / character classes), reduction spec, row subset, backend
@@ -18,7 +20,9 @@ The single entry point for all string-matching workloads:
 * ``MatchService`` -- micro-batched multi-tenant front end: queues
   concurrent queries, coalesces compatible ones into fused batched
   launches (priced by ``Planner.plan_batch``), caches results (LRU,
-  invalidated on corpus generation change).
+  invalidated on corpus generation change), and ingests new corpus rows
+  online (``ingest``: appends batched per tick, interleaved with query
+  execution against the same resident corpus).
 
 ``repro.kernels.ops.match_scores`` is the thin one-shot compat shim over
 this package; long-lived consumers (dedup, serving-scale workloads) hold a
@@ -30,8 +34,9 @@ from .corpus import PackedCorpus
 from .engine import CompiledMatch, MatchEngine, MatchResult
 from .planner import BatchPlan, Plan, Planner
 from .query import MatchQuery, as_query
-from .service import MatchService, MatchTicket, ServiceStats
+from .service import (IngestTicket, MatchService, MatchTicket,
+                      ServiceStats)
 
 __all__ = ["PackedCorpus", "Planner", "Plan", "BatchPlan", "MatchQuery",
            "as_query", "CompiledMatch", "MatchEngine", "MatchResult",
-           "MatchService", "MatchTicket", "ServiceStats"]
+           "MatchService", "MatchTicket", "IngestTicket", "ServiceStats"]

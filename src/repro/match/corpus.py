@@ -1,4 +1,5 @@
-"""Device-resident packed corpus for the match engine (DESIGN.md Sec. 3a).
+"""Device-resident growable packed corpus for the match engine
+(DESIGN.md Sec. 3a/3f).
 
 The paper's core discipline is that the reference never moves once laid out
 (CRAM-PM keeps fragments resident in the array rows; Sec. 2-3).  The TPU
@@ -6,22 +7,29 @@ analogue: pack the fragment matrix into its kernel-native forms *once*, keep
 both forms device-resident, and serve every subsequent query from the cached
 arrays.  Two forms exist because the two kernels want different layouts:
 
-* SWAR form  -- (R_pad, W) uint32, 16 two-bit chars per word, rows padded to
+* SWAR form  -- (C_pad, W) uint32, 16 two-bit chars per word, rows padded to
   ``match_swar.ROW_TILE``; consumed by the VPU bit-parallel kernel.
-* one-hot form -- (R, F4) bf16, char-major flattened one-hot; consumed by
-  the MXU correlation kernel.
+* one-hot form -- (C_pad, F4) bf16, char-major flattened one-hot; consumed
+  by the MXU correlation kernel.
 
 Both are built lazily on first use and grown *on device* (zero-extension via
 ``jnp`` concat/pad) when a query needs more padding than a previous one --
-host repacking happens at most once per form for a given corpus generation.
+host repacking happens at most once per form for a given corpus lifetime.
 ``host_pack_count`` counts those host->device packing events; the
-steady-state invariant (no repacking across repeated queries) is asserted by
-``tests/test_match_engine.py`` and the engine benchmark.
+steady-state invariant (no repacking across repeated queries *or corpus
+growth*) is asserted by ``tests/test_match_engine.py``,
+``tests/test_match_ingest.py`` and the engine/ingest benchmarks.
 
-Incremental updates (``set_rows``) pack only the touched rows on the host
-and splice them into the cached device arrays with ``.at[].set`` -- the
-data-plane consumers (``data/dedup.py``) grow their store without ever
-repacking the resident part, mirroring a CRAM row write.
+The corpus is **growable in place** (Sec. 3f): ``capacity`` row slots are
+reserved up front (and doubled on demand), ``n_rows`` counts the *live*
+rows, and ``append_rows`` packs only the appended rows on the host and
+splices them into the cached device forms with ``.at[].set`` -- the
+resident rows are never repacked, mirroring a CRAM row write into an
+already-laid-out array.  Capacity growth itself is a device-side
+zero-extension (``jnp.concatenate`` with zero rows), not a host repack.
+``generation`` bumps on every content mutation (``append_rows`` /
+``set_rows`` / ``invalidate``) so result caches (match.service) never serve
+scores computed against older corpus contents.
 """
 
 from __future__ import annotations
@@ -46,49 +54,74 @@ def _one_hot_flat(fragments: np.ndarray) -> np.ndarray:
 
 
 class PackedCorpus:
-    """Fragments packed once into device-resident kernel-native forms.
+    """Fragments packed once into device-resident, growable kernel forms.
 
-    ``fragments`` is the (R, F) uint8 code matrix (host copy kept as the
-    source of truth for incremental updates and for the ``ref`` backend).
-    ``row_pad`` rounds the SWAR row count up; the engine raises it above
-    ROW_TILE when sharding over a mesh rows axis.
+    ``fragments`` is the (R, F) uint8 code matrix of *live* rows (host copy
+    kept as the source of truth for incremental updates and for the ``ref``
+    backend); ``capacity`` row slots are reserved so appends are in-place
+    row writes.  ``row_pad`` rounds the device row count up; the engine
+    raises it above ROW_TILE when sharding over a mesh rows axis.
     """
 
-    def __init__(self, fragments: np.ndarray, *, row_pad: int = ROW_TILE):
-        # Own copy: set_rows mutates, and the caller's array must not change
-        # underneath the packed device forms.
+    def __init__(self, fragments: np.ndarray, *, row_pad: int = ROW_TILE,
+                 capacity: Optional[int] = None):
+        # Own copy: set_rows/append_rows mutate, and the caller's array
+        # must not change underneath the packed device forms.
         fragments = np.array(fragments, np.uint8)
         if fragments.ndim != 2:
             raise ValueError("fragments must be (R, F)")
         if row_pad % ROW_TILE:
             raise ValueError(f"row_pad must be a multiple of {ROW_TILE}")
-        self.fragments = fragments
         self.row_pad = row_pad
-        # Cached device forms (lazy).
-        self._swar: Optional[jnp.ndarray] = None      # (R_pad, W) uint32
-        self._onehot: Optional[jnp.ndarray] = None    # (R, F4) bf16
+        self._n_rows = fragments.shape[0]
+        cap = max(self._n_rows, 0 if capacity is None else int(capacity))
+        if cap > self._n_rows:
+            buf = np.zeros((cap, fragments.shape[1]), np.uint8)
+            buf[:self._n_rows] = fragments
+            fragments = buf
+        self._frags = fragments               # (capacity, F) host buffer
+        # Cached device forms (lazy), sized to the padded capacity.
+        self._swar: Optional[jnp.ndarray] = None      # (C_pad, W) uint32
+        self._onehot: Optional[jnp.ndarray] = None    # (C_pad, F4) bf16
         # Host->device full-corpus packing events, per form.
         self.swar_pack_count = 0
         self.onehot_pack_count = 0
         # Incremental row writes (device splice, not a repack).
         self.row_update_count = 0
-        # Content generation: bumped on every mutation (set_rows /
-        # invalidate).  Result caches keyed on it (match.service) drop
-        # entries computed against older corpus contents.
+        # Content generation: bumped on every mutation (append_rows /
+        # set_rows / invalidate).  Result caches keyed on it
+        # (match.service) drop entries computed against older contents.
         self.generation = 0
 
     # -- geometry ------------------------------------------------------------
     @property
+    def fragments(self) -> np.ndarray:
+        """(n_rows, F) live rows -- a view into the capacity buffer."""
+        return self._frags[:self._n_rows]
+
+    @property
     def n_rows(self) -> int:
-        return self.fragments.shape[0]
+        """Live (appended) rows; grows under ``append_rows``."""
+        return self._n_rows
+
+    @property
+    def capacity(self) -> int:
+        """Reserved row slots; appends within capacity never reallocate."""
+        return self._frags.shape[0]
 
     @property
     def fragment_chars(self) -> int:
-        return self.fragments.shape[1]
+        return self._frags.shape[1]
 
     @property
     def n_rows_padded(self) -> int:
-        return -(-self.n_rows // self.row_pad) * self.row_pad
+        """Live rows rounded up to ``row_pad`` (what queries stream over)."""
+        return -(-self._n_rows // self.row_pad) * self.row_pad
+
+    @property
+    def capacity_padded(self) -> int:
+        """Capacity rounded up to ``row_pad`` (device-form row count)."""
+        return -(-self.capacity // self.row_pad) * self.row_pad
 
     @property
     def host_pack_count(self) -> int:
@@ -105,22 +138,24 @@ class PackedCorpus:
 
     # -- SWAR form -----------------------------------------------------------
     def swar_words(self, need_words: int) -> jnp.ndarray:
-        """(R_pad, W >= need_words) uint32, device-resident.
+        """(C_pad, W >= need_words) uint32, device-resident.
 
         First call packs on the host (one event); later calls reuse the
         cached array, zero-extending on device if a query needs deeper
-        word reads than any previous one.
+        word reads than any previous one.  Reserved (not yet live) rows
+        pack to zero words -- code 0 packs to 0 -- so the form covers the
+        whole capacity and appends are pure row splices.
         """
         if self._swar is None:
-            words = encoding.pack_codes_u32(self.fragments)
-            r_pad = self.n_rows_padded
-            if r_pad > words.shape[0]:
+            words = encoding.pack_codes_u32(self._frags)
+            c_pad = self.capacity_padded
+            if c_pad > words.shape[0]:
                 words = np.concatenate(
-                    [words, np.zeros((r_pad - words.shape[0], words.shape[1]),
+                    [words, np.zeros((c_pad - words.shape[0], words.shape[1]),
                                      np.uint32)], 0)
             if words.shape[1] < need_words:
                 words = np.concatenate(
-                    [words, np.zeros((r_pad, need_words - words.shape[1]),
+                    [words, np.zeros((c_pad, need_words - words.shape[1]),
                                      np.uint32)], 1)
             self._swar = jnp.asarray(words)
             self.swar_pack_count += 1
@@ -133,18 +168,20 @@ class PackedCorpus:
 
     # -- one-hot form ----------------------------------------------------------
     def onehot_flat(self, f_chars: int) -> jnp.ndarray:
-        """(R_pad, F4 >= f_chars*4) bf16 one-hot, device-resident.
+        """(C_pad, F4 >= f_chars*4) bf16 one-hot, device-resident.
 
-        Padding chars/rows are all-zero one-hot (contribute 0 to every
-        score), so growing is a device-side ``jnp.pad``.  Rows are padded
-        like the SWAR form so sharded chunks divide evenly over the mesh.
+        Padding chars and reserved rows are all-zero one-hot (contribute 0
+        to every score), so growing either way is a device-side
+        zero-extension.  Rows are padded like the SWAR form so sharded
+        chunks divide evenly over the mesh.
         """
         if self._onehot is None:
-            base = _one_hot_flat(self.fragments)
-            r_pad = self.n_rows_padded
-            if r_pad > base.shape[0]:
+            base = _one_hot_flat(self._frags)
+            base[self._n_rows:] = 0.0         # reserved rows: all-zero
+            c_pad = self.capacity_padded
+            if c_pad > base.shape[0]:
                 base = np.concatenate(
-                    [base, np.zeros((r_pad - base.shape[0], base.shape[1]),
+                    [base, np.zeros((c_pad - base.shape[0], base.shape[1]),
                                     np.float32)], 0)
             need = max(f_chars, self.fragment_chars) * 4
             if base.shape[1] < need:
@@ -158,22 +195,64 @@ class PackedCorpus:
             self._onehot = jnp.pad(self._onehot, ((0, 0), (0, grow)))
         return self._onehot
 
-    # -- incremental updates ---------------------------------------------------
-    def set_rows(self, start: int, rows: np.ndarray) -> None:
-        """Overwrite rows [start, start+n) -- packs only the touched rows.
+    # -- growth ----------------------------------------------------------------
+    def reserve(self, capacity: int) -> None:
+        """Grow reserved row slots to at least ``capacity``, in place.
 
-        The cached device forms are updated in place (``.at[].set``), so a
-        growing store (dedup) never repacks its resident rows.
+        The host buffer extends with zero rows (a memcpy of raw codes, not
+        a packing event) and the cached device forms pad-extend with
+        device-side ``jnp.concatenate`` -- the resident packed rows are
+        never re-read or re-packed on the host, and the pack counters do
+        not move.  Contents are unchanged, so ``generation`` holds too.
+        """
+        capacity = int(capacity)
+        if capacity <= self.capacity:
+            return
+        grow = np.zeros((capacity - self.capacity, self.fragment_chars),
+                        np.uint8)
+        self._frags = np.concatenate([self._frags, grow], 0)
+        c_pad = self.capacity_padded
+        if self._swar is not None and self._swar.shape[0] < c_pad:
+            self._swar = jnp.concatenate(
+                [self._swar,
+                 jnp.zeros((c_pad - self._swar.shape[0],
+                            self._swar.shape[1]), jnp.uint32)], 0)
+        if self._onehot is not None and self._onehot.shape[0] < c_pad:
+            self._onehot = jnp.concatenate(
+                [self._onehot,
+                 jnp.zeros((c_pad - self._onehot.shape[0],
+                            self._onehot.shape[1]), jnp.bfloat16)], 0)
+
+    def append_rows(self, rows: np.ndarray) -> int:
+        """Append live rows in place; returns the first new row's index.
+
+        Packs only the appended rows on the host and splices them into the
+        cached device forms (``.at[].set``) -- zero host repacks of the
+        resident rows, ever.  Capacity doubles on demand (amortized O(1)
+        row writes per append); ``generation`` bumps once per call so
+        generation-keyed caches see every append.
         """
         rows = np.asarray(rows, np.uint8)
         if rows.ndim == 1:
             rows = rows[None, :]
+        if rows.ndim != 2 or rows.shape[1] != self.fragment_chars:
+            raise ValueError(
+                f"appended rows must be (n, {self.fragment_chars}); got "
+                f"shape {rows.shape}")
         n = rows.shape[0]
-        if rows.shape[1] != self.fragment_chars:
-            raise ValueError("row width mismatch")
-        if start + n > self.n_rows:
-            raise ValueError("row range out of bounds")
-        self.fragments[start:start + n] = rows
+        start = self._n_rows
+        if start + n > self.capacity:
+            self.reserve(max(self.capacity * 2, start + n, ROW_TILE))
+        self._frags[start:start + n] = rows
+        self._n_rows = start + n
+        self._splice_device(start, rows)
+        self.generation += 1
+        return start
+
+    # -- incremental updates ---------------------------------------------------
+    def _splice_device(self, start: int, rows: np.ndarray) -> None:
+        """Pack ``rows`` (host, touched rows only) into the cached forms."""
+        n = rows.shape[0]
         if self._swar is not None:
             words = encoding.pack_codes_u32(rows)
             w = self._swar.shape[1]
@@ -191,6 +270,29 @@ class PackedCorpus:
             self._onehot = self._onehot.at[start:start + n, :].set(
                 jnp.asarray(oh, jnp.bfloat16))
         self.row_update_count += n
+
+    def set_rows(self, start: int, rows: np.ndarray) -> None:
+        """Overwrite live rows [start, start+n) -- packs only those rows.
+
+        The cached device forms are updated in place (``.at[].set``), so a
+        growing store (dedup) never repacks its resident rows.  Writes
+        past the live region are rejected: grow with ``append_rows``.
+        """
+        rows = np.asarray(rows, np.uint8)
+        if rows.ndim == 1:
+            rows = rows[None, :]
+        n = rows.shape[0]
+        if rows.shape[1] != self.fragment_chars:
+            raise ValueError(
+                f"row width mismatch: rows have {rows.shape[1]} chars, "
+                f"corpus fragments have {self.fragment_chars}")
+        if start < 0 or start + n > self._n_rows:
+            raise ValueError(
+                f"row range [{start}, {start + n}) out of bounds for "
+                f"{self._n_rows} live rows (capacity {self.capacity}); "
+                "use append_rows to grow the corpus")
+        self._frags[start:start + n] = rows
+        self._splice_device(start, rows)
         self.generation += 1
 
     def invalidate(self) -> None:

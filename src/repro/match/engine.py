@@ -116,20 +116,33 @@ def _pack_patterns_mxu(masks: np.ndarray, p_chars: int, q_pad: int
 
 
 class CompiledMatch:
-    """One ``MatchQuery`` lowered against one engine: reusable, immutable.
+    """One ``MatchQuery`` lowered against one engine: reusable, growth-safe.
 
     Construction does all per-query host work exactly once -- mode
-    resolution, planning (kernel + geometry), pattern packing (SWAR words
-    / bit-planes / MXU multi-hot matrix), row-subset validation and
-    padding.  ``run()`` then streams the engine's *current* resident
-    corpus through the lowered program, so one compiled query serves every
-    later call and every corpus generation (``set_rows`` content updates)
-    without re-planning or re-packing.  Obtain via ``MatchEngine.compile``
-    (cached by query content) and treat results as read-only.
+    resolution (pinned: see below), planning (kernel + geometry), pattern
+    packing (SWAR words / bit-planes / MXU multi-hot matrix), row-subset
+    validation and padding.  ``run()`` then streams the engine's *current*
+    resident corpus through the lowered program, so one compiled query
+    serves every later call and every corpus generation (``set_rows``
+    content updates *and* ``append_rows`` growth) without re-packing.
+
+    Growth protocol (DESIGN.md Sec. 3f): the query **mode** is resolved
+    once at compile time against the compile-time row count and pinned --
+    the "(Q, P) with Q == n_rows reads as per_row" inference can never
+    silently flip meaning as rows are appended.  Plan *geometry* (row
+    count, chunking, padded tiling) is revalidated per run when the live
+    row count moved; the packed pattern operands are row-count-independent
+    and survive, unless growth shifts the roofline to a different kernel,
+    in which case only the (tiny) pattern operands are re-packed -- the
+    resident corpus forms are never touched.  A pinned ``per_row`` query
+    is geometry-bound to its compile-time row count and refuses to run
+    after growth.  Obtain via ``MatchEngine.compile`` (cached by query
+    content) and treat results as read-only.
     """
 
     __slots__ = ("engine", "query", "plan", "_packed", "_pats2d", "_sel",
-                 "_idx", "_k_eff", "_k_vec", "_thr_vec", "_empty")
+                 "_idx", "_k_eff", "_k_vec", "_thr_vec", "_empty", "_mode",
+                 "_lowered")
 
     def __init__(self, engine: "MatchEngine", query: MatchQuery):
         self.engine = engine
@@ -139,16 +152,44 @@ class CompiledMatch:
         sel = query.rows
         self._sel = None if sel is None else np.asarray(sel, np.int64)
         self._empty = self._sel is not None and self._sel.size == 0
+        self._packed = self._pats2d = self._idx = None
+        self._k_eff, self._k_vec, self._thr_vec = 0, None, None
+        self._lowered = False
         if self._empty:
             # A legal query whose answer is no rows; geometry is still
             # validated (pattern longer than fragment, empty pattern).
             self.plan = engine._empty_plan(query)
-            self._packed = self._pats2d = self._idx = None
-            self._k_eff, self._k_vec, self._thr_vec = 0, None, None
+            self._mode = self.plan.mode
             return
 
+        if self._sel is not None:
+            if self._sel.min() < 0 or self._sel.max() >= corpus.n_rows:
+                # jnp gathers clamp out-of-range indices silently; fail
+                # loudly instead of returning the wrong rows' scores.
+                raise IndexError(
+                    f"rows must be in [0, {corpus.n_rows}), got "
+                    f"[{self._sel.min()}, {self._sel.max()}]")
+            R = len(self._sel)
+            R_pad = -(-R // corpus.row_pad) * corpus.row_pad
+            pad_idx = np.zeros(R_pad, np.int64)
+            pad_idx[:R] = self._sel
+            self._idx = jnp.asarray(pad_idx)
+
         n_rows = len(self._sel) if self._sel is not None else corpus.n_rows
-        self.plan = engine._plan_query(query, n_rows)
+        # Mode pinned at compile time, before any growth can happen.
+        self._mode = engine._infer_mode(query, n_rows)
+        if n_rows == 0:
+            # Reserved-but-empty corpus: geometry is validated now (the
+            # empty plan raises on bad patterns); lowering is deferred to
+            # the first run that sees live rows.
+            self.plan = engine._empty_plan(query, mode=self._mode)
+            return
+        self._lower(n_rows)
+
+    def _lower(self, n_rows: int) -> None:
+        """Plan + pack against ``n_rows`` corpus rows (pinned mode)."""
+        engine, query = self.engine, self.query
+        self.plan = engine._plan_query(query, n_rows, mode=self._mode)
         plan = self.plan
 
         # Per-query reduction parameters (batched runs only).
@@ -195,35 +236,50 @@ class CompiledMatch:
                 jnp.bfloat16)
         else:
             self._packed = None
+        self._lowered = True
 
-        if self._sel is not None:
-            if self._sel.min() < 0 or self._sel.max() >= corpus.n_rows:
-                # jnp gathers clamp out-of-range indices silently; fail
-                # loudly instead of returning the wrong rows' scores.
-                raise IndexError(
-                    f"rows must be in [0, {corpus.n_rows}), got "
-                    f"[{self._sel.min()}, {self._sel.max()}]")
-            R = len(self._sel)
-            R_pad = -(-R // corpus.row_pad) * corpus.row_pad
-            pad_idx = np.zeros(R_pad, np.int64)
-            pad_idx[:R] = self._sel
-            self._idx = jnp.asarray(pad_idx)
+    def _revalidate(self, n_rows: int) -> None:
+        """Refresh plan geometry for a corpus whose live row count moved.
+
+        Mode stays pinned; the packed pattern operands are row-count
+        independent, so only the plan (chunking, padded row count, cost
+        estimate) is recomputed -- unless the roofline now picks a
+        different kernel, in which case the tiny pattern operands are
+        re-packed too.  The resident corpus forms are untouched either
+        way.
+        """
+        new_plan = self.engine._plan_query(self.query, n_rows,
+                                           mode=self._mode)
+        if new_plan.backend != self.plan.backend:
+            self._lower(n_rows)
         else:
-            self._idx = None
+            self.plan = new_plan
 
     # -- execution ------------------------------------------------------------
     def run(self) -> MatchResult:
-        """Execute against the engine's current corpus contents."""
+        """Execute against the engine's current corpus contents.
+
+        Safe across corpus growth: geometry is revalidated when the live
+        row count changed since the last run (see class docstring).
+        """
         if self._empty:
             return self.engine._empty_result(self.query, self.plan)
-        engine, plan, query = self.engine, self.plan, self.query
+        engine, query = self.engine, self.query
         reduction = query.reduction
         if self._sel is not None:
             R = len(self._sel)
             R_pad = self._idx.shape[0]
         else:
             R = engine.corpus.n_rows
+            if R == 0:
+                # Reserved-but-empty corpus: the answer is no rows (yet).
+                return engine._empty_result(query, self.plan)
             R_pad = engine.corpus.n_rows_padded
+            if not self._lowered:
+                self._lower(R)
+            elif self.plan.n_rows != R:
+                self._revalidate(R)
+        plan = self.plan
         step = plan.chunk_rows
         if engine._row_shards > 1:
             tile = _swar.ROW_TILE * engine._row_shards
@@ -330,23 +386,26 @@ class MatchEngine:
                  interpret: Optional[bool] = None,
                  mesh: Optional[Mesh] = None, rules=None,
                  compile_cache_size: int = 128):
-        n_corpus_rows = (corpus.n_rows if isinstance(corpus, PackedCorpus)
-                         else np.asarray(corpus).shape[0])
-        if n_corpus_rows < 1:
+        n_row_slots = (corpus.capacity if isinstance(corpus, PackedCorpus)
+                       else np.asarray(corpus).shape[0])
+        if n_row_slots < 1:
             # Fail at construction, not deep inside the planner on the
-            # first query ("corpus has no rows" with no context).
+            # first query ("corpus has no rows" with no context).  A
+            # growable corpus with reserved capacity but no live rows yet
+            # is fine: queries answer "no rows" until the first append.
             raise ValueError("MatchEngine needs a non-empty corpus: got 0 "
-                             "fragment rows")
+                             "fragment rows and no reserved capacity "
+                             "(PackedCorpus(..., capacity=N) to start "
+                             "empty)")
         self.mesh = mesh
         self.rules = rules
         self._row_shards = 1
         self._row_axes: Optional[Tuple[str, ...]] = None
         row_pad = _swar.ROW_TILE
         if mesh is not None:
-            n = (corpus.n_rows if isinstance(corpus, PackedCorpus)
-                 else np.asarray(corpus).shape[0])
             r = _sharding.resolve_axis(
-                "rows", -(-n // _swar.ROW_TILE) * _swar.ROW_TILE, mesh, rules)
+                "rows", -(-n_row_slots // _swar.ROW_TILE) * _swar.ROW_TILE,
+                mesh, rules)
             if r is not None:
                 self._row_axes = r if isinstance(r, tuple) else (r,)
                 self._row_shards = int(
@@ -400,18 +459,31 @@ class MatchEngine:
         mode = query.mode
         if mode is not None:
             if mode == "per_row" and query.shape[0] != n_rows:
-                raise ValueError("per_row patterns must have one row per "
-                                 "corpus row")
+                raise ValueError(
+                    "per_row patterns must have one row per corpus row: "
+                    f"got {query.shape[0]} pattern rows for {n_rows} live "
+                    "rows (did the corpus grow since the query was "
+                    "compiled?)")
             return mode
         # (Q, P) with Q == n_rows is ambiguous; resolve like the historical
         # ops API: the mxu kernel is inherently batched, everything else
         # reads a row-count match as per-row.  Pass mode= to be explicit.
+        # CompiledMatch pins this resolution at compile time, so appends
+        # can never flip an inferred per_row into batched (or vice versa).
         if query.backend == "mxu":
             return "batched"
         return "per_row" if query.shape[0] == n_rows else "batched"
 
-    def _plan_query(self, query: MatchQuery, n_rows: int) -> Plan:
-        mode = self._infer_mode(query, n_rows)
+    def _plan_query(self, query: MatchQuery, n_rows: int,
+                    mode: Optional[str] = None) -> Plan:
+        if mode is None:
+            mode = self._infer_mode(query, n_rows)
+        elif mode == "per_row" and query.shape[0] != n_rows:
+            raise ValueError(
+                f"per_row query compiled for {query.shape[0]} corpus rows "
+                f"cannot run against {n_rows} live rows; per_row queries "
+                "are geometry-bound to their compile-time corpus -- "
+                "recompile with one pattern per current corpus row")
         return self.planner.plan(
             n_rows=n_rows,
             fragment_chars=self.corpus.fragment_chars,
@@ -528,12 +600,15 @@ class MatchEngine:
         return scores[:, :, 0] if plan.mode != "batched" else scores
 
     # -- empty subsets --------------------------------------------------------
-    def _empty_plan(self, query: MatchQuery) -> Plan:
-        """Zero-row plan for an empty row-subset query (geometry checked).
+    def _empty_plan(self, query: MatchQuery,
+                    mode: Optional[str] = None) -> Plan:
+        """Zero-row plan for a query with no rows to scan (geometry checked).
 
         The planner (rightly) refuses zero-row workloads and the streaming
         loop would otherwise ``np.concatenate`` empty chunk lists; an empty
-        subset is a legal query whose answer is simply no rows.
+        row subset -- or a reserved-but-still-empty growable corpus -- is a
+        legal query whose answer is simply no rows.  ``mode`` carries the
+        pinned compile-time resolution when the caller has one.
         """
         P = query.pattern_chars
         F = self.corpus.fragment_chars
@@ -545,7 +620,8 @@ class MatchEngine:
         if len(query.shape) == 1:
             mode, Q = "shared", 1
         else:
-            mode = query.mode if query.mode is not None else "batched"
+            if mode is None:
+                mode = query.mode if query.mode is not None else "batched"
             Q = query.n_patterns
         return Plan(backend="ref", mode=mode, n_rows=0, fragment_chars=F,
                     pattern_chars=P, n_patterns=Q if mode == "batched"

@@ -26,11 +26,19 @@ reference in lock step (Sec. 3.4); the service is the TPU analogue:
   batched tensors, bit-identical to what Q separate ``MatchEngine.match``
   calls would return.
 * **Result cache.**  An LRU keyed by the query.  The cache is dropped
-  whenever ``PackedCorpus.generation`` changes (``set_rows`` /
-  ``invalidate``), so a row write never serves stale scores.
-* **Stats.**  Per-request latency plus launch/coalescing/cache counters;
-  ``ServiceStats.snapshot()`` is what the service benchmark and the
-  launcher report.
+  whenever ``PackedCorpus.generation`` changes (``append_rows`` /
+  ``set_rows`` / ``invalidate``), so a row write or an ingested document
+  never serves stale scores.
+* **Online ingestion.**  ``ingest`` enqueues new corpus rows next to the
+  query queue; each tick applies all pending ingests as **one** batched
+  in-place ``append_rows`` (amortizing the device splice), then serves
+  the tick's queries against the grown corpus.  The corpus never repacks
+  its resident rows and the engine (with its compile cache) survives
+  growth -- the store ingests while serving, the regime the paper's
+  resident-reference design exists for (DESIGN.md Sec. 3f).
+* **Stats.**  Per-request latency plus launch/coalescing/cache/ingest
+  counters; ``ServiceStats.snapshot()`` is what the service benchmark and
+  the launcher report.
 """
 
 from __future__ import annotations
@@ -59,6 +67,8 @@ class ServiceStats:
     n_coalesced_queries: int = 0      # queries served by fused launches
     n_sequential_fallback: int = 0    # grouped queries the pricing split up
     n_failed: int = 0                 # requests completed with an error
+    n_ingested_rows: int = 0          # corpus rows appended via ingest
+    n_ingest_batches: int = 0         # append_rows calls (one per tick max)
     total_latency_s: float = 0.0      # running sum (bounded state)
     _t_first_submit: Optional[float] = None
     _t_last_complete: Optional[float] = None
@@ -87,9 +97,22 @@ class ServiceStats:
             "n_coalesced_queries": self.n_coalesced_queries,
             "n_sequential_fallback": self.n_sequential_fallback,
             "n_failed": self.n_failed,
+            "n_ingested_rows": self.n_ingested_rows,
+            "n_ingest_batches": self.n_ingest_batches,
             "avg_latency_s": round(self.avg_latency_s, 6),
             "qps": round(self.qps, 1),
         }
+
+
+def _drive_until_done(ticket, max_ticks: int, what: str) -> None:
+    """Tick the ticket's service until it completes (shared wait loop)."""
+    ticks = 0
+    while not ticket.done:
+        if ticks >= max_ticks:
+            raise RuntimeError(f"{what} did not complete "
+                               f"within {max_ticks} ticks")
+        ticket._service.tick()
+        ticks += 1
 
 
 class MatchTicket:
@@ -113,16 +136,32 @@ class MatchTicket:
 
     def wait(self, max_ticks: int = 1024) -> MatchResult:
         """Drive the service until this ticket completes."""
-        ticks = 0
-        while not self.done:
-            if ticks >= max_ticks:
-                raise RuntimeError("ticket did not complete "
-                                   f"within {max_ticks} ticks")
-            self._service.tick()
-            ticks += 1
+        _drive_until_done(self, max_ticks, "ticket")
         if self.error is not None:
             raise self.error
         return self.result
+
+
+class IngestTicket:
+    """Handle for one ``ingest`` submission; fills on the next tick.
+
+    ``start`` / ``n`` give the corpus row range the submission landed in
+    once ``done``; rows from all same-tick submissions are appended in
+    submission order by one batched ``append_rows``.
+    """
+
+    __slots__ = ("_service", "done", "start", "n")
+
+    def __init__(self, service: "MatchService", n: int):
+        self._service = service
+        self.done = False
+        self.start: Optional[int] = None
+        self.n = n
+
+    def wait(self, max_ticks: int = 1024) -> int:
+        """Drive the service until the rows are appended; returns start."""
+        _drive_until_done(self, max_ticks, "ingest")
+        return self.start
 
 
 @dataclasses.dataclass
@@ -146,6 +185,7 @@ class MatchService:
         self.cache_size = int(cache_size)
         self.stats = ServiceStats()
         self._queue: List[_Pending] = []
+        self._ingest_queue: List[Tuple[IngestTicket, np.ndarray]] = []
         self._cache: "OrderedDict[MatchQuery, MatchResult]" = OrderedDict()
         self._cache_generation = engine.corpus.generation
 
@@ -183,14 +223,38 @@ class MatchService:
             self.stats._t_first_submit = now
         return ticket
 
+    def ingest(self, rows) -> IngestTicket:
+        """Enqueue corpus rows for online, in-place appending.
+
+        ``rows`` is a (n, F) or (F,) uint8 code array.  Appends are
+        batched per tick: ``tick`` concatenates every pending submission
+        and applies them with **one** ``PackedCorpus.append_rows`` call
+        before running that tick's queries, so queries submitted in the
+        same tick see the grown corpus and the result cache invalidates
+        exactly once (generation-keyed).  Width is validated here, at the
+        door, like query validation in ``submit``.
+        """
+        rows = np.asarray(rows, np.uint8)
+        if rows.ndim == 1:
+            rows = rows[None, :]
+        F = self.engine.corpus.fragment_chars
+        if rows.ndim != 2 or rows.shape[1] != F:
+            raise ValueError(f"ingested rows must be (n, {F}); got shape "
+                             f"{rows.shape}")
+        ticket = IngestTicket(self, rows.shape[0])
+        # Copy: the append happens at tick time and the caller's buffer
+        # must not mutate underneath the queue.
+        self._ingest_queue.append((ticket, np.array(rows)))
+        return ticket
+
     def match(self, patterns, **kw) -> MatchResult:
         """Blocking convenience: submit + tick until done."""
         return self.submit(patterns, **kw).wait()
 
     def flush(self, max_ticks: int = 1024) -> None:
-        """Tick until the queue drains."""
+        """Tick until the query and ingest queues drain."""
         ticks = 0
-        while self._queue:
+        while self._queue or self._ingest_queue:
             if ticks >= max_ticks:
                 raise RuntimeError("queue did not drain")
             self.tick()
@@ -318,11 +382,30 @@ class MatchService:
                 for p in mem:
                     self._complete(p, res, cached=False)
 
-    def tick(self) -> int:
-        """Drain the queue once: cache hits, then grouped launches.
+    def _apply_ingests(self) -> None:
+        """Append all pending ingest rows as one batched in-place write."""
+        batch, self._ingest_queue = self._ingest_queue, []
+        if not batch:
+            return
+        rows = (batch[0][1] if len(batch) == 1
+                else np.concatenate([r for _, r in batch], 0))
+        start = self.engine.corpus.append_rows(rows)
+        self.stats.n_ingest_batches += 1
+        self.stats.n_ingested_rows += rows.shape[0]
+        for ticket, r in batch:
+            ticket.start = start
+            ticket.done = True
+            start += r.shape[0]
 
-        Returns the number of requests completed this tick.
+    def tick(self) -> int:
+        """Drain the queues once: ingests, cache hits, grouped launches.
+
+        Ingests apply first (one batched append), so this tick's queries
+        run against the grown corpus and the generation-keyed cache drop
+        below covers the append.  Returns the number of requests completed
+        this tick.
         """
+        self._apply_ingests()
         gen = self.engine.corpus.generation
         if gen != self._cache_generation:
             self._cache.clear()
@@ -337,8 +420,12 @@ class MatchService:
             if hit is not None:
                 self._complete(p, hit, cached=True)
                 continue
+            # Non-coalescible (2-D / batched) queries group by query
+            # content, not ticket identity: same-tick duplicates share one
+            # launch (the `uniq` dedup in _run_group) instead of paying a
+            # full launch each.
             key = p.group_key if p.group_key is not None else (
-                "solo", id(p.ticket))
+                "solo", p.query)
             groups.setdefault(key, []).append(p)
         for grp in groups.values():
             try:

@@ -1,0 +1,390 @@
+"""Growable-corpus + online-ingestion tests (DESIGN.md Sec. 3f).
+
+The load-bearing invariants:
+
+* growth is in place -- ``append_rows`` / ``reserve`` never host-repack a
+  resident row (pack counters flat) and never rebuild device forms;
+* a ``CompiledMatch`` survives growth -- geometry revalidates per run,
+  results stay oracle-equivalent on every backend, and the pinned mode
+  can never silently flip as the row count moves through Q;
+* the service ingests while serving -- appends batch per tick, the
+  generation-keyed result cache invalidates, and same-tick duplicate
+  non-coalescible queries share one launch (regression);
+* ``CRAMDedup`` holds one engine for its whole lifetime.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.matcher import sliding_scores
+from repro.data.dedup import CRAMDedup
+from repro.match import (MatchEngine, MatchQuery, MatchService,
+                         PackedCorpus)
+
+R0, F, P = 10, 96, 16
+
+
+def make_corpus(r=R0, f=F, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return rng, PackedCorpus(rng.integers(0, 4, (r, f), np.uint8), **kw)
+
+
+class TestGrowableCorpus:
+    def test_append_grows_live_rows_and_generation(self):
+        rng, corpus = make_corpus()
+        gen = corpus.generation
+        start = corpus.append_rows(rng.integers(0, 4, (3, F), np.uint8))
+        assert start == R0
+        assert corpus.n_rows == R0 + 3
+        assert corpus.generation == gen + 1         # one bump per append
+        corpus.append_rows(rng.integers(0, 4, F, np.uint8))  # 1-D row
+        assert corpus.n_rows == R0 + 4
+        assert corpus.generation == gen + 2
+
+    def test_reserve_keeps_contents_and_generation(self):
+        rng, corpus = make_corpus()
+        before = np.array(corpus.fragments)
+        gen = corpus.generation
+        corpus.reserve(4 * R0)
+        assert corpus.capacity >= 4 * R0
+        assert corpus.n_rows == R0
+        assert corpus.generation == gen             # contents unchanged
+        np.testing.assert_array_equal(corpus.fragments, before)
+
+    def test_capacity_doubles_without_host_repack(self):
+        """Growth past capacity pad-extends the device forms in place --
+        the resident rows are never re-packed on the host."""
+        rng, corpus = make_corpus()
+        corpus.swar_words(8)
+        corpus.onehot_flat(F)
+        assert corpus.host_pack_count == 2
+        total = 0
+        cap0 = corpus.capacity
+        while corpus.capacity == cap0:              # force >= 1 doubling
+            corpus.append_rows(rng.integers(0, 4, (7, F), np.uint8))
+            total += 7
+        assert corpus.host_pack_count == 2          # flat across growth
+        assert corpus.row_update_count == total
+        assert corpus._swar.shape[0] == corpus.capacity_padded
+        assert corpus._onehot.shape[0] == corpus.capacity_padded
+
+    def test_appended_rows_spliced_into_device_forms(self):
+        rng, corpus = make_corpus()
+        corpus.swar_words(8)
+        new = rng.integers(0, 4, (2, F), np.uint8)
+        start = corpus.append_rows(new)
+        from repro.core import encoding
+        words = np.asarray(corpus.swar_words(8))[start:start + 2]
+        want = encoding.pack_codes_u32(new)
+        np.testing.assert_array_equal(words[:, :want.shape[1]], want)
+
+    def test_empty_start_with_reserved_capacity(self):
+        corpus = PackedCorpus(np.zeros((0, F), np.uint8), capacity=8)
+        assert corpus.n_rows == 0 and corpus.capacity == 8
+        rng = np.random.default_rng(1)
+        corpus.append_rows(rng.integers(0, 4, (3, F), np.uint8))
+        assert corpus.n_rows == 3
+
+    def test_set_rows_error_names_the_range(self):
+        rng, corpus = make_corpus()
+        with pytest.raises(ValueError) as ei:
+            corpus.set_rows(R0 - 1, rng.integers(0, 4, (2, F), np.uint8))
+        msg = str(ei.value)
+        assert f"[{R0 - 1}, {R0 + 1})" in msg
+        assert f"{R0} live rows" in msg and "append_rows" in msg
+
+    def test_set_rows_cannot_write_reserved_region(self):
+        rng, corpus = make_corpus(capacity=64)
+        with pytest.raises(ValueError, match="live rows"):
+            corpus.set_rows(R0, rng.integers(0, 4, (1, F), np.uint8))
+
+    def test_append_rejects_width_mismatch(self):
+        rng, corpus = make_corpus()
+        with pytest.raises(ValueError, match=f"\\(n, {F}\\)"):
+            corpus.append_rows(np.zeros((2, F + 1), np.uint8))
+
+
+class TestQueryingAcrossGrowth:
+    @pytest.mark.parametrize("backend", ["swar", "mxu", "ref"])
+    def test_append_while_querying_oracle_equivalent(self, backend):
+        """One engine, repeated append->query rounds: every round must be
+        bit-identical to the from-scratch oracle on the grown corpus."""
+        rng, corpus = make_corpus(seed=2)
+        eng = MatchEngine(corpus)
+        pat = rng.integers(0, 4, P, np.uint8)
+        for _ in range(3):
+            res = eng.match(pat, backend=backend, reduction="full")
+            np.testing.assert_array_equal(
+                res.scores, sliding_scores(corpus.fragments, pat))
+            corpus.append_rows(rng.integers(0, 4, (5, F), np.uint8))
+        assert corpus.swar_pack_count <= 1
+        assert corpus.onehot_pack_count <= 1
+
+    def test_compiled_match_reused_across_appends(self):
+        """One CompiledMatch, growing corpus: pack counters flat, plan
+        geometry follows the live row count, results track content."""
+        rng, corpus = make_corpus(seed=3)
+        eng = MatchEngine(corpus)
+        pat = rng.integers(0, 4, P, np.uint8)
+        cm = eng.compile(MatchQuery.exact(pat, backend="swar"))
+        r1 = cm.run()
+        assert r1.best_scores.shape == (R0,)
+        planted = np.zeros(F, np.uint8)
+        planted[10:10 + P] = pat                    # exact hit in new row
+        corpus.append_rows(planted)
+        r2 = cm.run()                               # same compiled object
+        assert r2.best_scores.shape == (R0 + 1,)
+        assert cm.plan.n_rows == R0 + 1             # geometry revalidated
+        assert r2.best_scores[R0] == P and r2.best_locs[R0] == 10
+        np.testing.assert_array_equal(
+            r2.best_scores, sliding_scores(corpus.fragments, pat).max(1))
+        assert corpus.swar_pack_count == 1          # packed once, ever
+        assert eng.compile(MatchQuery.exact(pat, backend="swar")) is cm
+
+    def test_compiled_backend_can_shift_with_scale(self):
+        """Growth that moves the workload off the tiny-ref regime re-lowers
+        the (tiny) pattern operands; results stay oracle-equivalent."""
+        rng = np.random.default_rng(4)
+        corpus = PackedCorpus(rng.integers(0, 4, (1, 20), np.uint8))
+        eng = MatchEngine(corpus)
+        pat = rng.integers(0, 4, 8, np.uint8)
+        cm = eng.compile(MatchQuery.exact(pat))
+        assert cm.run().plan.backend == "ref"       # tiny workload
+        corpus.append_rows(rng.integers(0, 4, (499, 20), np.uint8))
+        res = cm.run()
+        assert res.plan.backend != "ref"            # roofline re-decided
+        np.testing.assert_array_equal(
+            res.best_scores, sliding_scores(corpus.fragments, pat).max(1))
+
+    def test_row_subset_pinned_to_selection_across_growth(self):
+        rng, corpus = make_corpus(seed=5)
+        eng = MatchEngine(corpus)
+        pat = rng.integers(0, 4, P, np.uint8)
+        cm = eng.compile(MatchQuery.exact(pat, rows=(3, 1, 7)))
+        r1 = cm.run()
+        corpus.append_rows(rng.integers(0, 4, (6, F), np.uint8))
+        r2 = cm.run()                               # selection unchanged
+        np.testing.assert_array_equal(r1.best_scores, r2.best_scores)
+        np.testing.assert_array_equal(
+            r2.best_scores,
+            sliding_scores(corpus.fragments[[3, 1, 7]], pat).max(1))
+
+    def test_reductions_see_appended_rows(self):
+        rng, corpus = make_corpus(seed=6)
+        eng = MatchEngine(corpus)
+        pat = rng.integers(0, 4, P, np.uint8)
+        cm = eng.compile(MatchQuery.exact(pat, reduction="topk", k=3))
+        cm.run()
+        planted = np.zeros(F, np.uint8)
+        planted[0:P] = pat
+        new_row = corpus.append_rows(planted)
+        res = cm.run()
+        assert res.topk_rows[0] == new_row          # new best row wins
+        assert res.topk_scores[0] == P
+
+
+class TestModePinnedAcrossGrowth:
+    def test_inferred_per_row_does_not_flip_to_batched(self):
+        """(Q, P) with Q == n_rows compiles as per_row; after growth the
+        same compiled query must refuse to run, not silently re-read the
+        patterns as a batch."""
+        rng, corpus = make_corpus(seed=7)
+        eng = MatchEngine(corpus)
+        pats = rng.integers(0, 4, (R0, P), np.uint8)   # Q == n_rows
+        cm = eng.compile(MatchQuery.exact(pats, backend="swar"))
+        assert cm.plan.mode == "per_row"
+        cm.run()
+        corpus.append_rows(rng.integers(0, 4, (2, F), np.uint8))
+        with pytest.raises(ValueError, match="per_row"):
+            cm.run()
+
+    def test_inferred_batched_does_not_flip_to_per_row(self):
+        """(Q, P) with Q != n_rows compiles as batched; growing the corpus
+        *to* Q rows must not flip the pinned mode."""
+        rng, corpus = make_corpus(seed=8)
+        eng = MatchEngine(corpus)
+        q = R0 + 4
+        pats = rng.integers(0, 4, (q, P), np.uint8)
+        cm = eng.compile(MatchQuery.exact(pats, backend="swar"))
+        assert cm.plan.mode == "batched"
+        r1 = cm.run()
+        assert r1.best_scores.shape == (R0, q)
+        corpus.append_rows(rng.integers(0, 4, (4, F), np.uint8))
+        r2 = cm.run()                               # now Q == n_rows
+        assert cm.plan.mode == "batched"            # still pinned
+        assert r2.best_scores.shape == (q, q)
+        for i in range(q):
+            np.testing.assert_array_equal(
+                r2.best_scores[:, i],
+                sliding_scores(corpus.fragments, pats[i]).max(1))
+
+    def test_fresh_compile_after_growth_may_infer_per_row(self):
+        """Pinning is per compiled query, not a global freeze: a *new*
+        compile sees the grown corpus and applies the inference to it."""
+        rng, corpus = make_corpus(seed=9)
+        eng = MatchEngine(corpus)
+        corpus.append_rows(rng.integers(0, 4, (2, F), np.uint8))
+        pats = rng.integers(0, 4, (R0 + 2, P), np.uint8)
+        cm = eng.compile(MatchQuery.exact(pats, backend="swar"))
+        assert cm.plan.mode == "per_row"
+
+
+class TestEmptyGrowableEngine:
+    def test_engine_accepts_reserved_empty_corpus(self):
+        corpus = PackedCorpus(np.zeros((0, F), np.uint8), capacity=16)
+        eng = MatchEngine(corpus)
+        rng = np.random.default_rng(10)
+        pat = rng.integers(0, 4, P, np.uint8)
+        res = eng.match(pat)
+        assert res.best_scores.shape == (0,)        # no rows yet
+        corpus.append_rows(rng.integers(0, 4, (3, F), np.uint8))
+        res = eng.match(pat)                        # same compiled query
+        np.testing.assert_array_equal(
+            res.best_scores, sliding_scores(corpus.fragments, pat).max(1))
+
+    def test_engine_still_rejects_zero_capacity(self):
+        with pytest.raises(ValueError, match="non-empty corpus"):
+            MatchEngine(PackedCorpus(np.zeros((0, F), np.uint8)))
+
+    def test_empty_corpus_still_validates_geometry(self):
+        corpus = PackedCorpus(np.zeros((0, F), np.uint8), capacity=16)
+        eng = MatchEngine(corpus)
+        with pytest.raises(ValueError, match="longer"):
+            eng.match(np.zeros(F + 1, np.uint8))
+
+
+class TestServiceIngestion:
+    def make(self, seed=0):
+        rng = np.random.default_rng(seed)
+        eng = MatchEngine(rng.integers(0, 4, (R0, F), np.uint8))
+        return rng, eng, MatchService(eng)
+
+    def test_ingest_applies_on_tick_in_one_batch(self):
+        rng, eng, svc = self.make(20)
+        t1 = svc.ingest(rng.integers(0, 4, (2, F), np.uint8))
+        t2 = svc.ingest(rng.integers(0, 4, F, np.uint8))
+        assert not t1.done and eng.corpus.n_rows == R0
+        svc.tick()
+        assert t1.done and t2.done
+        assert (t1.start, t1.n) == (R0, 2)
+        assert (t2.start, t2.n) == (R0 + 2, 1)      # submission order
+        assert eng.corpus.n_rows == R0 + 3
+        assert svc.stats.n_ingest_batches == 1      # one batched append
+        assert svc.stats.n_ingested_rows == 3
+
+    def test_ingest_validates_width_at_the_door(self):
+        rng, eng, svc = self.make(21)
+        with pytest.raises(ValueError, match=f"\\(n, {F}\\)"):
+            svc.ingest(np.zeros((1, F + 5), np.uint8))
+
+    def test_queries_in_same_tick_see_ingested_rows(self):
+        rng, eng, svc = self.make(22)
+        pat = rng.integers(0, 4, P, np.uint8)
+        planted = np.zeros(F, np.uint8)
+        planted[5:5 + P] = pat
+        svc.ingest(planted)
+        ticket = svc.submit(pat)
+        svc.tick()
+        assert ticket.result.best_scores.shape == (R0 + 1,)
+        assert ticket.result.best_scores[R0] == P
+
+    def test_cache_invalidated_by_ingest(self):
+        rng, eng, svc = self.make(23)
+        pat = rng.integers(0, 4, P, np.uint8)
+        stale = svc.match(pat)
+        svc.ingest(rng.integers(0, 4, F, np.uint8))
+        fresh = svc.submit(pat)
+        svc.tick()
+        assert not fresh.cached                     # generation moved
+        assert fresh.result.best_scores.shape[0] == R0 + 1
+        assert stale.best_scores.shape[0] == R0
+
+    def test_ingest_wait_drives_ticks(self):
+        rng, eng, svc = self.make(24)
+        t = svc.ingest(rng.integers(0, 4, F, np.uint8))
+        assert t.wait() == R0
+        assert eng.corpus.n_rows == R0 + 1
+
+    def test_flush_drains_ingest_queue(self):
+        rng, eng, svc = self.make(25)
+        svc.ingest(rng.integers(0, 4, (4, F), np.uint8))
+        svc.flush()
+        assert eng.corpus.n_rows == R0 + 4
+
+    def test_mixed_ingest_query_stream_no_repacks(self):
+        rng, eng, svc = self.make(26)
+        pats = [rng.integers(0, 4, P, np.uint8) for _ in range(6)]
+        svc.match(pats[0])                          # warm: pack forms
+        packs = eng.corpus.host_pack_count
+        for p in pats:
+            svc.ingest(rng.integers(0, 4, (2, F), np.uint8))
+            svc.submit(p)
+            svc.tick()
+        assert eng.corpus.n_rows == R0 + 12
+        assert eng.corpus.host_pack_count == packs  # 0 resident repacks
+        want = MatchEngine(np.array(eng.corpus.fragments)).match(pats[-1])
+        got = svc.match(pats[-1])
+        np.testing.assert_array_equal(got.best_scores, want.best_scores)
+        np.testing.assert_array_equal(got.best_locs, want.best_locs)
+
+
+class TestSameTickDuplicateLaunch:
+    def test_duplicate_batched_queries_share_one_launch(self):
+        """Regression: non-coalescible (2-D) duplicates in one tick used to
+        be keyed by ticket identity and each paid a full launch."""
+        rng = np.random.default_rng(30)
+        eng = MatchEngine(rng.integers(0, 4, (R0, F), np.uint8))
+        svc = MatchService(eng)
+        pats = rng.integers(0, 4, (4, P), np.uint8)
+        q = MatchQuery.exact(pats, mode="batched")
+        t1, t2 = svc.submit(q), svc.submit(q)
+        svc.tick()
+        assert svc.stats.n_launches == 1            # was 2 before the fix
+        assert t1.result is t2.result               # shared, bit-identical
+        assert t1.result.best_scores.shape == (R0, 4)
+
+    def test_distinct_batched_queries_still_launch_separately(self):
+        rng = np.random.default_rng(31)
+        eng = MatchEngine(rng.integers(0, 4, (R0, F), np.uint8))
+        svc = MatchService(eng)
+        a = MatchQuery.exact(rng.integers(0, 4, (3, P), np.uint8),
+                             mode="batched")
+        b = MatchQuery.exact(rng.integers(0, 4, (3, P), np.uint8),
+                             mode="batched")
+        ta, tb = svc.submit(a), svc.submit(b)
+        svc.tick()
+        assert svc.stats.n_launches == 2
+        assert ta.result is not tb.result
+
+
+class TestDedupLifetimeEngine:
+    def test_engine_survives_capacity_growth(self):
+        rng = np.random.default_rng(40)
+        d = CRAMDedup(threshold=1.01)               # never a duplicate
+        engine = d.engine
+        corpus = engine.corpus
+        for _ in range(70):                         # crosses capacity 64
+            d.add(rng.bytes(64))
+        assert d.engine is engine                   # no rebuild, ever
+        assert d.engine.corpus is corpus
+        assert len(d) == 70 and d.capacity == 128
+        assert d.total_row_writes == 70
+
+    def test_add_rejects_fingerprint_wider_than_fp_len(self):
+        d = CRAMDedup(fp_len=64, pattern_len=32)
+        with pytest.raises(ValueError, match="fp_len=64"):
+            d.add(np.zeros(65, np.uint8))
+        d.add(np.zeros(64, np.uint8))               # exact width is fine
+        assert len(d) == 1
+
+    def test_precomputed_fingerprint_roundtrip(self):
+        from repro.data.dedup import fingerprint
+        rng = np.random.default_rng(41)
+        doc = rng.bytes(200)
+        d = CRAMDedup(threshold=0.9)
+        d.add(fingerprint(doc, d.fp_len))           # array spelling
+        assert d.is_duplicate(doc)                  # bytes spelling agrees
+
+    def test_pattern_len_cannot_exceed_fp_len(self):
+        with pytest.raises(ValueError, match="pattern_len"):
+            CRAMDedup(fp_len=32, pattern_len=64)
