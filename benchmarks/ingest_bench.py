@@ -195,6 +195,17 @@ def run(smoke: bool = False):
     ]
 
 
+def artifact_summary() -> str:
+    """One greppable line from the committed artifact (perf trajectory)."""
+    if not BENCH_JSON.exists():
+        return ""
+    rec = json.loads(BENCH_JSON.read_text())
+    cases = " ".join(f"{r['scenario']}:docs_per_s={r['docs_per_s']}:"
+                     f"repacks={r['resident_repacks']}"
+                     for r in rec["results"])
+    return f"{BENCH_JSON.name} {cases}"
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",

@@ -155,3 +155,14 @@ def run():
          f" mxu={mxu_rows_per_s/cram_rows_per_s:.3g}x"
          " per chip vs per array"),
     ]
+
+
+def artifact_summary() -> str:
+    """One greppable line from the committed artifact (perf trajectory)."""
+    if not BENCH_JSON.exists():
+        return ""
+    rec = json.loads(BENCH_JSON.read_text())
+    return (f"{BENCH_JSON.name} warm_rows_per_s={rec['warm_rows_per_s']} "
+            f"cold_over_warm={rec['cold_over_warm']}x "
+            f"backend={rec['auto_backend']} "
+            f"host_packs={rec['host_pack_count']}")

@@ -173,6 +173,17 @@ def run(smoke: bool = False):
     ]
 
 
+def artifact_summary() -> str:
+    """One greppable line from the committed artifact (perf trajectory)."""
+    if not BENCH_JSON.exists():
+        return ""
+    rec = json.loads(BENCH_JSON.read_text())
+    cases = " ".join(f"{r['predicate']}:compiled_us={r['compiled_us']}:"
+                     f"speedup={r['speedup']}x" for r in rec["results"])
+    return (f"{BENCH_JSON.name} wildcard_over_exact="
+            f"{rec['wildcard_over_exact_compiled']} {cases}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",

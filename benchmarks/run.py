@@ -14,7 +14,13 @@ Modules (one per paper table/figure + assignment deliverables):
   service_bench     -- multi-tenant match service coalescing (beyond paper)
   query_bench       -- compiled-query reuse + wildcard predicates (beyond)
   ingest_bench      -- online ingestion into a live store (beyond paper)
+  filter_bench      -- q-gram filter-then-verify vs full scan (beyond)
   roofline          -- dry-run roofline table (assignment)
+
+Modules that maintain a committed ``BENCH_*.json`` artifact also print one
+``<name>,artifact,<summary>`` line (via their ``artifact_summary`` hook),
+so the perf trajectory across PRs is greppable straight from the driver
+output (``grep ',artifact,'``).
 """
 
 import argparse
@@ -25,7 +31,7 @@ MODULES = [
     "table1_gates", "fig5_throughput", "fig6_breakdown", "fig7_patlen",
     "fig8_tech", "fig9_10_nmp", "fig11_gates", "table4_apps",
     "sec5_5_variation", "kernel_bench", "service_bench", "query_bench",
-    "ingest_bench", "roofline",
+    "ingest_bench", "filter_bench", "roofline",
 ]
 
 
@@ -43,6 +49,11 @@ def main() -> None:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             for row_name, us, derived in mod.run():
                 print(f"{row_name},{us},{derived}")
+            summary = getattr(mod, "artifact_summary", None)
+            if summary is not None:
+                line = summary()
+                if line:
+                    print(f"{name},artifact,{line}")
         except Exception:
             failures += 1
             print(f"{name},ERROR,{traceback.format_exc(limit=1).splitlines()[-1]}")

@@ -1,0 +1,98 @@
+"""Q-gram signature filter -- Pallas TPU kernel (DESIGN.md Sec. 3g).
+
+Stage one of the filter-then-verify pipeline: the corpus index
+(``repro.match.index``) keeps one B-bit q-gram occurrence signature per
+corpus row, packed as uint32 words; a query lowers to a signature of the
+q-grams it *requires* (q-grams spanning wildcard/ambiguity positions are
+dropped, so the requirement is conservative).  This kernel scans the row
+signatures and emits a candidate-row bitmap:
+
+    absent(r)    = popcount(query_sig & ~row_sig(r))
+    candidate(r) = absent(r) <= slack
+
+``slack`` encodes the q-gram lemma: an alignment with at most ``e``
+mismatches destroys at most ``e * q`` of the pattern's fully-determined
+q-grams, and every absent signature bit witnesses >= 1 destroyed q-gram --
+so a row whose absent count exceeds ``e * q`` cannot contain a qualifying
+alignment.  Zero false negatives by construction; collisions of the
+signature hash only ever *add* candidates.
+
+This is the in-storage sparse-filter discipline (Jun et al.: prune with a
+cheap bulk filter where the data live, verify the survivors exactly): the
+kernel touches ``W_b`` words per row instead of the ``L x Wp`` words per
+row the exact scan reads, which is what makes selective queries cheap at
+scale.
+
+Data layout:
+  row_sigs (R, Wb) uint32 -- per-row q-gram signatures, rows padded to
+                             ``FILTER_ROW_TILE`` (padding rows are all-zero
+                             and sliced off by the caller).
+  qsig     (1, Wb) uint32 -- the query's required-bit signature.
+  out      (R, 1)  int32  -- 1 iff the row is a candidate.
+
+The row tile is much larger than the match kernels' (128 vs 8): the
+per-row work is a handful of word ops, so the grid must be coarse for the
+launch not to dominate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.popcount import popcount_words
+
+FILTER_ROW_TILE = 128
+
+
+def _filter_kernel(sig_ref, qsig_ref, out_ref, *, slack: int):
+    sigs = sig_ref[...]                      # (TILE, Wb)
+    qsig = qsig_ref[...]                     # (1, Wb)
+    # Full SWAR popcount per word (absent bits are arbitrary, unlike the
+    # match kernels' <=1-bit-per-lane fast path).
+    counts = popcount_words(qsig & ~sigs).sum(axis=-1, keepdims=True)
+    out_ref[...] = (counts <= slack).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("slack", "interpret"))
+def filter_qgram(row_sigs: jnp.ndarray, qsig: jnp.ndarray, *, slack: int,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Candidate-row bitmap: see module docstring for layouts.
+
+    ``slack`` is static: it is query geometry (``e * q``), one compile per
+    distinct value, like ``pattern_chars`` in the match kernels.  A
+    negative slack is legal and marks no row (the query's threshold is
+    unsatisfiable).
+    """
+    R, Wb = row_sigs.shape
+    if R % FILTER_ROW_TILE:
+        raise ValueError(
+            f"rows must be padded to a multiple of {FILTER_ROW_TILE}")
+    if qsig.shape != (1, Wb):
+        raise ValueError(f"qsig must be (1, {Wb}); got {qsig.shape}")
+    grid = (R // FILTER_ROW_TILE,)
+    kernel = functools.partial(_filter_kernel, slack=int(slack))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((FILTER_ROW_TILE, Wb), lambda i: (i, 0)),
+            pl.BlockSpec((1, Wb), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((FILTER_ROW_TILE, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        interpret=interpret,
+    )(row_sigs, qsig)
+
+
+def filter_qgram_ref(row_sigs: np.ndarray, qsig: np.ndarray,
+                     slack: int) -> np.ndarray:
+    """NumPy oracle for the filter kernel ((R,) int32 candidate flags)."""
+    absent = np.asarray(qsig, np.uint32) & ~np.asarray(row_sigs, np.uint32)
+    bytes_ = absent.view(np.uint8).reshape(absent.shape[0], -1)
+    counts = np.unpackbits(bytes_, axis=1).sum(1).astype(np.int64)
+    return (counts <= slack).astype(np.int32)

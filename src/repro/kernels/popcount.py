@@ -21,13 +21,20 @@ MUL = np.uint32(0x01010101)
 N_TILE = 256
 
 
-def _popcount_kernel(x_ref, out_ref):
-    v = x_ref[...]
+def popcount_words(v: jnp.ndarray) -> jnp.ndarray:
+    """Branch-free SWAR popcount per uint32 word (int32 out).
+
+    Pure jnp, so it inlines into Pallas kernel bodies (this module's bulk
+    kernel, ``filter_qgram``) as well as ordinary jitted code.
+    """
     v = v - ((v >> jnp.uint32(1)) & M1)
     v = (v & M2) + ((v >> jnp.uint32(2)) & M2)
     v = (v + (v >> jnp.uint32(4))) & M4
-    counts = ((v * MUL) >> jnp.uint32(24)).astype(jnp.int32)
-    out_ref[...] = counts.sum(axis=-1, keepdims=True)
+    return ((v * MUL) >> jnp.uint32(24)).astype(jnp.int32)
+
+
+def _popcount_kernel(x_ref, out_ref):
+    out_ref[...] = popcount_words(x_ref[...]).sum(axis=-1, keepdims=True)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -37,7 +37,10 @@ def run_match_service(args) -> None:
     ingestion into the stream: every Kth request also appends a fresh
     corpus row through ``service.ingest`` (batched per tick, in-place
     ``append_rows`` -- the corpus grows under load without ever repacking
-    its resident rows or rebuilding the engine).
+    its resident rows or rebuilding the engine).  ``--selective K`` makes
+    every Kth request a planted-substring threshold lookup, the workload
+    the q-gram filter index serves (DESIGN.md Sec. 3g); filter routing
+    stats print alongside QPS.
     """
     from repro.match import MatchEngine, MatchQuery, MatchService
 
@@ -46,15 +49,29 @@ def run_match_service(args) -> None:
                          np.uint8)
     eng = MatchEngine(frags)
     svc = MatchService(eng)
-    pats = rng.integers(0, 4, (args.requests, args.pattern_chars), np.uint8)
+    P = args.pattern_chars
+    pats = rng.integers(0, 4, (args.requests, P), np.uint8)
     if args.predicate == "wildcard":
         masks = (np.uint8(1) << pats).astype(np.uint8)
-        n_wild = max(1, args.pattern_chars // 8)
+        n_wild = max(1, P // 8)
         for q in range(args.requests):
-            masks[q, rng.integers(0, args.pattern_chars, n_wild)] = 0b1111
+            masks[q, rng.integers(0, P, n_wild)] = 0b1111
         queries = [MatchQuery.from_masks(m) for m in masks]
     else:
         queries = [MatchQuery.exact(p) for p in pats]
+    if args.selective:
+        # Every Kth request is a selective needle-in-haystack lookup: an
+        # exact threshold query for a substring planted in the resident
+        # corpus -- the workload the q-gram filter index exists for
+        # (DESIGN.md Sec. 3g).  The planner routes each through
+        # filter-then-verify or full scan on its own cost model; the
+        # filter stats below report what actually happened.
+        for i in range(0, args.requests, args.selective):
+            row = int(rng.integers(0, args.corpus_rows))
+            off = int(rng.integers(0, args.fragment_chars - P + 1))
+            queries[i] = MatchQuery.exact(frags[row, off:off + P],
+                                          reduction="threshold",
+                                          threshold=P)
     # Warm the forms so the ingest counters below isolate growth behavior.
     eng.match(queries[0])
     rows_before = eng.corpus.n_rows
@@ -77,7 +94,15 @@ def run_match_service(args) -> None:
           f"coalesced={stats['n_coalesced_launches']} "
           f"(fused {stats['n_coalesced_queries']} queries) "
           f"cache_hits={stats['n_cache_hits']} "
-          f"avg_latency={stats['avg_latency_s']*1e3:.1f}ms")
+          f"(hit_rate={stats['cache_hit_rate']:.2f}) "
+          f"avg_latency={stats['avg_latency_s']*1e3:.1f}ms "
+          f"ticks={stats['n_ticks']} "
+          f"launches/tick={stats['avg_launches_per_tick']}")
+    if args.selective:
+        print(f"filtered_launches={stats['n_filtered_launches']} "
+              f"(filter_hit_rate={stats['filter_hit_rate']:.2f}) "
+              f"avg_survivor_frac={stats['avg_survivor_frac']:.4f} "
+              f"index={eng.index.stats() if eng.index else None}")
     if ingests:
         grew = eng.corpus.n_rows - rows_before
         # Resident repacks = host packs beyond the lazy first one per form
@@ -113,6 +138,11 @@ def main() -> None:
                     default="exact",
                     help="match workload: exact queries or N-wildcard "
                          "accept-mask queries")
+    ap.add_argument("--selective", type=int, default=0,
+                    help="match workload: make every Kth request a "
+                         "selective exact-threshold lookup of a planted "
+                         "substring (0 disables); eligible for the q-gram "
+                         "filter index")
     ap.add_argument("--ingest-every", type=int, default=4,
                     help="match workload: ingest one fresh corpus row "
                          "every K requests (0 disables ingestion)")

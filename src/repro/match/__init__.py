@@ -17,6 +17,12 @@ The single entry point for all string-matching workloads:
   (``compile(query)`` lowers once: plan + packed pattern operands,
   LRU-cached by query content) over a sharded streaming executor with fused
   best / top-k / threshold reductions per row-chunk.
+* ``CorpusIndex`` -- device-resident per-row q-gram signature index
+  (filter-then-verify, DESIGN.md Sec. 3g): threshold queries prune rows
+  that provably cannot reach their threshold with one cheap bitmap
+  kernel pass, then verify the survivors through the exact path --
+  zero false negatives by construction, kept incrementally current
+  through ``append_rows`` / ``set_rows``.
 * ``MatchService`` -- micro-batched multi-tenant front end: queues
   concurrent queries, coalesces compatible ones into fused batched
   launches (priced by ``Planner.plan_batch``), caches results (LRU,
@@ -32,11 +38,14 @@ traffic goes through a ``MatchService``.
 
 from .corpus import PackedCorpus
 from .engine import CompiledMatch, MatchEngine, MatchResult
-from .planner import BatchPlan, Plan, Planner
+from .index import CorpusIndex, FilterOperands, build_query_filter
+from .planner import BatchPlan, FilterContext, Plan, Planner
 from .query import MatchQuery, as_query
 from .service import (IngestTicket, MatchService, MatchTicket,
                       ServiceStats)
 
-__all__ = ["PackedCorpus", "Planner", "Plan", "BatchPlan", "MatchQuery",
-           "as_query", "CompiledMatch", "MatchEngine", "MatchResult",
-           "MatchService", "MatchTicket", "IngestTicket", "ServiceStats"]
+__all__ = ["PackedCorpus", "Planner", "Plan", "BatchPlan", "FilterContext",
+           "MatchQuery", "as_query", "CompiledMatch", "MatchEngine",
+           "MatchResult", "MatchService", "MatchTicket", "IngestTicket",
+           "ServiceStats", "CorpusIndex", "FilterOperands",
+           "build_query_filter"]

@@ -92,6 +92,12 @@ class PackedCorpus:
         # set_rows / invalidate).  Result caches keyed on it
         # (match.service) drop entries computed against older contents.
         self.generation = 0
+        # Attached derived forms (match.index.CorpusIndex): observers that
+        # mirror the residency protocol -- notified of exactly the touched
+        # rows on splices, of capacity growth, and of invalidation, so
+        # they stay incrementally up to date without ever re-reading the
+        # resident rows.
+        self._indexes: list = []
 
     # -- geometry ------------------------------------------------------------
     @property
@@ -127,6 +133,25 @@ class PackedCorpus:
     def host_pack_count(self) -> int:
         """Total host-side full-corpus packing events (both forms)."""
         return self.swar_pack_count + self.onehot_pack_count
+
+    def attach_index(self, index) -> None:
+        """Register a derived-form observer (see ``match.index``).
+
+        The observer must expose ``_on_rows_written(start, rows)``,
+        ``_on_capacity()`` and ``_on_invalidate()``; it is driven by the
+        same mutation events that keep the SWAR/one-hot forms current.
+        """
+        self._indexes.append(index)
+
+    def detach_index(self, index) -> None:
+        """Stop notifying (and so stop updating) an attached observer.
+
+        An abandoned index otherwise keeps re-deriving signatures on
+        every row splice and pins its device form for the corpus
+        lifetime; detach before replacing one configuration with
+        another.  Detaching an index that is not attached is a no-op.
+        """
+        self._indexes = [ix for ix in self._indexes if ix is not index]
 
     @classmethod
     def from_reference(cls, ref_codes: np.ndarray, fragment_len: int,
@@ -206,6 +231,15 @@ class PackedCorpus:
         not move.  Contents are unchanged, so ``generation`` holds too.
         """
         capacity = int(capacity)
+        if capacity < self._n_rows:
+            # A shrink below the live region would drop resident rows the
+            # device forms still serve; refuse loudly instead of silently
+            # ignoring the request.
+            raise ValueError(
+                f"cannot reserve capacity {capacity} below the live row "
+                f"count: corpus holds {self._n_rows} live rows (capacity "
+                f"{self.capacity}); shrinking a PackedCorpus is not "
+                "supported")
         if capacity <= self.capacity:
             return
         grow = np.zeros((capacity - self.capacity, self.fragment_chars),
@@ -222,6 +256,8 @@ class PackedCorpus:
                 [self._onehot,
                  jnp.zeros((c_pad - self._onehot.shape[0],
                             self._onehot.shape[1]), jnp.bfloat16)], 0)
+        for ix in self._indexes:
+            ix._on_capacity()
 
     def append_rows(self, rows: np.ndarray) -> int:
         """Append live rows in place; returns the first new row's index.
@@ -269,6 +305,8 @@ class PackedCorpus:
                     [oh, np.zeros((n, w - oh.shape[1]), np.float32)], 1)
             self._onehot = self._onehot.at[start:start + n, :].set(
                 jnp.asarray(oh, jnp.bfloat16))
+        for ix in self._indexes:
+            ix._on_rows_written(start, rows)
         self.row_update_count += n
 
     def set_rows(self, start: int, rows: np.ndarray) -> None:
@@ -299,4 +337,6 @@ class PackedCorpus:
         """Drop cached device forms (next query repacks)."""
         self._swar = None
         self._onehot = None
+        for ix in self._indexes:
+            ix._on_invalidate()
         self.generation += 1

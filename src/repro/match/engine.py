@@ -46,12 +46,15 @@ from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import encoding
 from repro.distributed import sharding as _sharding
+from repro.kernels import filter_qgram as _fq
 from repro.kernels import match_mxu as _mxu
 from repro.kernels import match_swar as _swar
 from repro.kernels import ref as _kref
 
 from .corpus import PackedCorpus
-from .planner import Plan, Planner
+from . import index as _ix
+from .index import CorpusIndex, FilterOperands, build_query_filter
+from .planner import FilterContext, Plan, Planner
 from .query import _UNSET, MatchQuery, as_query
 
 
@@ -71,6 +74,12 @@ class MatchResult:
     topk_scores: Optional[np.ndarray] = None
     hits: Optional[np.ndarray] = None     # (n, 3|4): row, loc[, q], score
     n_chunks: int = 0
+    # Filtered execution (plan.strategy == "filter"): the verify stage ran
+    # on these corpus rows only; per-row arrays (best_locs/best_scores)
+    # cover survivors in ascending corpus-row order, while ``hits`` stays
+    # bit-identical to a full scan (the zero-false-negative invariant).
+    survivor_rows: Optional[np.ndarray] = None  # (n_surv,) corpus row ids
+    survivor_frac: Optional[float] = None       # n_surv / live rows
 
 
 def _valid_mask(P: int, wp: int) -> np.ndarray:
@@ -142,7 +151,7 @@ class CompiledMatch:
 
     __slots__ = ("engine", "query", "plan", "_packed", "_pats2d", "_sel",
                  "_idx", "_k_eff", "_k_vec", "_thr_vec", "_empty", "_mode",
-                 "_lowered")
+                 "_lowered", "_filter_ops", "_filter_dev")
 
     def __init__(self, engine: "MatchEngine", query: MatchQuery):
         self.engine = engine
@@ -154,6 +163,8 @@ class CompiledMatch:
         self._empty = self._sel is not None and self._sel.size == 0
         self._packed = self._pats2d = self._idx = None
         self._k_eff, self._k_vec, self._thr_vec = 0, None, None
+        self._filter_ops: Optional[FilterOperands] = None
+        self._filter_dev = None
         self._lowered = False
         if self._empty:
             # A legal query whose answer is no rows; geometry is still
@@ -189,7 +200,15 @@ class CompiledMatch:
     def _lower(self, n_rows: int) -> None:
         """Plan + pack against ``n_rows`` corpus rows (pinned mode)."""
         engine, query = self.engine, self.query
-        self.plan = engine._plan_query(query, n_rows, mode=self._mode)
+        # Filter operands are row-count independent (query content + index
+        # parameters only), exactly like the packed pattern operands: they
+        # are built once, survive growth and strategy changes, and the
+        # device upload happens once, lazily.  Only the plan decides
+        # whether run() uses them.
+        ctx, self._filter_ops = engine._filter_context(
+            query, self._mode, ops=self._filter_ops)
+        self.plan = engine._plan_query(query, n_rows, mode=self._mode,
+                                       filter_ctx=ctx)
         plan = self.plan
 
         # Per-query reduction parameters (batched runs only).
@@ -246,10 +265,15 @@ class CompiledMatch:
         estimate) is recomputed -- unless the roofline now picks a
         different kernel, in which case the tiny pattern operands are
         re-packed too.  The resident corpus forms are untouched either
-        way.
+        way.  The filter strategy is re-decided here too (scale and
+        measured selectivity move the two-stage tradeoff); the cached
+        filter operands are row-count independent and passed back so only
+        the survivor estimate refreshes.
         """
+        ctx, self._filter_ops = self.engine._filter_context(
+            self.query, self._mode, ops=self._filter_ops)
         new_plan = self.engine._plan_query(self.query, n_rows,
-                                           mode=self._mode)
+                                           mode=self._mode, filter_ctx=ctx)
         if new_plan.backend != self.plan.backend:
             self._lower(n_rows)
         else:
@@ -260,15 +284,23 @@ class CompiledMatch:
         """Execute against the engine's current corpus contents.
 
         Safe across corpus growth: geometry is revalidated when the live
-        row count changed since the last run (see class docstring).
+        row count changed since the last run (see class docstring).  A
+        ``plan.strategy == "filter"`` query runs the two-stage pipeline:
+        the q-gram filter kernel prunes rows that provably cannot reach
+        the threshold, then the survivors verify through the same gather
+        machinery that serves explicit ``rows=`` subsets -- ``hits`` are
+        bit-identical to the full scan by the conservativeness of the
+        filter (DESIGN.md Sec. 3g).
         """
         if self._empty:
             return self.engine._empty_result(self.query, self.plan)
         engine, query = self.engine, self.query
         reduction = query.reduction
-        if self._sel is not None:
-            R = len(self._sel)
-            R_pad = self._idx.shape[0]
+        sel, idx = self._sel, self._idx
+        survivor_frac = None
+        if sel is not None:
+            R = len(sel)
+            R_pad = idx.shape[0]
         else:
             R = engine.corpus.n_rows
             if R == 0:
@@ -279,6 +311,26 @@ class CompiledMatch:
                 self._lower(R)
             elif self.plan.n_rows != R:
                 self._revalidate(R)
+            if self.plan.strategy == "filter":
+                flags = engine._run_filter(self, R)
+                sel = np.flatnonzero(flags).astype(np.int64)
+                survivor_frac = len(sel) / R
+                ops = self._filter_ops
+                engine.index.record_selectivity(
+                    engine.index.estimate_survivor_frac(
+                        ops.n_bits, ops.slacks, calibrated=False),
+                    survivor_frac)
+                if len(sel) == 0:
+                    res = engine._empty_result(query, self.plan)
+                    res.survivor_rows = sel
+                    res.survivor_frac = 0.0
+                    return res
+                R = len(sel)
+                R_pad = -(-R // engine.corpus.row_pad) * \
+                    engine.corpus.row_pad
+                pad_idx = np.zeros(R_pad, np.int64)
+                pad_idx[:R] = sel
+                idx = jnp.asarray(pad_idx)
         plan = self.plan
         step = plan.chunk_rows
         if engine._row_shards > 1:
@@ -299,7 +351,7 @@ class CompiledMatch:
             if valid <= 0:
                 break                     # pure-padding tail chunk
             scores = engine._chunk_scores(plan, self._pats2d, c0, c1,
-                                          self._packed, self._idx)
+                                          self._packed, idx)
             scores = scores[:valid]
             n_chunks += 1
             if reduction == "full":
@@ -322,15 +374,15 @@ class CompiledMatch:
                     local = np.argwhere(sc >= float(thr_vec[0]))
                 if local.size:
                     vals = sc[tuple(local.T)]
-                    if self._sel is not None:
-                        local[:, 0] = self._sel[local[:, 0] + c0]
+                    if sel is not None:
+                        local[:, 0] = sel[local[:, 0] + c0]
                     else:
                         local[:, 0] += c0
                     hit_rows.append(np.concatenate(
                         [local, vals[:, None].astype(np.int64)], 1))
             elif reduction == "topk":
-                if self._sel is not None:
-                    chunk_rows_ids = jnp.asarray(self._sel[c0:c0 + valid])
+                if sel is not None:
+                    chunk_rows_ids = jnp.asarray(sel[c0:c0 + valid])
                 else:
                     chunk_rows_ids = jnp.arange(c0, c0 + valid)
                 if bs.ndim == 2:          # batched: top-k per pattern
@@ -359,6 +411,9 @@ class CompiledMatch:
         best_scores = np.concatenate(best_s, 0)
         res = MatchResult(plan=plan, best_locs=best_locs,
                           best_scores=best_scores, n_chunks=n_chunks)
+        if survivor_frac is not None:
+            res.survivor_rows = sel
+            res.survivor_frac = survivor_frac
         if reduction == "threshold":
             width = 3 + (1 if plan.mode == "batched" else 0)
             res.hits = (np.concatenate(hit_rows, 0) if hit_rows
@@ -385,7 +440,8 @@ class MatchEngine:
                  planner: Optional[Planner] = None,
                  interpret: Optional[bool] = None,
                  mesh: Optional[Mesh] = None, rules=None,
-                 compile_cache_size: int = 128):
+                 compile_cache_size: int = 128,
+                 index: Union[bool, CorpusIndex] = True):
         n_row_slots = (corpus.capacity if isinstance(corpus, PackedCorpus)
                        else np.asarray(corpus).shape[0])
         if n_row_slots < 1:
@@ -424,6 +480,25 @@ class MatchEngine:
         self.compile_cache_size = int(compile_cache_size)
         self._compiled: "OrderedDict[MatchQuery, CompiledMatch]" = \
             OrderedDict()
+        # Q-gram filter index (DESIGN.md Sec. 3g): attached up front (the
+        # signature pack itself is lazy, so an engine that never runs a
+        # filtered query pays nothing); ``index=False`` disables the
+        # two-stage strategy, a ``CorpusIndex`` instance overrides the
+        # default (q, n_bits) configuration.
+        if isinstance(index, CorpusIndex):
+            if index.corpus is not self.corpus:
+                raise ValueError("index is attached to a different corpus")
+            self.index: Optional[CorpusIndex] = index
+        elif index and self.corpus.fragment_chars >= _ix.DEFAULT_Q:
+            # Engines sharing a corpus share its index (and its resident
+            # signatures + selectivity calibration) instead of stacking a
+            # fresh observer per engine.
+            self.index = next(
+                (ix for ix in self.corpus._indexes
+                 if isinstance(ix, CorpusIndex)), None) \
+                or CorpusIndex(self.corpus)
+        else:
+            self.index = None
 
     # -- compilation ----------------------------------------------------------
     def compile(self, query: MatchQuery, *,
@@ -475,7 +550,8 @@ class MatchEngine:
         return "per_row" if query.shape[0] == n_rows else "batched"
 
     def _plan_query(self, query: MatchQuery, n_rows: int,
-                    mode: Optional[str] = None) -> Plan:
+                    mode: Optional[str] = None,
+                    filter_ctx: Optional[FilterContext] = None) -> Plan:
         if mode is None:
             mode = self._infer_mode(query, n_rows)
         elif mode == "per_row" and query.shape[0] != n_rows:
@@ -490,7 +566,85 @@ class MatchEngine:
             pattern_chars=query.pattern_chars,
             n_patterns=query.n_patterns if mode == "batched" else None,
             per_row=mode == "per_row", backend=query.backend,
-            chunk_rows=query.chunk_rows, predicate=query.predicate)
+            chunk_rows=query.chunk_rows, predicate=query.predicate,
+            filter_ctx=filter_ctx)
+
+    # -- q-gram filter stage (DESIGN.md Sec. 3g) ------------------------------
+    def _filter_context(self, query: MatchQuery, mode: Optional[str],
+                        ops: Optional[FilterOperands] = None
+                        ) -> Tuple[Optional[FilterContext],
+                                   Optional[FilterOperands]]:
+        """Filter eligibility + pricing inputs + operands for one query.
+
+        Returns ``(None, None)`` when the two-stage strategy is not legal:
+        the filter prunes whole rows, so only the row-sparse ``threshold``
+        reduction (whose deliverable, ``hits``, provably loses nothing to
+        conservative pruning) qualifies; explicit row subsets keep their
+        own gather path; per-row patterns have no shared signature; a
+        sharded engine streams every row by construction.  Ineligible or
+        unprunable queries simply scan -- the filter is an optimization,
+        never a semantic change.
+
+        ``ops`` short-circuits the operand build: the operands derive
+        from (query content, index q, index B) only, so a caller holding
+        them from an earlier lowering (CompiledMatch revalidating across
+        growth) passes them back and only the survivor estimate -- which
+        tracks measured density and selectivity -- is refreshed.
+        """
+        if (self.index is None or query.filter is False
+                or query.reduction != "threshold"
+                or query.rows_b is not None or mode == "per_row"
+                or self._row_shards > 1
+                or query.pattern_chars < self.index.q):
+            return None, None
+        masks2d = query.masks if len(query.shape) == 2 else \
+            query.masks[None, :]
+        if ops is None:
+            thr = query.threshold
+            if len(thr) == 1 and masks2d.shape[0] > 1:
+                thr = thr * masks2d.shape[0]
+            ops = build_query_filter(masks2d, thr, self.index.q,
+                                     self.index.n_bits)
+        # A query whose slack covers all its required bits passes every
+        # row (so does one with no fully-exact q-grams): with a survivor
+        # union, one such member makes the whole filter pointless.
+        # Prunability is content-derived and never changes across growth,
+        # so the operands are still returned (and cached by the caller) --
+        # a held unprunable query must not rebuild them on every
+        # revalidation just to re-learn it scans.
+        prunable = all(s < 0 or (b > 0 and s < b)
+                       for b, s in zip(ops.n_bits, ops.slacks))
+        if not prunable:
+            return None, ops
+        frac = self.index.estimate_survivor_frac(ops.n_bits, ops.slacks)
+        ctx = FilterContext(sig_words=self.index.sig_words,
+                            n_queries=masks2d.shape[0], prunable=True,
+                            survivor_frac=frac,
+                            force=query.filter is True)
+        return ctx, ops
+
+    def _run_filter(self, cm: CompiledMatch, n_rows: int) -> np.ndarray:
+        """Filter stage: (n_rows,) bool candidate flags for one query.
+
+        One ``filter_qgram`` dispatch per pattern; a row survives if any
+        pattern's test admits it (the batched union).  Signatures stream
+        from the device-resident index -- the exact scan's data is never
+        touched for pruned rows.
+        """
+        ops = cm._filter_ops
+        if cm._filter_dev is None:
+            cm._filter_dev = jnp.asarray(ops.qsig_words)
+        sigs = self.index.signatures()
+        tile = _fq.FILTER_ROW_TILE
+        r_pad = -(-n_rows // tile) * tile
+        rows = sigs[:r_pad]
+        flags = None
+        for qi in range(ops.qsig_words.shape[0]):
+            f = _fq.filter_qgram(rows, cm._filter_dev[qi:qi + 1],
+                                 slack=ops.slacks[qi],
+                                 interpret=self.interpret)
+            flags = f if flags is None else flags | f
+        return np.asarray(flags)[:n_rows, 0].astype(bool)
 
     def plan(self, patterns, *, backend=_UNSET, mode=_UNSET, rows=_UNSET,
              chunk_rows=_UNSET) -> Plan:
@@ -649,7 +803,7 @@ class MatchEngine:
     # -- execution ------------------------------------------------------------
     def match(self, patterns, *, backend=_UNSET, mode=_UNSET, rows=_UNSET,
               reduction=_UNSET, k=_UNSET, threshold=_UNSET,
-              chunk_rows=_UNSET) -> MatchResult:
+              chunk_rows=_UNSET, filter=_UNSET) -> MatchResult:
         """Run one query; see module docstring for reductions.
 
         ``patterns`` is either a ``MatchQuery`` (the declarative API; any
@@ -667,7 +821,7 @@ class MatchEngine:
         """
         query = as_query(patterns, backend=backend, mode=mode, rows=rows,
                          reduction=reduction, k=k, threshold=threshold,
-                         chunk_rows=chunk_rows)
+                         chunk_rows=chunk_rows, filter=filter)
         return self.compile(query).run()
 
     def scores(self, patterns, *, backend=_UNSET, mode=_UNSET, rows=_UNSET,

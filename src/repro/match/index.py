@@ -1,0 +1,355 @@
+"""Device-resident q-gram filter index (DESIGN.md Sec. 3g).
+
+The paper's premise is that at-scale matching is bound by touching every
+byte of the resident database; the companion in-storage accelerator
+literature (Jun et al.'s sparse pattern processor; Mutlu et al.'s
+minimize-data-touched discipline) prunes with a cheap filter stage before
+exact matching.  This module is that stage for the TPU engine:
+
+* ``CorpusIndex`` maintains, per corpus row, a **B-bit q-gram occurrence
+  signature**: every q-gram (q consecutive 2-bit characters) of the row is
+  hashed to one of B bits and OR'd in.  Signatures are packed as uint32
+  words and kept device-resident alongside the corpus's SWAR/one-hot forms
+  -- same lazy-pack-once protocol, same incremental row splices
+  (``append_rows`` / ``set_rows`` index only the touched rows; pack
+  counters stay flat), same generation discipline (the index never stores
+  content of its own; it derives from the corpus host buffer it observes).
+* ``build_query_filter`` lowers a query to the signature of the q-grams it
+  *requires*.  Only q-grams whose q positions are all exact (one-hot
+  accept masks) participate -- a q-gram spanning a wildcard/ambiguity
+  position is dropped, which can only lose pruning power, never
+  correctness.  **Zero false negatives by construction** (the q-gram
+  lemma): an alignment scoring >= t has at most e = floor(P - t)
+  mismatches; each mismatch destroys at most q required q-grams; each
+  signature bit absent from the row witnesses >= 1 destroyed q-gram.  So
+  ``popcount(qsig & ~rowsig) > e*q`` proves the row has no qualifying
+  alignment.  Hash collisions only ever *add* candidates.
+* **Selectivity feedback**: the index tracks measured row-signature
+  density and an EWMA of (measured / predicted) survivor fractions from
+  executed filtered queries, which calibrates the planner's two-stage
+  cost model (``Planner.plan`` with a ``FilterContext``).
+
+The filter stage itself is ``repro.kernels.filter_qgram``; the engine
+gathers survivors and verifies them through the existing exact path
+(the ``rows=`` subset machinery), bit-identical to a full scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import filter_qgram as _fq
+
+# Fibonacci-multiplicative hash constant (Knuth); the top log2(B) bits of
+# the wrapped product spread consecutive q-gram values well.
+_HASH_MUL = np.uint32(2654435761)
+
+DEFAULT_Q = 4
+DEFAULT_BITS = 256
+# One-hot accept mask -> character code (0 for non-one-hot entries; callers
+# select with the one-hot test first).
+_ONEHOT_CODE = np.zeros(256, np.uint8)
+for _c in range(4):
+    _ONEHOT_CODE[1 << _c] = _c
+
+
+def qgram_values(codes: np.ndarray, q: int) -> np.ndarray:
+    """(..., n) uint8 codes -> (..., n-q+1) uint32 base-4 q-gram values."""
+    codes = np.asarray(codes, np.uint8)
+    n = codes.shape[-1]
+    if n < q:
+        return np.zeros(codes.shape[:-1] + (0,), np.uint32)
+    vals = np.zeros(codes.shape[:-1] + (n - q + 1,), np.uint32)
+    for j in range(q):
+        vals |= codes[..., j:n - q + 1 + j].astype(np.uint32) << \
+            np.uint32(2 * j)
+    return vals
+
+
+def hash_bits(vals: np.ndarray, n_bits: int) -> np.ndarray:
+    """q-gram values -> signature bit indices in [0, n_bits)."""
+    shift = np.uint32(32 - int(n_bits).bit_length() + 1)
+    return ((np.asarray(vals, np.uint32) * _HASH_MUL) >> shift).astype(
+        np.int64)
+
+
+def pack_bit_rows(bit_idx_rows: Sequence[np.ndarray], n_bits: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row bit indices -> ((n, Wb) uint32 words, (n,) distinct counts).
+
+    Bit ``b`` of a signature lives at bit ``b % 32`` of word ``b // 32``.
+    ``bit_idx_rows`` is a (n, G) array or a ragged sequence of 1-D index
+    arrays; duplicates are free (OR is idempotent).  One vectorized
+    scatter packs all rows at once -- the first index build on a large
+    corpus is O(total q-grams) numpy work, not an O(rows) Python loop --
+    and the distinct-bit counts fall out of the packed words.
+    """
+    n = len(bit_idx_rows)
+    wb = n_bits // 32
+    if n == 0:
+        return np.zeros((0, wb), np.uint32), np.zeros(0, np.int32)
+    if isinstance(bit_idx_rows, np.ndarray) and bit_idx_rows.ndim == 2:
+        row_ids = np.repeat(np.arange(n), bit_idx_rows.shape[1])
+        flat_bits = bit_idx_rows.reshape(-1)
+    else:
+        lens = np.fromiter((len(b) for b in bit_idx_rows), np.int64, n)
+        row_ids = np.repeat(np.arange(n), lens)
+        flat_bits = (np.concatenate([np.asarray(b, np.int64)
+                                     for b in bit_idx_rows])
+                     if lens.sum() else np.zeros(0, np.int64))
+    # Boolean occupancy matrix + lane-shift pack (the pack_codes_u32
+    # idiom): one fancy assignment and one vectorized reduction, no
+    # unbuffered ufunc.at scatter.  Duplicate bits are free.
+    occupancy = np.zeros((n, n_bits), np.uint32)
+    occupancy[row_ids, flat_bits] = 1
+    lanes = occupancy.reshape(n, wb, 32)
+    shifts = np.arange(32, dtype=np.uint32)
+    words = (lanes << shifts).sum(-1, dtype=np.uint64).astype(np.uint32)
+    counts = occupancy.sum(1).astype(np.int32)
+    return words, counts
+
+
+def row_signatures(rows: np.ndarray, q: int, n_bits: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """(n, F) uint8 code rows -> packed signatures + per-row bit counts."""
+    rows = np.asarray(rows, np.uint8)
+    bits = hash_bits(qgram_values(rows, q), n_bits)
+    return pack_bit_rows(bits, n_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterOperands:
+    """Per-query filter-stage operands, row-count independent.
+
+    Derived from (query content, index q, index B) only, so -- like the
+    packed pattern operands -- they survive every corpus generation and
+    every growth step unchanged.
+    """
+
+    qsig_words: np.ndarray        # (Q, Wb) uint32 required-bit signatures
+    slacks: Tuple[int, ...]       # per-query e*q (negative: unsatisfiable)
+    n_bits: Tuple[int, ...]       # per-query distinct required bits
+
+
+def build_query_filter(masks2d: np.ndarray,
+                       thresholds: Sequence[float], q: int,
+                       n_bits: int) -> FilterOperands:
+    """Lower query accept-masks + thresholds to filter operands.
+
+    ``masks2d`` is (Q, P) uint8 accept masks; a pattern position is
+    *exact* iff its mask is one-hot.  Q-grams spanning any non-exact
+    position are dropped (conservative).  ``slack = floor(P - t) * q``:
+    the mismatch budget times the per-mismatch q-gram damage bound.
+    """
+    masks2d = np.asarray(masks2d, np.uint8)
+    Q, P = masks2d.shape
+    onehot = (masks2d & (masks2d - 1)) == 0          # mask 0 never occurs
+    codes = _ONEHOT_CODE[masks2d]
+    sig_rows = []
+    for i in range(Q):
+        if P < q:
+            sig_rows.append(np.zeros(0, np.int64))
+            continue
+        vals = qgram_values(codes[i], q)
+        usable = np.ones(P - q + 1, bool)
+        for j in range(q):
+            usable &= onehot[i, j:P - q + 1 + j]
+        sig_rows.append(hash_bits(vals[usable], n_bits))
+    words, counts = pack_bit_rows(sig_rows, n_bits)
+    slacks = tuple(
+        (math.floor(P - float(t)) * q) if float(t) <= P else -1
+        for t in thresholds)
+    return FilterOperands(qsig_words=words, slacks=slacks,
+                          n_bits=tuple(int(c) for c in counts))
+
+
+def binom_cdf(k: int, n: int, p: float) -> float:
+    """P(Binomial(n, p) <= k), direct log-space sum (no scipy dep)."""
+    if k < 0:
+        return 0.0
+    if k >= n or p <= 0.0:
+        return 1.0
+    if p >= 1.0:
+        return 0.0
+    lg = math.lgamma
+    total = 0.0
+    for a in range(k + 1):
+        total += math.exp(lg(n + 1) - lg(a + 1) - lg(n - a + 1)
+                          + a * math.log(p) + (n - a) * math.log1p(-p))
+    return min(1.0, total)
+
+
+class CorpusIndex:
+    """Per-row q-gram signatures, device-resident and grown in place.
+
+    Attaches to a ``PackedCorpus`` as an observer: every row splice
+    (``append_rows`` / ``set_rows``) re-derives signatures for exactly the
+    touched rows and splices them into the cached device form
+    (``.at[].set``), capacity growth zero-extends on device, and
+    ``invalidate`` drops the form -- the same residency protocol as the
+    SWAR/one-hot forms, with its own ``sig_pack_count`` asserting the
+    at-most-one-host-pack invariant.
+    """
+
+    def __init__(self, corpus, *, q: int = DEFAULT_Q,
+                 n_bits: int = DEFAULT_BITS):
+        q = int(q)
+        n_bits = int(n_bits)
+        if q < 1 or q > 16:
+            raise ValueError(f"q must be in [1, 16], got {q}")
+        if n_bits < 32 or n_bits & (n_bits - 1):
+            raise ValueError(
+                f"n_bits must be a power of two >= 32, got {n_bits}")
+        if corpus.fragment_chars < q:
+            raise ValueError(
+                f"fragment_chars={corpus.fragment_chars} shorter than "
+                f"q={q}: no q-grams to index")
+        self.corpus = corpus
+        self.q = q
+        self.n_bits = n_bits
+        self.sig_words = n_bits // 32
+        self._sigs: Optional[jnp.ndarray] = None     # (S_pad, Wb) uint32
+        self._row_bits = np.zeros(corpus.capacity, np.int32)
+        self.sig_pack_count = 0
+        self.row_update_count = 0
+        # Selectivity feedback: EWMA of measured/predicted survivor-
+        # fraction ratios from executed filtered queries (the planner's
+        # calibration term), plus plain counters for stats surfaces.
+        self._calibration: Optional[float] = None
+        self.n_filter_runs = 0
+        self.last_survivor_frac: Optional[float] = None
+        corpus.attach_index(self)
+
+    # -- geometry --------------------------------------------------------------
+    @property
+    def _rows_padded(self) -> int:
+        """Device-form row count: capacity padded to the filter row tile."""
+        tile = _fq.FILTER_ROW_TILE
+        return -(-self.corpus.capacity_padded // tile) * tile
+
+    # -- residency -------------------------------------------------------------
+    def signatures(self) -> jnp.ndarray:
+        """(S_pad, Wb) uint32 device-resident row signatures.
+
+        First call packs the live rows on the host (one event; reserved
+        and padding rows are all-zero); later calls reuse the cached
+        array, which row splices keep up to date incrementally.
+        """
+        if self._sigs is None:
+            n = self.corpus.n_rows
+            words = np.zeros((self._rows_padded, self.sig_words), np.uint32)
+            if n:
+                live, counts = row_signatures(
+                    self.corpus.fragments, self.q, self.n_bits)
+                words[:n] = live
+                self._row_bits[:n] = counts
+            self._sigs = jnp.asarray(words)
+            self.sig_pack_count += 1
+        return self._sigs
+
+    # -- corpus observer hooks -------------------------------------------------
+    def _on_rows_written(self, start: int, rows: np.ndarray) -> None:
+        """Touched-rows-only splice, mirroring ``PackedCorpus._splice_device``."""
+        n = rows.shape[0]
+        if self._sigs is not None:
+            words, counts = row_signatures(rows, self.q, self.n_bits)
+            self._sigs = self._sigs.at[start:start + n, :].set(
+                jnp.asarray(words))
+            self._row_bits[start:start + n] = counts
+            self.row_update_count += n
+
+    def _on_capacity(self) -> None:
+        """Capacity growth: zero-extend on device, extend host counters."""
+        cap = self.corpus.capacity
+        if cap > self._row_bits.shape[0]:
+            self._row_bits = np.concatenate(
+                [self._row_bits,
+                 np.zeros(cap - self._row_bits.shape[0], np.int32)])
+        if self._sigs is not None:
+            pad = self._rows_padded
+            if self._sigs.shape[0] < pad:
+                self._sigs = jnp.concatenate(
+                    [self._sigs,
+                     jnp.zeros((pad - self._sigs.shape[0], self.sig_words),
+                               jnp.uint32)], 0)
+
+    def _on_invalidate(self) -> None:
+        self._sigs = None
+
+    # -- selectivity model -----------------------------------------------------
+    def density(self) -> float:
+        """Mean fraction of signature bits set per live row.
+
+        Measured once the index is built; before that, the analytic prior
+        for hashed q-gram occupancy (F - q + 1 throws into B bins) -- so
+        the planner can price the filter before paying the first pack.
+        """
+        n = self.corpus.n_rows
+        if self._sigs is not None and n:
+            return float(self._row_bits[:n].mean()) / self.n_bits
+        g = self.corpus.fragment_chars - self.q + 1
+        return 1.0 - (1.0 - 1.0 / self.n_bits) ** max(g, 0)
+
+    def estimate_survivor_frac(self, n_query_bits: Sequence[int],
+                               slacks: Sequence[int], *,
+                               calibrated: bool = True) -> float:
+        """Estimated fraction of rows surviving the (union) filter.
+
+        Per query: P(#absent required bits <= slack) with bits modeled as
+        independently present at the measured density; union-bounded over
+        queries.  ``calibrated=True`` (the planner's spelling) scales by
+        the measured-selectivity EWMA; ``calibrated=False`` is the raw
+        model prediction -- the quantity measurements are recorded
+        against, so the calibration converges to measured/model instead
+        of chasing its own output.
+        """
+        d = self.density()
+        total = 0.0
+        for bq, slack in zip(n_query_bits, slacks):
+            if slack < 0:
+                continue                 # unsatisfiable: prunes every row
+            total += binom_cdf(int(slack), int(bq), 1.0 - d)
+        if calibrated and self._calibration is not None:
+            total *= self._calibration
+        return float(min(1.0, total))
+
+    def record_selectivity(self, predicted: float, measured: float) -> None:
+        """Fold one filtered run's outcome into the calibration EWMA.
+
+        ``predicted`` must be the **uncalibrated** model estimate
+        (``estimate_survivor_frac(..., calibrated=False)``): folding in
+        ratios against already-calibrated predictions would converge the
+        calibrated estimate only to the geometric mean of model and
+        truth, never to the truth itself.
+
+        The per-update ratio clamp is deliberately tight (one decade):
+        only filtered runs ever record, so a single wild outlier that
+        saturated the estimate could flip every future eligible query to
+        "scan" and never be contradicted -- an absorbing state.  Walking
+        the calibration a long way therefore requires *consistent*
+        evidence across runs, each of which still took the filter path.
+        """
+        ratio = measured / max(predicted, 1e-9)
+        ratio = min(max(ratio, 0.1), 10.0)
+        prev = 1.0 if self._calibration is None else self._calibration
+        self._calibration = 0.7 * prev + 0.3 * ratio
+        self.n_filter_runs += 1
+        self.last_survivor_frac = measured
+
+    def stats(self) -> dict:
+        return {
+            "q": self.q,
+            "n_bits": self.n_bits,
+            "sig_pack_count": self.sig_pack_count,
+            "row_update_count": self.row_update_count,
+            "density": round(self.density(), 4),
+            "n_filter_runs": self.n_filter_runs,
+            "last_survivor_frac": self.last_survivor_frac,
+            "calibration": (None if self._calibration is None
+                            else round(self._calibration, 4)),
+        }

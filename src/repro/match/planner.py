@@ -18,6 +18,7 @@ of truth per query.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 from repro.core.tech import TPU_V5E, TPURoofline
@@ -46,6 +47,9 @@ VPU_SLOWDOWN = 64
 # ref backend sanely against the kernels when pricing batches.
 REF_OPS_PER_S = 1e9
 REF_CALL_OVERHEAD_S = 5e-5
+# Q-gram filter stage (filter_qgram kernel): and/not + full SWAR popcount
+# + compare per signature word.
+FILTER_OPS_PER_WORD = 18
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +77,10 @@ class Plan:
     reason: str = ""            # human-readable selection rationale
     # Predicate.
     predicate: str = "exact"    # "exact" | "accept" (accept-set masks)
+    # Two-stage execution (DESIGN.md Sec. 3g).
+    strategy: str = "scan"      # "scan" | "filter" (filter-then-verify)
+    filter_words: int = 0       # signature words per row (filter plans)
+    est_survivor_frac: float = 1.0  # estimated post-filter row fraction
 
 
 def _swar_geometry(P: int, L: int) -> tuple[int, int]:
@@ -87,6 +95,23 @@ def _mxu_geometry(P: int, L: int, Q: int) -> tuple[int, int, int, int]:
     l_pad = max(-(-L // _mxu.L_TILE) * _mxu.L_TILE, _mxu.L_TILE)
     q_pad = -(-Q // 128) * 128
     return l_pad, p_chars, q_pad, l_pad + p_chars
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterContext:
+    """Filter-stage pricing inputs for one eligible threshold query.
+
+    Built by the engine (``MatchEngine._filter_context``) from the query
+    content and the corpus index configuration; the planner prices the
+    two-stage pipeline (filter + estimated-survivor verify) against the
+    full scan and records the verdict in ``Plan.strategy``.
+    """
+
+    sig_words: int              # uint32 signature words per row
+    n_queries: int              # filter-kernel dispatches (1 per pattern)
+    prunable: bool              # every query can exclude rows
+    survivor_frac: float        # estimated post-filter row fraction
+    force: bool = False         # query hint filter=True: skip the pricing
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +167,21 @@ class Planner:
         """Q jnp reference passes on the host (batched ref still loops Q)."""
         return Q * (R * L * P / REF_OPS_PER_S + REF_CALL_OVERHEAD_S)
 
+    def filter_seconds(self, R: int, sig_words: int,
+                       n_queries: int = 1) -> float:
+        """Q filter-kernel dispatches over R row signatures.
+
+        Each dispatch reads ``sig_words`` uint32 per row plus the query
+        signature, does a handful of integer ops per word on the VPU, and
+        writes one flag per row -- orders of magnitude less data touched
+        than the exact scan, which is the whole point of the stage.
+        """
+        ops = n_queries * R * sig_words * FILTER_OPS_PER_WORD
+        bytes_hbm = n_queries * (R * sig_words * 4 + R * 4)
+        t_compute = ops / (self.roofline.peak_bf16_flops / VPU_SLOWDOWN)
+        t_mem = bytes_hbm / self.roofline.hbm_bw
+        return max(t_compute, t_mem) + n_queries * DISPATCH_OVERHEAD_S
+
     def mxu_seconds(self, R: int, L: int, P: int, Q: int = 1) -> float:
         """One batched MXU pass over all Q patterns.
 
@@ -174,7 +214,8 @@ class Planner:
              n_patterns: Optional[int] = None, per_row: bool = False,
              backend: Optional[str] = None,
              chunk_rows: Optional[int] = None,
-             predicate: str = "exact") -> Plan:
+             predicate: str = "exact",
+             filter_ctx: Optional[FilterContext] = None) -> Plan:
         R, F, P = n_rows, fragment_chars, pattern_chars
         if R < 1:
             raise ValueError("corpus has no rows")
@@ -236,11 +277,41 @@ class Planner:
             est = self.ref_seconds(R, L, P, Q)
         chunk = self._chunk_rows(R_pad, bytes_per_row, row_tile, chunk_rows)
 
+        # Two-stage pricing (DESIGN.md Sec. 3g): for an eligible threshold
+        # query, compare filter + estimated-survivor verify against the
+        # full scan just chosen.  The verify stage keeps the scan's kernel
+        # (the packed pattern operands are shared between strategies); the
+        # survivor estimate carries the index's measured-selectivity
+        # calibration.  A query-level filter=True hint skips the pricing
+        # (but never the prunability requirement).
+        strategy, filter_words, surv = "scan", 0, 1.0
+        if filter_ctx is not None and filter_ctx.prunable:
+            frac = filter_ctx.survivor_frac
+            r_surv = max(1, math.ceil(frac * R))
+            t_fil = self.filter_seconds(R, filter_ctx.sig_words,
+                                        filter_ctx.n_queries)
+            if chosen == "swar":
+                t_ver = self.swar_seconds(r_surv, L, P, Q, predicate)
+            elif chosen == "mxu":
+                t_ver = self.mxu_seconds(r_surv, L, P, Q)
+            else:
+                t_ver = self.ref_seconds(r_surv, L, P, Q)
+            if filter_ctx.force or t_fil + t_ver < est:
+                strategy = "filter"
+                filter_words = filter_ctx.sig_words
+                surv = frac
+                reason += (f"; filter+verify {t_fil + t_ver:.3g}s "
+                           f"{'forced' if filter_ctx.force else '<'} scan "
+                           f"{est:.3g}s (est survivors {frac:.3g})")
+                est = t_fil + t_ver
+
         return Plan(backend=chosen, mode=mode, n_rows=R, fragment_chars=F,
                     pattern_chars=P, n_patterns=Q, n_locs=L, wp=wp,
                     need_words=need, l_pad=l_pad, p_chars_pad=p_chars,
                     q_pad=q_pad, f_chars=f_chars, chunk_rows=chunk,
-                    est_seconds=est, reason=reason, predicate=predicate)
+                    est_seconds=est, reason=reason, predicate=predicate,
+                    strategy=strategy, filter_words=filter_words,
+                    est_survivor_frac=surv)
 
     # -- batch pricing --------------------------------------------------------
     def plan_batch(self, *, n_rows: int, fragment_chars: int,

@@ -78,6 +78,12 @@ class MatchQuery:
     rows_b: Optional[bytes] = None          # int64 row ids, flattened
     backend: Optional[str] = None           # kernel override
     chunk_rows: Optional[int] = None        # streaming chunk override
+    # Q-gram filter hint (threshold queries, DESIGN.md Sec. 3g): None lets
+    # the planner's two-stage cost model decide, False opts out, True
+    # forces the filtered strategy whenever it is legal (the query has
+    # prunable signature bits) -- the pricing is skipped, never the
+    # conservativeness requirement.
+    filter: Optional[bool] = None
 
     # -- constructors ---------------------------------------------------------
     @classmethod
@@ -103,7 +109,8 @@ class MatchQuery:
     def from_masks(cls, masks, *, mode: Optional[str] = None,
                    reduction: str = "best", k=_DEFAULT_K, threshold=None,
                    rows=None, backend: Optional[str] = None,
-                   chunk_rows: Optional[int] = None) -> "MatchQuery":
+                   chunk_rows: Optional[int] = None,
+                   filter: Optional[bool] = None) -> "MatchQuery":
         """Query from per-position accept masks (uint8, bit c = code c)."""
         masks = _mask_array(masks)
         if mode == "shared" and masks.ndim == 1:
@@ -144,11 +151,18 @@ class MatchQuery:
             rows_b = np.asarray(rows, np.int64).reshape(-1).tobytes()
         if chunk_rows is not None and int(chunk_rows) < 1:
             raise ValueError("chunk_rows must be >= 1")
+        if filter is not None and not isinstance(filter, bool):
+            raise ValueError("filter must be None, True or False")
+        if filter and reduction != "threshold":
+            raise ValueError(
+                "filter=True needs reduction='threshold': only a row-"
+                "sparse reduction can skip pruned rows exactly (best/topk/"
+                "full report every row)")
         return cls(masks_b=masks.tobytes(), shape=tuple(masks.shape),
                    mode=mode, reduction=reduction, k=k_norm,
                    threshold=thr_norm, rows_b=rows_b, backend=backend,
                    chunk_rows=None if chunk_rows is None
-                   else int(chunk_rows))
+                   else int(chunk_rows), filter=filter)
 
     @classmethod
     def iupac(cls, pattern: Union[str, Sequence[str]],
@@ -218,14 +232,16 @@ class MatchQuery:
         h = hashlib.blake2b(digest_size=16)
         h.update(self.masks_b)
         for part in (self.shape, self.mode, self.reduction, self.k,
-                     self.threshold, self.backend, self.chunk_rows):
+                     self.threshold, self.backend, self.chunk_rows,
+                     self.filter):
             h.update(repr(part).encode())
         h.update(self.rows_b if self.rows_b is not None else b"\xff")
         return h.hexdigest()
 
 
 _SHIM_DEFAULTS = dict(reduction="best", k=_DEFAULT_K, threshold=None,
-                      rows=None, backend=None, mode=None, chunk_rows=None)
+                      rows=None, backend=None, mode=None, chunk_rows=None,
+                      filter=None)
 # Unset marker, distinct from every real default, so an *explicitly passed*
 # default value (match(query, reduction="best")) still counts as a clash.
 _UNSET = object()
@@ -252,4 +268,5 @@ def as_query(patterns, **kw) -> MatchQuery:
     mode = merged.pop("mode")
     return MatchQuery.exact(patterns, mode=mode, **{
         name: merged[name] for name in
-        ("reduction", "k", "threshold", "rows", "backend", "chunk_rows")})
+        ("reduction", "k", "threshold", "rows", "backend", "chunk_rows",
+         "filter")})

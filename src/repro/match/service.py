@@ -37,8 +37,12 @@ reference in lock step (Sec. 3.4); the service is the TPU analogue:
   growth -- the store ingests while serving, the regime the paper's
   resident-reference design exists for (DESIGN.md Sec. 3f).
 * **Stats.**  Per-request latency plus launch/coalescing/cache/ingest
-  counters; ``ServiceStats.snapshot()`` is what the service benchmark and
-  the launcher report.
+  counters, per-tick launch counts, cache hit-rate, and q-gram filter
+  routing (filtered-launch count, hit-rate, measured survivor fraction --
+  the engine routes eligible threshold queries through the
+  ``CorpusIndex`` transparently, DESIGN.md Sec. 3g);
+  ``ServiceStats.snapshot()`` is what the service benchmark and the
+  launcher report.
 """
 
 from __future__ import annotations
@@ -69,6 +73,10 @@ class ServiceStats:
     n_failed: int = 0                 # requests completed with an error
     n_ingested_rows: int = 0          # corpus rows appended via ingest
     n_ingest_batches: int = 0         # append_rows calls (one per tick max)
+    n_ticks: int = 0                  # tick() calls
+    launches_last_tick: int = 0       # engine launches in the latest tick
+    n_filtered_launches: int = 0      # launches that ran filter-then-verify
+    sum_survivor_frac: float = 0.0    # running sum over filtered launches
     total_latency_s: float = 0.0      # running sum (bounded state)
     _t_first_submit: Optional[float] = None
     _t_last_complete: Optional[float] = None
@@ -77,6 +85,28 @@ class ServiceStats:
     def avg_latency_s(self) -> float:
         return (self.total_latency_s / self.n_completed
                 if self.n_completed else 0.0)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of completed requests served from the result cache."""
+        return (self.n_cache_hits / self.n_completed
+                if self.n_completed else 0.0)
+
+    @property
+    def avg_launches_per_tick(self) -> float:
+        return self.n_launches / self.n_ticks if self.n_ticks else 0.0
+
+    @property
+    def filter_hit_rate(self) -> float:
+        """Fraction of engine launches routed through the q-gram filter."""
+        return (self.n_filtered_launches / self.n_launches
+                if self.n_launches else 0.0)
+
+    @property
+    def avg_survivor_frac(self) -> float:
+        """Mean measured post-filter row fraction over filtered launches."""
+        return (self.sum_survivor_frac / self.n_filtered_launches
+                if self.n_filtered_launches else 0.0)
 
     @property
     def qps(self) -> float:
@@ -99,6 +129,13 @@ class ServiceStats:
             "n_failed": self.n_failed,
             "n_ingested_rows": self.n_ingested_rows,
             "n_ingest_batches": self.n_ingest_batches,
+            "n_ticks": self.n_ticks,
+            "launches_last_tick": self.launches_last_tick,
+            "avg_launches_per_tick": round(self.avg_launches_per_tick, 2),
+            "cache_hit_rate": round(self.cache_hit_rate, 4),
+            "n_filtered_launches": self.n_filtered_launches,
+            "filter_hit_rate": round(self.filter_hit_rate, 4),
+            "avg_survivor_frac": round(self.avg_survivor_frac, 4),
             "avg_latency_s": round(self.avg_latency_s, 6),
             "qps": round(self.qps, 1),
         }
@@ -192,7 +229,7 @@ class MatchService:
     # -- submission -----------------------------------------------------------
     def submit(self, patterns, *, reduction=_UNSET, k=_UNSET,
                threshold=_UNSET, rows=_UNSET, backend=_UNSET,
-               mode=_UNSET) -> MatchTicket:
+               mode=_UNSET, filter=_UNSET) -> MatchTicket:
         """Enqueue one query; returns a ticket (drive ``tick`` to fill it).
 
         ``patterns`` is a ``MatchQuery`` (any explicit kwarg alongside it
@@ -205,14 +242,19 @@ class MatchService:
         """
         query = as_query(patterns, reduction=reduction, k=k,
                          threshold=threshold, rows=rows, backend=backend,
-                         mode=mode)
+                         mode=mode, filter=filter)
         # Coalescing key straight off the IR: 1-D queries whose fused
         # batched execution is well-defined group by everything that must
         # agree for one launch to serve them all.  Predicate kind is part
-        # of the key so exact groups keep riding the exact kernels.
+        # of the key so exact groups keep riding the exact kernels; the
+        # filter hint is part of it so the fused query inherits one
+        # unambiguous routing decision (the engine filters fused batched
+        # threshold queries with a survivor union, so coalesced groups
+        # still ride the index transparently).
         coalescible = len(query.shape) == 1
         group_key = ((query.pattern_chars, query.reduction, query.rows_b,
-                      query.backend, query.chunk_rows, query.is_exact)
+                      query.backend, query.chunk_rows, query.is_exact,
+                      query.filter)
                      if coalescible else None)
         ticket = MatchTicket(self)
         now = time.perf_counter()
@@ -290,9 +332,22 @@ class MatchService:
         self.stats._t_last_complete = now
 
     # -- execution ------------------------------------------------------------
+    def _note_filter(self, res: MatchResult) -> None:
+        """Fold one completed launch's routing into the filter counters.
+
+        ``n_launches`` itself counts *attempted* launches and increments
+        before the engine call (a failing tenant still paid a launch);
+        only the filter-routing counters need the result.
+        """
+        if res.survivor_frac is not None:
+            self.stats.n_filtered_launches += 1
+            self.stats.sum_survivor_frac += res.survivor_frac
+
     def _run_single(self, pend: _Pending) -> MatchResult:
         self.stats.n_launches += 1
-        return self.engine.match(pend.query)
+        res = self.engine.match(pend.query)
+        self._note_filter(res)
+        return res
 
     def _scatter(self, res: MatchResult, q: int, n_q: int,
                  k_q: int) -> MatchResult:
@@ -307,7 +362,9 @@ class MatchService:
                               res.best_locs[:, q]),
                           best_scores=np.ascontiguousarray(
                               res.best_scores[:, q]),
-                          n_chunks=res.n_chunks)
+                          n_chunks=res.n_chunks,
+                          survivor_rows=res.survivor_rows,
+                          survivor_frac=res.survivor_frac)
         if res.scores is not None:
             out.scores = np.ascontiguousarray(res.scores[:, :, q])
         if res.topk_rows is not None:
@@ -330,7 +387,7 @@ class MatchService:
         stacked = np.stack([m[0].query.masks for m in members])
         kw = dict(mode="batched", reduction=first.reduction,
                   rows=first.rows, backend=first.backend,
-                  chunk_rows=first.chunk_rows)
+                  chunk_rows=first.chunk_rows, filter=first.filter)
         if first.reduction == "topk":
             kw["k"] = [m[0].query.k[0] for m in members]
         if first.reduction == "threshold":
@@ -367,6 +424,7 @@ class MatchService:
             self.stats.n_coalesced_launches += 1
             self.stats.n_coalesced_queries += len(grp)
             batched = self.engine.match(fused)
+            self._note_filter(batched)
             for q, mem in enumerate(members):
                 k_q = mem[0].query.k[0] if mem[0].query.k else 0
                 res = self._scatter(batched, q, n_q, k_q)
@@ -410,8 +468,11 @@ class MatchService:
         if gen != self._cache_generation:
             self._cache.clear()
             self._cache_generation = gen
+        self.stats.n_ticks += 1
+        launches_before = self.stats.n_launches
         pending, self._queue = self._queue, []
         if not pending:
+            self.stats.launches_last_tick = 0
             return 0
         before = self.stats.n_completed
         groups: "OrderedDict[Tuple, List[_Pending]]" = OrderedDict()
@@ -438,4 +499,6 @@ class MatchService:
                 for p in grp:
                     if not p.ticket.done:
                         self._complete(p, None, cached=False, error=e)
+        self.stats.launches_last_tick = (self.stats.n_launches
+                                         - launches_before)
         return self.stats.n_completed - before

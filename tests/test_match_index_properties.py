@@ -1,0 +1,100 @@
+"""Randomized no-false-negative property for the q-gram filter
+(hypothesis-driven; DESIGN.md Sec. 3g).
+
+Split out behind ``importorskip`` so a missing ``hypothesis`` install
+skips only this module (repo convention, see
+``test_kernels_properties.py``).
+
+Property: for ANY corpus, ANY accept-mask pattern (random wildcard mix),
+ANY threshold, filtered threshold execution is bit-identical to the full
+scan -- the filter may only remove rows that provably cannot hit.  The
+conservativeness argument (q-gram lemma + per-mismatch damage bound +
+absent-bit witness) has to survive adversarial inputs: patterns shorter
+than q, unsatisfiable thresholds, thresholds of zero, periodic patterns
+whose q-grams all collide, corpora containing the pattern many times.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.match import MatchEngine, MatchQuery  # noqa: E402
+
+
+def random_masks(rng, p, wild_frac):
+    codes = rng.integers(0, 4, p, np.uint8)
+    masks = (np.uint8(1) << codes).astype(np.uint8)
+    wild = rng.random(p) < wild_frac
+    masks[wild] = rng.integers(1, 16, int(wild.sum()), np.uint8)
+    return masks
+
+
+class TestFilterProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 24), st.integers(8, 48), st.data())
+    def test_property_filtered_equals_full_scan(self, r, f, data):
+        p = data.draw(st.integers(1, f))
+        thr = data.draw(st.integers(0, p + 1))
+        wild = data.draw(st.sampled_from([0.0, 0.2, 0.6]))
+        seed = data.draw(st.integers(0, 2**31))
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (r, f), np.uint8)
+        masks = random_masks(rng, p, wild)
+        if data.draw(st.booleans()):
+            # Plant a window every mask position accepts (lowest accepted
+            # code per position), so true positives exist -- the filtered
+            # path is then exercised on real hits, not just empty sets.
+            lowest = np.array([0, 0, 1, 0, 2, 0, 1, 0,
+                               3, 0, 1, 0, 2, 0, 1, 0], np.uint8)
+            row, off = rng.integers(0, r), rng.integers(0, f - p + 1)
+            frags[row, off:off + p] = lowest[masks]
+        eng = MatchEngine(frags)
+        fil = eng.match(MatchQuery.from_masks(
+            masks, reduction="threshold", threshold=float(thr),
+            filter=True, backend="ref"))
+        scan = eng.match(MatchQuery.from_masks(
+            masks, reduction="threshold", threshold=float(thr),
+            filter=False, backend="ref"))
+        np.testing.assert_array_equal(fil.hits, scan.hits)
+        if fil.survivor_frac is not None and fil.hits.size:
+            assert set(fil.hits[:, 0]) <= set(fil.survivor_rows.tolist())
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_planted_needle_always_found(self, seed):
+        """A row containing the pattern always survives an exact-threshold
+        filter and produces its hit (direct no-false-negative witness)."""
+        rng = np.random.default_rng(seed)
+        r, f = int(rng.integers(4, 32)), int(rng.integers(24, 64))
+        p = int(rng.integers(4, min(f, 20)))
+        frags = rng.integers(0, 4, (r, f), np.uint8)
+        pat = rng.integers(0, 4, p, np.uint8)
+        row, off = int(rng.integers(0, r)), int(rng.integers(0, f - p + 1))
+        frags[row, off:off + p] = pat
+        eng = MatchEngine(frags)
+        res = eng.match(MatchQuery.exact(
+            pat, reduction="threshold", threshold=float(p), filter=True,
+            backend="ref"))
+        assert ((res.hits[:, 0] == row) & (res.hits[:, 1] == off)).any()
+        assert row in set(res.survivor_rows.tolist())
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_filtered_equals_scan_after_growth(self, seed):
+        rng = np.random.default_rng(seed)
+        frags = rng.integers(0, 4, (8, 40), np.uint8)
+        pat = rng.integers(0, 4, 10, np.uint8)
+        eng = MatchEngine(frags)
+        q_fil = MatchQuery.exact(pat, reduction="threshold", threshold=9.0,
+                                 filter=True, backend="ref")
+        q_scan = MatchQuery.exact(pat, reduction="threshold", threshold=9.0,
+                                  filter=False, backend="ref")
+        cm = eng.compile(q_fil)
+        cm.run()
+        new = rng.integers(0, 4, (3, 40), np.uint8)
+        new[1, 11:21] = pat
+        eng.corpus.append_rows(new)
+        np.testing.assert_array_equal(cm.run().hits,
+                                      eng.match(q_scan).hits)

@@ -103,6 +103,19 @@ class TestGrowableCorpus:
         with pytest.raises(ValueError, match=f"\\(n, {F}\\)"):
             corpus.append_rows(np.zeros((2, F + 1), np.uint8))
 
+    def test_reserve_shrink_below_live_rows_raises(self):
+        """Regression: a shrink request used to be silently ignored; it
+        must raise and name the live rows it would cut."""
+        rng, corpus = make_corpus()
+        corpus.append_rows(rng.integers(0, 4, (6, F), np.uint8))
+        live = corpus.n_rows
+        with pytest.raises(ValueError) as ei:
+            corpus.reserve(live - 1)
+        msg = str(ei.value)
+        assert f"{live} live rows" in msg and str(live - 1) in msg
+        corpus.reserve(live)                        # at-live is a no-op
+        assert corpus.n_rows == live
+
 
 class TestQueryingAcrossGrowth:
     @pytest.mark.parametrize("backend", ["swar", "mxu", "ref"])
