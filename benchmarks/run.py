@@ -15,6 +15,7 @@ Modules (one per paper table/figure + assignment deliverables):
   query_bench       -- compiled-query reuse + wildcard predicates (beyond)
   ingest_bench      -- online ingestion into a live store (beyond paper)
   filter_bench      -- q-gram filter-then-verify vs full scan (beyond)
+  shard_bench       -- mesh-sharded 1M-row scaling sweep (beyond paper)
   roofline          -- dry-run roofline table (assignment)
 
 Modules that maintain a committed ``BENCH_*.json`` artifact also print one
@@ -24,14 +25,24 @@ output (``grep ',artifact,'``).
 """
 
 import argparse
+import os
 import sys
 import traceback
+
+# Forced host devices so shard_bench's mesh sweep works under the driver;
+# must land before the first benchmark module imports jax (harmless for
+# the others, and on real accelerators the flag only affects the host
+# platform).
+_FORCE = "--xla_force_host_platform_device_count"
+if "jax" not in sys.modules and _FORCE not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FORCE}=8").strip()
 
 MODULES = [
     "table1_gates", "fig5_throughput", "fig6_breakdown", "fig7_patlen",
     "fig8_tech", "fig9_10_nmp", "fig11_gates", "table4_apps",
     "sec5_5_variation", "kernel_bench", "service_bench", "query_bench",
-    "ingest_bench", "filter_bench", "roofline",
+    "ingest_bench", "filter_bench", "shard_bench", "roofline",
 ]
 
 

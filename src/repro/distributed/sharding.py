@@ -16,6 +16,7 @@ Default layout (production mesh (data, model) or (pod, data, model)):
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -60,8 +61,19 @@ RULE_PROFILES = {"2d": LOGICAL_RULES, "fsdp": FSDP_RULES}
 
 
 def resolve_axis(name: Optional[str], dim: int, mesh: Mesh,
-                 rules: Optional[Dict[str, Tuple[str, ...]]] = None):
-    """Mesh axes for one dimension, with divisibility fallback."""
+                 rules: Optional[Dict[str, Tuple[str, ...]]] = None, *,
+                 warn: bool = False):
+    """Mesh axes for one dimension, with divisibility fallback.
+
+    ``warn=True`` makes the fallback *audible*: when ``dim`` does not
+    divide its mapped mesh axes the caller gets a ``UserWarning`` naming
+    the axis, the dimension and the mesh sizes, instead of a silent
+    replication (or partial sharding) whose only symptom is a perf
+    cliff.  The default stays silent -- for model parameters the fallback
+    is documented behaviour (e.g. mamba2's 24 SSD heads on a 16-way
+    model axis) -- but capacity-style dims like match-corpus ``rows``
+    opt in.
+    """
     if name is None:
         return None
     rules = rules or LOGICAL_RULES
@@ -77,9 +89,70 @@ def resolve_axis(name: Optional[str], dim: int, mesh: Mesh,
             sub = want[i:]
             s = int(np.prod([mesh.shape[a] for a in sub]))
             if dim % s == 0:
+                if warn:
+                    warnings.warn(
+                        f"logical axis {name!r}: dim {dim} does not divide "
+                        f"mesh axes {tuple(want)} (sizes "
+                        f"{tuple(int(mesh.shape[a]) for a in want)}); "
+                        f"partially sharding over {tuple(sub)} only",
+                        UserWarning, stacklevel=2)
                 return tuple(sub) if len(sub) > 1 else sub[0]
+        if warn:
+            warnings.warn(
+                f"logical axis {name!r}: dim {dim} does not divide mesh "
+                f"axes {tuple(want)} (sizes "
+                f"{tuple(int(mesh.shape[a]) for a in want)}); falling "
+                f"back to replication",
+                UserWarning, stacklevel=2)
         return None
     return tuple(want) if len(want) > 1 else want[0]
+
+
+# -- cyclic row layout (match stack) ------------------------------------------
+# A row-sharded match corpus stores its device forms *physically permuted*:
+# logical row r lives on shard s = r % S at slot j = r // S, i.e. physical
+# index p = s * J + j for per-shard stride J.  Block-sharding the physical
+# array over the mesh row axes is then a *cyclic* sharding of logical rows:
+#   * contiguous logical appends round-robin across shards, so ingest is
+#     balanced by construction (fewest-live-rows-first is exactly "next
+#     row goes to shard n % S");
+#   * capacity growth is a per-shard zero-extension (reshape (S, J, ...)
+#     -> pad axis 1) -- a row's shard and slot never change, so growth
+#     stays in place per shard;
+#   * slots [j0:j1) across all shards are the contiguous logical rows
+#     [j0*S : j1*S), so chunked streaming slices per-shard blocks without
+#     any cross-device traffic.
+
+def cyclic_physical_rows(rows, n_shards: int, stride: int):
+    """Physical indices of logical row ids under the cyclic layout."""
+    rows = np.asarray(rows)
+    if n_shards == 1:
+        return rows
+    return (rows % n_shards) * stride + rows // n_shards
+
+
+def cyclic_permute(a, n_shards: int):
+    """Logical (R, ...) -> physical (R, ...): row j*S+s -> row s*J+j.
+
+    Works on NumPy and JAX arrays (reshape/swapaxes only); R must be a
+    multiple of ``n_shards``.
+    """
+    if n_shards == 1:
+        return a
+    R = a.shape[0]
+    J = R // n_shards
+    return a.reshape(J, n_shards, *a.shape[1:]).swapaxes(0, 1).reshape(
+        R, *a.shape[1:])
+
+
+def cyclic_unpermute(a, n_shards: int):
+    """Physical (R, ...) -> logical (R, ...): inverse of cyclic_permute."""
+    if n_shards == 1:
+        return a
+    R = a.shape[0]
+    J = R // n_shards
+    return a.reshape(n_shards, J, *a.shape[1:]).swapaxes(0, 1).reshape(
+        R, *a.shape[1:])
 
 
 def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],

@@ -45,6 +45,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels.popcount import popcount_words
+from repro.kernels.tiling import coarse_row_tile
 
 FILTER_ROW_TILE = 128
 
@@ -74,16 +75,19 @@ def filter_qgram(row_sigs: jnp.ndarray, qsig: jnp.ndarray, *, slack: int,
             f"rows must be padded to a multiple of {FILTER_ROW_TILE}")
     if qsig.shape != (1, Wb):
         raise ValueError(f"qsig must be (1, {Wb}); got {qsig.shape}")
-    grid = (R // FILTER_ROW_TILE,)
+    # Row-elementwise body: coarsen the dispatch tile (kernels.tiling) so
+    # launch overhead amortizes at scale; output is bit-identical.
+    tile = coarse_row_tile(R, FILTER_ROW_TILE, (Wb + 1) * 4)
+    grid = (R // tile,)
     kernel = functools.partial(_filter_kernel, slack=int(slack))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((FILTER_ROW_TILE, Wb), lambda i: (i, 0)),
+            pl.BlockSpec((tile, Wb), lambda i: (i, 0)),
             pl.BlockSpec((1, Wb), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((FILTER_ROW_TILE, 1), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((tile, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, 1), jnp.int32),
         interpret=interpret,
     )(row_sigs, qsig)

@@ -39,6 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import coarse_row_tile
+
 M1 = np.uint32(0x55555555)
 M2 = np.uint32(0x33333333)
 M4 = np.uint32(0x0F0F0F0F)
@@ -85,18 +87,21 @@ def match_swar(ref_words: jnp.ndarray, pat_words: jnp.ndarray,
     Wp = pat_words.shape[1]
     if R % ROW_TILE:
         raise ValueError(f"rows must be padded to a multiple of {ROW_TILE}")
-    grid = (R // ROW_TILE,)
+    # Row-elementwise body: coarsen the dispatch tile (kernels.tiling) so
+    # launch overhead amortizes at scale; output is bit-identical.
+    tile = coarse_row_tile(R, ROW_TILE, (W + Wp + n_locs) * 4)
+    grid = (R // tile,)
     kernel = functools.partial(_swar_kernel, n_locs=n_locs,
                                pattern_chars=pattern_chars, wp=Wp)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ROW_TILE, W), lambda i: (i, 0)),
-            pl.BlockSpec((ROW_TILE, Wp), lambda i: (i, 0)),
+            pl.BlockSpec((tile, W), lambda i: (i, 0)),
+            pl.BlockSpec((tile, Wp), lambda i: (i, 0)),
             pl.BlockSpec((1, Wp), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((ROW_TILE, n_locs), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((tile, n_locs), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, n_locs), jnp.int32),
         interpret=interpret,
     )(ref_words, pat_words, valid_mask)
@@ -150,18 +155,19 @@ def match_swar_masks(ref_words: jnp.ndarray, pat_planes: jnp.ndarray,
     wp = W4 // 4
     if R % ROW_TILE:
         raise ValueError(f"rows must be padded to a multiple of {ROW_TILE}")
-    grid = (R // ROW_TILE,)
+    tile = coarse_row_tile(R, ROW_TILE, (W + W4 + n_locs) * 4)
+    grid = (R // tile,)
     kernel = functools.partial(_swar_masks_kernel, n_locs=n_locs,
                                pattern_chars=pattern_chars, wp=wp)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ROW_TILE, W), lambda i: (i, 0)),
-            pl.BlockSpec((ROW_TILE, W4), lambda i: (i, 0)),
+            pl.BlockSpec((tile, W), lambda i: (i, 0)),
+            pl.BlockSpec((tile, W4), lambda i: (i, 0)),
             pl.BlockSpec((1, wp), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((ROW_TILE, n_locs), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((tile, n_locs), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, n_locs), jnp.int32),
         interpret=interpret,
     )(ref_words, pat_planes, valid_mask)

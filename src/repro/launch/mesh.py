@@ -31,3 +31,20 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_row_mesh(n_shards: int):
+    """1-D ``("data",)`` mesh for row-sharded match engines.
+
+    The match stack shards corpus rows over the mesh's row axes (logical
+    axis ``rows`` -> ``data`` under the default rules, DESIGN.md
+    Sec. 3h); a pure data mesh gives it exactly ``n_shards`` row shards
+    with no idle model axis.
+    """
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        raise RuntimeError(
+            f"need {n_shards} devices for a {n_shards}-shard row mesh, "
+            f"have {len(devices)} -- force host devices via XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N")
+    return jax.make_mesh((n_shards,), ("data",), devices=devices[:n_shards])

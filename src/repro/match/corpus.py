@@ -30,16 +30,32 @@ zero-extension (``jnp.concatenate`` with zero rows), not a host repack.
 ``generation`` bumps on every content mutation (``append_rows`` /
 ``set_rows`` / ``invalidate``) so result caches (match.service) never serve
 scores computed against older corpus contents.
+
+**Row sharding** (``shard_rows``, DESIGN.md Sec. 3h): on a mesh the device
+forms are stored in the *cyclic physical layout* of
+``repro.distributed.sharding`` -- logical row ``r`` lives on shard
+``r % S`` at slot ``r // S`` -- and placed with a ``NamedSharding`` over
+the mesh row axes.  Block-sharding the permuted array is a cyclic
+sharding of logical rows, which buys three properties at once: appends
+round-robin across shards (ingest balanced by construction,
+fewest-live-rows-first), capacity growth is a per-shard zero-extension
+(a row's shard and slot never change), and contiguous logical chunks are
+per-shard slot slices (no cross-device traffic while streaming).  The
+host buffer and all public row ids stay logical; only the device forms
+are permuted.
 """
 
 from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import encoding
+from repro.distributed import sharding as _sharding
 from repro.kernels import match_swar as _swar
 
 ROW_TILE = _swar.ROW_TILE
@@ -80,6 +96,12 @@ class PackedCorpus:
             buf[:self._n_rows] = fragments
             fragments = buf
         self._frags = fragments               # (capacity, F) host buffer
+        # Row-shard layout: device forms are cyclically permuted over
+        # n_shards and placed with NamedSharding(mesh, row_axes) when a
+        # mesh engine configures the corpus via shard_rows().
+        self.n_shards = 1
+        self._mesh = None
+        self._row_axes = None
         # Cached device forms (lazy), sized to the padded capacity.
         self._swar: Optional[jnp.ndarray] = None      # (C_pad, W) uint32
         self._onehot: Optional[jnp.ndarray] = None    # (C_pad, F4) bf16
@@ -134,6 +156,79 @@ class PackedCorpus:
         """Total host-side full-corpus packing events (both forms)."""
         return self.swar_pack_count + self.onehot_pack_count
 
+    # -- row sharding ----------------------------------------------------------
+    @property
+    def shard_stride(self) -> int:
+        """Per-shard physical row stride J: physical(r) = (r%S)*J + r//S."""
+        return self.capacity_padded // self.n_shards
+
+    @property
+    def shard_live_rows(self) -> np.ndarray:
+        """(S,) live logical rows per shard under the cyclic layout.
+
+        Shard ``s`` holds rows ``{r < n_rows : r % S == s}``; contiguous
+        appends round-robin, so counts differ by at most one row -- the
+        balanced-ingest invariant the service benchmark asserts.
+        """
+        S, n = self.n_shards, self._n_rows
+        return np.array([max(0, (n - s + S - 1) // S) for s in range(S)],
+                        np.int64)
+
+    def shard_rows(self, mesh, row_axes, n_shards: int) -> None:
+        """Configure the cyclic row layout + NamedSharding placement.
+
+        Called by the engine after resolving the mesh row axes.  Raises
+        ``row_pad`` to a multiple of ``ROW_TILE * n_shards`` (so padded
+        row counts divide evenly over shards) and drops cached device
+        forms when the layout actually changes -- forms built for a
+        different shard count are permuted differently and cannot be
+        reused.  Reconfiguring to the same layout is a no-op (no repack,
+        no generation bump).
+        """
+        n_shards = max(1, int(n_shards))
+        need_pad = ROW_TILE * n_shards
+        relayout = (n_shards != self.n_shards
+                    or self.row_pad % need_pad != 0
+                    or (n_shards > 1 and self._mesh is not None
+                        and mesh != self._mesh))
+        self._mesh = mesh
+        self._row_axes = row_axes
+        self.n_shards = n_shards
+        if not relayout:
+            return
+        if self.row_pad % need_pad:
+            self.row_pad = need_pad
+        if (self._swar is not None or self._onehot is not None
+                or self._indexes):
+            self.invalidate()
+
+    def _place(self, arr) -> jnp.ndarray:
+        """Device placement: NamedSharding over the row axes when sharded."""
+        if self.n_shards > 1 and self._mesh is not None:
+            return jax.device_put(
+                arr, NamedSharding(self._mesh, PartitionSpec(self._row_axes)))
+        return jnp.asarray(arr)
+
+    def _grow_form_rows(self, form: jnp.ndarray, c_pad: int) -> jnp.ndarray:
+        """Zero-extend a device form to ``c_pad`` rows, per shard.
+
+        Single-shard: plain concat.  Sharded: the extension happens
+        *inside* each shard's block -- reshape (S, J_old, w), pad slot
+        axis, reshape back -- so every resident row keeps its shard and
+        slot (growth stays in place per shard) and the result re-places
+        onto the same NamedSharding.
+        """
+        S, w = self.n_shards, form.shape[1]
+        if S == 1:
+            grown = jnp.concatenate(
+                [form, jnp.zeros((c_pad - form.shape[0], w), form.dtype)], 0)
+            return self._place(grown)
+        j_old, j_new = form.shape[0] // S, c_pad // S
+        f3 = form.reshape(S, j_old, w)
+        f3 = jnp.concatenate(
+            [f3, jnp.zeros((S, j_new - j_old, w), form.dtype)], 1)
+        return self._place(f3.reshape(S * j_new, w))
+
     def attach_index(self, index) -> None:
         """Register a derived-form observer (see ``match.index``).
 
@@ -182,13 +277,14 @@ class PackedCorpus:
                 words = np.concatenate(
                     [words, np.zeros((c_pad, need_words - words.shape[1]),
                                      np.uint32)], 1)
-            self._swar = jnp.asarray(words)
+            words = _sharding.cyclic_permute(words, self.n_shards)
+            self._swar = self._place(words)
             self.swar_pack_count += 1
         elif self._swar.shape[1] < need_words:
             grow = need_words - self._swar.shape[1]
-            self._swar = jnp.concatenate(
+            self._swar = self._place(jnp.concatenate(
                 [self._swar,
-                 jnp.zeros((self._swar.shape[0], grow), jnp.uint32)], 1)
+                 jnp.zeros((self._swar.shape[0], grow), jnp.uint32)], 1))
         return self._swar
 
     # -- one-hot form ----------------------------------------------------------
@@ -213,11 +309,13 @@ class PackedCorpus:
                 base = np.concatenate(
                     [base, np.zeros((base.shape[0], need - base.shape[1]),
                                     np.float32)], 1)
-            self._onehot = jnp.asarray(base, jnp.bfloat16)
+            base = _sharding.cyclic_permute(base, self.n_shards)
+            self._onehot = self._place(jnp.asarray(base, jnp.bfloat16))
             self.onehot_pack_count += 1
         elif self._onehot.shape[1] < f_chars * 4:
             grow = f_chars * 4 - self._onehot.shape[1]
-            self._onehot = jnp.pad(self._onehot, ((0, 0), (0, grow)))
+            self._onehot = self._place(
+                jnp.pad(self._onehot, ((0, 0), (0, grow))))
         return self._onehot
 
     # -- growth ----------------------------------------------------------------
@@ -247,15 +345,9 @@ class PackedCorpus:
         self._frags = np.concatenate([self._frags, grow], 0)
         c_pad = self.capacity_padded
         if self._swar is not None and self._swar.shape[0] < c_pad:
-            self._swar = jnp.concatenate(
-                [self._swar,
-                 jnp.zeros((c_pad - self._swar.shape[0],
-                            self._swar.shape[1]), jnp.uint32)], 0)
+            self._swar = self._grow_form_rows(self._swar, c_pad)
         if self._onehot is not None and self._onehot.shape[0] < c_pad:
-            self._onehot = jnp.concatenate(
-                [self._onehot,
-                 jnp.zeros((c_pad - self._onehot.shape[0],
-                            self._onehot.shape[1]), jnp.bfloat16)], 0)
+            self._onehot = self._grow_form_rows(self._onehot, c_pad)
         for ix in self._indexes:
             ix._on_capacity()
 
@@ -287,24 +379,40 @@ class PackedCorpus:
 
     # -- incremental updates ---------------------------------------------------
     def _splice_device(self, start: int, rows: np.ndarray) -> None:
-        """Pack ``rows`` (host, touched rows only) into the cached forms."""
+        """Pack ``rows`` (host, touched rows only) into the cached forms.
+
+        Sharded forms scatter to the rows' *physical* (cyclic) positions;
+        logical row ids never leak into the layout.
+        """
         n = rows.shape[0]
+        phys = None
+        if self.n_shards > 1:
+            phys = jnp.asarray(_sharding.cyclic_physical_rows(
+                np.arange(start, start + n), self.n_shards,
+                self.shard_stride))
         if self._swar is not None:
             words = encoding.pack_codes_u32(rows)
             w = self._swar.shape[1]
             if words.shape[1] < w:
                 words = np.concatenate(
                     [words, np.zeros((n, w - words.shape[1]), np.uint32)], 1)
-            self._swar = self._swar.at[start:start + n, :].set(
-                jnp.asarray(words))
+            if phys is None:
+                self._swar = self._swar.at[start:start + n, :].set(
+                    jnp.asarray(words))
+            else:
+                self._swar = self._swar.at[phys, :].set(jnp.asarray(words))
         if self._onehot is not None:
             oh = _one_hot_flat(rows)
             w = self._onehot.shape[1]
             if oh.shape[1] < w:
                 oh = np.concatenate(
                     [oh, np.zeros((n, w - oh.shape[1]), np.float32)], 1)
-            self._onehot = self._onehot.at[start:start + n, :].set(
-                jnp.asarray(oh, jnp.bfloat16))
+            if phys is None:
+                self._onehot = self._onehot.at[start:start + n, :].set(
+                    jnp.asarray(oh, jnp.bfloat16))
+            else:
+                self._onehot = self._onehot.at[phys, :].set(
+                    jnp.asarray(oh, jnp.bfloat16))
         for ix in self._indexes:
             ix._on_rows_written(start, rows)
         self.row_update_count += n

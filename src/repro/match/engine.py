@@ -26,11 +26,16 @@ accept-set queries (IUPAC, N wildcards, character classes) ride the
 bit-plane SWAR variant / multi-hot MXU matrix -- same resident corpus
 forms either way.
 
-Sharding: with a ``jax.sharding.Mesh`` the corpus rows distribute over the
-mesh axes mapped by the ``rows`` logical axis (``distributed.sharding``),
-and each chunk executes under ``shard_map`` -- rows are embarrassingly
-parallel, the direct analogue of the paper's array-level parallelism
-(Sec. 3.4: arrays compute independently, the host merges scores).
+Sharding (DESIGN.md Sec. 3h): with a ``jax.sharding.Mesh`` the corpus rows
+distribute over the mesh axes mapped by the ``rows`` logical axis
+(``distributed.sharding``).  Device forms and q-gram signatures live in
+the *cyclic physical layout* (logical row r -> shard r % S, slot r // S)
+under a ``NamedSharding``; chunks slice per-shard slot blocks (no
+cross-device traffic), kernels run under ``shard_map``, and reductions
+are shard-local with a small host-side cross-shard merge that is
+bit-identical to the single-shard result -- the direct analogue of the
+paper's array-level parallelism (Sec. 3.4: arrays compute independently,
+the host merges scores) and of Jun et al.'s multi-engine fan-out.
 """
 
 from __future__ import annotations
@@ -80,6 +85,8 @@ class MatchResult:
     # bit-identical to a full scan (the zero-false-negative invariant).
     survivor_rows: Optional[np.ndarray] = None  # (n_surv,) corpus row ids
     survivor_frac: Optional[float] = None       # n_surv / live rows
+    # Resolved mesh row shards the query executed over (1 = unsharded).
+    n_shards: int = 1
 
 
 def _valid_mask(P: int, wp: int) -> np.ndarray:
@@ -124,6 +131,38 @@ def _pack_patterns_mxu(masks: np.ndarray, p_chars: int, q_pad: int
     return pat_mat.reshape(p_chars * 4, q_pad)
 
 
+def _host_topk_merge(run_rows, run_scores, bs: np.ndarray,
+                     rows_ids: np.ndarray, k_eff: int):
+    """Host-side cross-shard/cross-chunk top-k merge.
+
+    Bit-identical to the device ``lax.top_k`` running-merge path: both
+    realize the total order (score desc, row asc).  The device merge ties
+    break to the earliest concatenated position, which -- with the running
+    state kept sorted and chunk rows appended in ascending order -- is
+    always the lowest row id; ``np.lexsort`` with primary ``-score`` and
+    secondary ``row`` keys reproduces exactly that.  Scores are int32, so
+    the comparison is exact (the int64 negation cannot overflow).
+    """
+    if bs.ndim == 2:                     # batched: (rows, Q)
+        rows2 = np.broadcast_to(rows_ids[:, None], bs.shape)
+    else:
+        rows2 = rows_ids
+    cat_s = bs if run_scores is None else np.concatenate([run_scores, bs], 0)
+    cat_r = rows2 if run_rows is None else np.concatenate([run_rows, rows2], 0)
+    kk = min(k_eff, cat_s.shape[0])
+    if cat_s.ndim == 2:
+        out_s = np.empty((kk, cat_s.shape[1]), cat_s.dtype)
+        out_r = np.empty((kk, cat_s.shape[1]), np.int64)
+        for q in range(cat_s.shape[1]):
+            order = np.lexsort(
+                (cat_r[:, q], -cat_s[:, q].astype(np.int64)))[:kk]
+            out_s[:, q] = cat_s[order, q]
+            out_r[:, q] = cat_r[order, q]
+        return out_r, out_s
+    order = np.lexsort((cat_r, -cat_s.astype(np.int64)))[:kk]
+    return cat_r[order], cat_s[order]
+
+
 class CompiledMatch:
     """One ``MatchQuery`` lowered against one engine: reusable, growth-safe.
 
@@ -150,8 +189,9 @@ class CompiledMatch:
     """
 
     __slots__ = ("engine", "query", "plan", "_packed", "_pats2d", "_sel",
-                 "_idx", "_k_eff", "_k_vec", "_thr_vec", "_empty", "_mode",
-                 "_lowered", "_filter_ops", "_filter_dev")
+                 "_idx", "_pad_idx", "_idx_stride", "_k_eff", "_k_vec",
+                 "_thr_vec", "_empty", "_mode", "_lowered", "_filter_ops",
+                 "_filter_dev")
 
     def __init__(self, engine: "MatchEngine", query: MatchQuery):
         self.engine = engine
@@ -161,7 +201,8 @@ class CompiledMatch:
         sel = query.rows
         self._sel = None if sel is None else np.asarray(sel, np.int64)
         self._empty = self._sel is not None and self._sel.size == 0
-        self._packed = self._pats2d = self._idx = None
+        self._packed = self._pats2d = self._idx = self._pad_idx = None
+        self._idx_stride = 0
         self._k_eff, self._k_vec, self._thr_vec = 0, None, None
         self._filter_ops: Optional[FilterOperands] = None
         self._filter_dev = None
@@ -184,7 +225,13 @@ class CompiledMatch:
             R_pad = -(-R // corpus.row_pad) * corpus.row_pad
             pad_idx = np.zeros(R_pad, np.int64)
             pad_idx[:R] = self._sel
-            self._idx = jnp.asarray(pad_idx)
+            # Logical padded ids are stable across growth; the device
+            # gather indices are layout-dependent (the cyclic stride moves
+            # when a sharded corpus's capacity grows) and are rebuilt
+            # lazily by run() when stale.
+            self._pad_idx = pad_idx
+            self._idx = engine._device_gather_idx(pad_idx)
+            self._idx_stride = corpus.shard_stride
 
         n_rows = len(self._sel) if self._sel is not None else corpus.n_rows
         # Mode pinned at compile time, before any growth can happen.
@@ -296,12 +343,21 @@ class CompiledMatch:
             return self.engine._empty_result(self.query, self.plan)
         engine, query = self.engine, self.query
         reduction = query.reduction
-        sel, idx = self._sel, self._idx
+        sel = self._sel
         survivor_frac = None
         if sel is not None:
             R = len(sel)
+            if (engine._row_shards > 1
+                    and self._idx_stride != engine.corpus.shard_stride):
+                # Sharded capacity growth moved the cyclic stride: the
+                # logical ids are unchanged, re-derive their physical
+                # positions.
+                self._idx = engine._device_gather_idx(self._pad_idx)
+                self._idx_stride = engine.corpus.shard_stride
+            idx, idx_log = self._idx, self._pad_idx
             R_pad = idx.shape[0]
         else:
+            idx = idx_log = None
             R = engine.corpus.n_rows
             if R == 0:
                 # Reserved-but-empty corpus: the answer is no rows (yet).
@@ -330,12 +386,22 @@ class CompiledMatch:
                     engine.corpus.row_pad
                 pad_idx = np.zeros(R_pad, np.int64)
                 pad_idx[:R] = sel
-                idx = jnp.asarray(pad_idx)
+                idx_log = pad_idx
+                idx = engine._device_gather_idx(pad_idx)
         plan = self.plan
         step = plan.chunk_rows
-        if engine._row_shards > 1:
-            tile = _swar.ROW_TILE * engine._row_shards
+        S = engine._row_shards
+        if S > 1:
+            tile = _swar.ROW_TILE * S
             step = max(tile, (step // tile) * tile)
+        # Resident sharded streaming: device forms are in the cyclic
+        # physical layout, so per-chunk kernel output rows come back in
+        # physical (shard-major) order and are un-permuted on the host
+        # before validity slicing and reduction merges.  Gather paths
+        # (rows= subsets, filter survivors) already follow logical order
+        # -- the gather indices are physical, their order is not -- and
+        # the ref backend reads the logical host buffer directly.
+        shard_phys = S > 1 and idx is None and plan.backend != "ref"
 
         best_l: List[np.ndarray] = []
         best_s: List[np.ndarray] = []
@@ -351,23 +417,37 @@ class CompiledMatch:
             if valid <= 0:
                 break                     # pure-padding tail chunk
             scores = engine._chunk_scores(plan, self._pats2d, c0, c1,
-                                          self._packed, idx)
-            scores = scores[:valid]
+                                          self._packed, idx, idx_log)
+            if not shard_phys:
+                scores = scores[:valid]
             n_chunks += 1
             if reduction == "full":
                 # Host materialization is the point of this reduction; the
                 # best reduction is derived from it at the end.
-                full.append(np.asarray(scores))
+                sc = np.asarray(scores)
+                if shard_phys:
+                    sc = _sharding.cyclic_unpermute(sc, S)[:valid]
+                full.append(sc)
                 continue
             # Fused per-chunk reduction: only (chunk, ...) lives at once.
+            # Sharded: argmax/max run shard-local on the physical chunk
+            # (dead padding rows included -- their garbage entries fall
+            # off the logical [:valid] slice after the host un-permute).
             bl = jnp.argmax(scores, axis=1)
             bs = jnp.max(scores, axis=1)
-            best_l.append(np.asarray(bl))
-            best_s.append(np.asarray(bs))
+            if shard_phys:
+                bl_np = _sharding.cyclic_unpermute(np.asarray(bl), S)[:valid]
+                bs_np = _sharding.cyclic_unpermute(np.asarray(bs), S)[:valid]
+            else:
+                bl_np, bs_np = np.asarray(bl), np.asarray(bs)
+            best_l.append(bl_np)
+            best_s.append(bs_np)
             # topk / threshold report *corpus* row ids; with a rows= subset
             # that means mapping chunk positions through the selection.
             if reduction == "threshold":
                 sc = np.asarray(scores)
+                if shard_phys:
+                    sc = _sharding.cyclic_unpermute(sc, S)[:valid]
                 if plan.mode == "batched":
                     local = np.argwhere(sc >= thr_vec[None, None, :])
                 else:
@@ -381,6 +461,14 @@ class CompiledMatch:
                     hit_rows.append(np.concatenate(
                         [local, vals[:, None].astype(np.int64)], 1))
             elif reduction == "topk":
+                if shard_phys:
+                    # Shard-local maxima merge on the host: bit-identical
+                    # to the device path (see _host_topk_merge).
+                    run_rows, run_scores = _host_topk_merge(
+                        run_rows, run_scores, bs_np,
+                        np.arange(c0, c0 + valid, dtype=np.int64),
+                        self._k_eff)
+                    continue
                 if sel is not None:
                     chunk_rows_ids = jnp.asarray(sel[c0:c0 + valid])
                 else:
@@ -406,11 +494,13 @@ class CompiledMatch:
             all_scores = np.concatenate(full, 0)
             return MatchResult(plan=plan, best_locs=all_scores.argmax(1),
                                best_scores=all_scores.max(1),
-                               scores=all_scores, n_chunks=n_chunks)
+                               scores=all_scores, n_chunks=n_chunks,
+                               n_shards=S)
         best_locs = np.concatenate(best_l, 0)
         best_scores = np.concatenate(best_s, 0)
         res = MatchResult(plan=plan, best_locs=best_locs,
-                          best_scores=best_scores, n_chunks=n_chunks)
+                          best_scores=best_scores, n_chunks=n_chunks,
+                          n_shards=S)
         if survivor_frac is not None:
             res.survivor_rows = sel
             res.survivor_frac = survivor_frac
@@ -459,22 +549,29 @@ class MatchEngine:
         self._row_axes: Optional[Tuple[str, ...]] = None
         row_pad = _swar.ROW_TILE
         if mesh is not None:
+            # warn=True: an indivisible row count silently replicating is
+            # the invisible perf cliff of the satellite fix -- the caller
+            # asked for a mesh and gets 1 shard; say so.
             r = _sharding.resolve_axis(
                 "rows", -(-n_row_slots // _swar.ROW_TILE) * _swar.ROW_TILE,
-                mesh, rules)
+                mesh, rules, warn=True)
             if r is not None:
                 self._row_axes = r if isinstance(r, tuple) else (r,)
                 self._row_shards = int(
                     np.prod([mesh.shape[a] for a in self._row_axes]))
                 row_pad = _swar.ROW_TILE * self._row_shards
         if isinstance(corpus, PackedCorpus):
-            if corpus.row_pad % row_pad:
-                corpus.row_pad = row_pad
-                corpus.invalidate()
             self.corpus = corpus
         else:
             self.corpus = PackedCorpus(np.asarray(corpus, np.uint8),
                                        row_pad=row_pad)
+        # Configure the cyclic row layout + NamedSharding placement (a
+        # no-op when the corpus already has this exact layout).
+        self.corpus.shard_rows(
+            mesh if self._row_shards > 1 else None,
+            self._row_axes if self._row_axes is None or
+            len(self._row_axes) > 1 else self._row_axes[0],
+            self._row_shards)
         self.planner = planner or Planner()
         self.interpret = default_interpret() if interpret is None else interpret
         self.compile_cache_size = int(compile_cache_size)
@@ -499,6 +596,35 @@ class MatchEngine:
                 or CorpusIndex(self.corpus)
         else:
             self.index = None
+
+    def __repr__(self) -> str:
+        c = self.corpus
+        axes = (None if self._row_axes is None else
+                ",".join(self._row_axes))
+        return (f"MatchEngine(rows={c.n_rows}, capacity={c.capacity}, "
+                f"shards={self._row_shards}"
+                + (f" over {axes}" if axes else "")
+                + f", interpret={self.interpret})")
+
+    @property
+    def n_shards(self) -> int:
+        """Resolved mesh row shards (1 when unsharded or replicated)."""
+        return self._row_shards
+
+    def shard_live_rows(self) -> np.ndarray:
+        """(S,) live rows per shard (cyclic layout: balanced to +-1 row)."""
+        return self.corpus.shard_live_rows
+
+    def _device_gather_idx(self, pad_idx: np.ndarray) -> jnp.ndarray:
+        """Device gather indices for logical padded row ids.
+
+        Sharded forms store row r at physical position (r % S) * J +
+        r // S; gathers must address that layout.  The gather *output*
+        follows the order of ``pad_idx`` (logical query order), so
+        downstream reductions never see physical order on this path.
+        """
+        return jnp.asarray(_sharding.cyclic_physical_rows(
+            pad_idx, self._row_shards, self.corpus.shard_stride))
 
     # -- compilation ----------------------------------------------------------
     def compile(self, query: MatchQuery, *,
@@ -567,7 +693,7 @@ class MatchEngine:
             n_patterns=query.n_patterns if mode == "batched" else None,
             per_row=mode == "per_row", backend=query.backend,
             chunk_rows=query.chunk_rows, predicate=query.predicate,
-            filter_ctx=filter_ctx)
+            filter_ctx=filter_ctx, n_shards=self._row_shards)
 
     # -- q-gram filter stage (DESIGN.md Sec. 3g) ------------------------------
     def _filter_context(self, query: MatchQuery, mode: Optional[str],
@@ -580,10 +706,11 @@ class MatchEngine:
         the filter prunes whole rows, so only the row-sparse ``threshold``
         reduction (whose deliverable, ``hits``, provably loses nothing to
         conservative pruning) qualifies; explicit row subsets keep their
-        own gather path; per-row patterns have no shared signature; a
-        sharded engine streams every row by construction.  Ineligible or
-        unprunable queries simply scan -- the filter is an optimization,
-        never a semantic change.
+        own gather path; per-row patterns have no shared signature.
+        Sharded engines participate like single-shard ones (the signature
+        form mirrors the corpus layout and the filter kernel runs per
+        shard under shard_map).  Ineligible or unprunable queries simply
+        scan -- the filter is an optimization, never a semantic change.
 
         ``ops`` short-circuits the operand build: the operands derive
         from (query content, index q, index B) only, so a caller holding
@@ -591,10 +718,28 @@ class MatchEngine:
         growth) passes them back and only the survivor estimate -- which
         tracks measured density and selectivity -- is refreshed.
         """
+        if query.filter is True and self._row_shards > 1:
+            # Sharded engines must never *silently* drop filter=True to a
+            # full scan (the pre-Sec.-3h engine did exactly that): when
+            # the forced strategy is structurally impossible, say so.
+            why = None
+            if self.index is None:
+                why = "no CorpusIndex is attached (index=False)"
+            elif query.rows_b is not None:
+                why = "row-subset queries keep their own gather path"
+            elif mode == "per_row":
+                why = "per-row patterns have no shared signature"
+            elif query.pattern_chars < self.index.q:
+                why = (f"pattern ({query.pattern_chars} chars) is shorter "
+                       f"than the index q-gram (q={self.index.q})")
+            if why is not None:
+                raise ValueError(
+                    f"sharded engine cannot honor filter=True: {why}; "
+                    "pass filter=None to let the planner decide or "
+                    "filter=False to scan")
         if (self.index is None or query.filter is False
                 or query.reduction != "threshold"
                 or query.rows_b is not None or mode == "per_row"
-                or self._row_shards > 1
                 or query.pattern_chars < self.index.q):
             return None, None
         masks2d = query.masks if len(query.shape) == 2 else \
@@ -630,21 +775,47 @@ class MatchEngine:
         pattern's test admits it (the batched union).  Signatures stream
         from the device-resident index -- the exact scan's data is never
         touched for pruned rows.
+
+        Sharded engines run the kernel per shard under ``shard_map`` over
+        the sharded signature form: each shard tests its own rows (the
+        q-gram lemma is a per-row property, so it holds per shard), the
+        per-pattern union happens device-side, and the cross-shard
+        survivor union is the host un-permute of the flag bitmap back to
+        logical row order.
         """
         ops = cm._filter_ops
         if cm._filter_dev is None:
             cm._filter_dev = jnp.asarray(ops.qsig_words)
         sigs = self.index.signatures()
         tile = _fq.FILTER_ROW_TILE
-        r_pad = -(-n_rows // tile) * tile
-        rows = sigs[:r_pad]
+        S = self._row_shards
+        if S == 1:
+            r_pad = -(-n_rows // tile) * tile
+            rows = sigs[:r_pad]
+            flags = None
+            for qi in range(ops.qsig_words.shape[0]):
+                f = _fq.filter_qgram(rows, cm._filter_dev[qi:qi + 1],
+                                     slack=ops.slacks[qi],
+                                     interpret=self.interpret)
+                flags = f if flags is None else flags | f
+            return np.asarray(flags)[:n_rows, 0].astype(bool)
+        # Per-shard live extent: shard 0 holds ceil(n/S) live rows, pad it
+        # to the filter tile; slicing [:jn] per shard block is collective-
+        # free (same reshape trick as the match chunks).
+        jf = sigs.shape[0] // S
+        jn = min(jf, -(-(-(-n_rows // S)) // tile) * tile)
+        rows = sigs.reshape(S, jf, sigs.shape[1])[:, :jn].reshape(
+            S * jn, sigs.shape[1])
         flags = None
         for qi in range(ops.qsig_words.shape[0]):
-            f = _fq.filter_qgram(rows, cm._filter_dev[qi:qi + 1],
-                                 slack=ops.slacks[qi],
-                                 interpret=self.interpret)
+            def call(r, q, _slack=ops.slacks[qi]):
+                return _fq.filter_qgram(r, q, slack=_slack,
+                                        interpret=self.interpret)
+            f = self._shard_wrap(call, PartitionSpec(None, None))(
+                rows, cm._filter_dev[qi:qi + 1])
             flags = f if flags is None else flags | f
-        return np.asarray(flags)[:n_rows, 0].astype(bool)
+        logical = _sharding.cyclic_unpermute(np.asarray(flags)[:, 0], S)
+        return logical[:n_rows].astype(bool)
 
     def plan(self, patterns, *, backend=_UNSET, mode=_UNSET, rows=_UNSET,
              chunk_rows=_UNSET) -> Plan:
@@ -690,20 +861,42 @@ class MatchEngine:
         return self._shard_wrap(call, PartitionSpec(None, None))(
             ref_flat, pat_mat)
 
+    def _slice_resident(self, base: jnp.ndarray, c0: int,
+                        c1: int) -> jnp.ndarray:
+        """Rows [c0, c1) of a resident form, in its own layout.
+
+        Unsharded: a plain slice.  Sharded: logical rows [c0, c1) are
+        slots [c0/S, c1/S) *on every shard* under the cyclic layout, so
+        the chunk is a per-shard block slice -- reshape (S, J, w), slice
+        the slot axis, reshape back -- which XLA lowers without any
+        cross-device movement (the chunk stays sharded like the form).
+        The result is in physical (shard-major) order; ``run()``
+        un-permutes after the kernel.
+        """
+        S = self._row_shards
+        if S == 1:
+            return base[c0:c1]
+        j = base.shape[0] // S
+        return base.reshape(S, j, base.shape[1])[:, c0 // S:c1 // S].reshape(
+            c1 - c0, base.shape[1])
+
     def _chunk_scores(self, plan: Plan, pats2d: np.ndarray, c0: int,
-                      c1: int, packed, idx: Optional[jnp.ndarray]
-                      ) -> jnp.ndarray:
+                      c1: int, packed, idx: Optional[jnp.ndarray],
+                      idx_log: Optional[np.ndarray] = None) -> jnp.ndarray:
         """Scores for query rows [c0, c1): (rows, L) or (rows, L, Q).
 
         ``pats2d`` is the 2-D pattern operand for the ref backend -- codes
         for exact plans, accept masks for accept plans.  ``idx`` (padded
-        corpus-row indices) is set for row-subset queries: the chunk is
-        gathered from the resident device forms instead of sliced -- still
-        no host repacking.
+        *physical* gather indices) is set for row-subset queries: the
+        chunk is gathered from the resident device forms instead of
+        sliced -- still no host repacking; ``idx_log`` carries the same
+        rows as logical ids for the host-side ref backend.  Resident
+        sharded chunks come back in physical order (see
+        ``_slice_resident``).
         """
         if plan.backend == "ref":
             if idx is not None:
-                sel = np.asarray(idx[c0:min(c1, plan.n_rows)])
+                sel = idx_log[c0:min(c1, plan.n_rows)]
                 frags = jnp.asarray(self.corpus.fragments[sel])
             else:
                 frags = jnp.asarray(self.corpus.fragments[c0:min(c1,
@@ -718,7 +911,8 @@ class MatchEngine:
 
         if plan.backend == "swar":
             base = self.corpus.swar_words(plan.need_words)
-            words = base[idx[c0:c1]] if idx is not None else base[c0:c1]
+            words = (base[idx[c0:c1]] if idx is not None
+                     else self._slice_resident(base, c0, c1))
             pat_rows, mask = packed
             pat_rows = jnp.asarray(pat_rows)   # (Q, Wp) words or (Q, 4*Wp)
             mask = jnp.asarray(mask)
@@ -729,6 +923,10 @@ class MatchEngine:
                     rows = jnp.concatenate(
                         [rows, jnp.zeros((r_pad - rows.shape[0],
                                           rows.shape[1]), jnp.uint32)], 0)
+                if idx is None and self._row_shards > 1:
+                    # Resident chunk rows are physical: permute the per-row
+                    # patterns the same way so row i still meets pattern i.
+                    rows = _sharding.cyclic_permute(rows, self._row_shards)
                 return self._swar_chunk(words, rows, mask, plan)
             if plan.mode == "batched":
                 # Fused batched launch: tile the chunk Q times and ride
@@ -747,7 +945,8 @@ class MatchEngine:
 
         # mxu
         base = self.corpus.onehot_flat(plan.f_chars)
-        ref_flat = base[idx[c0:c1]] if idx is not None else base[c0:c1]
+        ref_flat = (base[idx[c0:c1]] if idx is not None
+                    else self._slice_resident(base, c0, c1))
         out = self._mxu_chunk(ref_flat, packed, plan)
         scores = jnp.round(out[:, :plan.n_locs, :plan.n_patterns]
                            ).astype(jnp.int32)
@@ -789,7 +988,8 @@ class MatchEngine:
         shape0 = (0, Q) if batched else (0,)
         res = MatchResult(plan=plan,
                           best_locs=np.zeros(shape0, np.int32),
-                          best_scores=np.zeros(shape0, np.int32))
+                          best_scores=np.zeros(shape0, np.int32),
+                          n_shards=self._row_shards)
         if query.reduction == "full":
             res.scores = np.zeros((0, plan.n_locs, Q) if batched
                                   else (0, plan.n_locs), np.int32)

@@ -43,7 +43,14 @@ from typing import Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as _sharding
 from repro.kernels import filter_qgram as _fq
+
+# Host signature packing proceeds in bounded row chunks: pack_bit_rows
+# materializes an (n, n_bits) occupancy matrix, which at 1M rows x 256
+# bits would be a 1 GiB temporary.  64K-row chunks cap it at ~64 MiB
+# with no change in output.
+_BUILD_CHUNK_ROWS = 1 << 16
 
 # Fibonacci-multiplicative hash constant (Knuth); the top log2(B) bits of
 # the wrapped product spread consecutive q-gram values well.
@@ -228,9 +235,23 @@ class CorpusIndex:
     # -- geometry --------------------------------------------------------------
     @property
     def _rows_padded(self) -> int:
-        """Device-form row count: capacity padded to the filter row tile."""
+        """Device-form row count: per-shard capacity padded to the filter
+        row tile.
+
+        The signature form mirrors the corpus's cyclic row layout (same
+        shard for every logical row) but pads each shard's slot count to
+        ``FILTER_ROW_TILE`` independently -- its stride ``Jf`` is
+        therefore generally larger than the corpus forms' ``J``.
+        """
         tile = _fq.FILTER_ROW_TILE
-        return -(-self.corpus.capacity_padded // tile) * tile
+        s = self.corpus.n_shards
+        j = self.corpus.capacity_padded // s
+        return s * (-(-j // tile) * tile)
+
+    @property
+    def shard_stride(self) -> int:
+        """Per-shard physical stride of the signature form."""
+        return self._rows_padded // self.corpus.n_shards
 
     # -- residency -------------------------------------------------------------
     def signatures(self) -> jnp.ndarray:
@@ -242,13 +263,19 @@ class CorpusIndex:
         """
         if self._sigs is None:
             n = self.corpus.n_rows
+            s = self.corpus.n_shards
+            stride = self.shard_stride
             words = np.zeros((self._rows_padded, self.sig_words), np.uint32)
-            if n:
+            # Chunked pack (bounded occupancy temporary) straight into the
+            # cyclic physical layout the corpus forms use.
+            for b0 in range(0, n, _BUILD_CHUNK_ROWS):
+                b1 = min(b0 + _BUILD_CHUNK_ROWS, n)
                 live, counts = row_signatures(
-                    self.corpus.fragments, self.q, self.n_bits)
-                words[:n] = live
-                self._row_bits[:n] = counts
-            self._sigs = jnp.asarray(words)
+                    self.corpus.fragments[b0:b1], self.q, self.n_bits)
+                words[_sharding.cyclic_physical_rows(
+                    np.arange(b0, b1), s, stride)] = live
+                self._row_bits[b0:b1] = counts
+            self._sigs = self.corpus._place(words)
             self.sig_pack_count += 1
         return self._sigs
 
@@ -258,8 +285,14 @@ class CorpusIndex:
         n = rows.shape[0]
         if self._sigs is not None:
             words, counts = row_signatures(rows, self.q, self.n_bits)
-            self._sigs = self._sigs.at[start:start + n, :].set(
-                jnp.asarray(words))
+            s = self.corpus.n_shards
+            if s == 1:
+                self._sigs = self._sigs.at[start:start + n, :].set(
+                    jnp.asarray(words))
+            else:
+                phys = jnp.asarray(_sharding.cyclic_physical_rows(
+                    np.arange(start, start + n), s, self.shard_stride))
+                self._sigs = self._sigs.at[phys, :].set(jnp.asarray(words))
             self._row_bits[start:start + n] = counts
             self.row_update_count += n
 
@@ -273,10 +306,10 @@ class CorpusIndex:
         if self._sigs is not None:
             pad = self._rows_padded
             if self._sigs.shape[0] < pad:
-                self._sigs = jnp.concatenate(
-                    [self._sigs,
-                     jnp.zeros((pad - self._sigs.shape[0], self.sig_words),
-                               jnp.uint32)], 0)
+                # Per-shard zero-extension through the corpus's layout
+                # helper: rows keep their shard and slot, placement is
+                # re-applied.
+                self._sigs = self.corpus._grow_form_rows(self._sigs, pad)
 
     def _on_invalidate(self) -> None:
         self._sigs = None

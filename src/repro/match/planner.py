@@ -81,6 +81,10 @@ class Plan:
     strategy: str = "scan"      # "scan" | "filter" (filter-then-verify)
     filter_words: int = 0       # signature words per row (filter plans)
     est_survivor_frac: float = 1.0  # estimated post-filter row fraction
+    # Sharded execution (DESIGN.md Sec. 3h): kernel terms priced at the
+    # per-shard row count (shards run concurrently; the critical path is
+    # one shard's work plus the small host merge).
+    n_shards: int = 1
 
 
 def _swar_geometry(P: int, L: int) -> tuple[int, int]:
@@ -201,11 +205,19 @@ class Planner:
 
     # -- chunking -------------------------------------------------------------
     def _chunk_rows(self, R_pad: int, plan_bytes_per_row: int,
-                    row_tile: int, override: Optional[int]) -> int:
+                    row_tile: int, override: Optional[int],
+                    n_shards: int = 1) -> int:
+        """Rows per streaming chunk (a multiple of the row tile).
+
+        The memory budget is per device; a sharded chunk spreads its rows
+        over ``n_shards`` devices, so the global chunk can be S times
+        larger for the same per-device footprint.
+        """
         if override is not None:
             chunk = -(-override // row_tile) * row_tile
         else:
-            rows = int(self.memory_budget_bytes // max(plan_bytes_per_row, 1))
+            rows = int(self.memory_budget_bytes * n_shards
+                       // max(plan_bytes_per_row, 1))
             chunk = max(row_tile, (rows // row_tile) * row_tile)
         return min(chunk, R_pad)
 
@@ -215,7 +227,8 @@ class Planner:
              backend: Optional[str] = None,
              chunk_rows: Optional[int] = None,
              predicate: str = "exact",
-             filter_ctx: Optional[FilterContext] = None) -> Plan:
+             filter_ctx: Optional[FilterContext] = None,
+             n_shards: int = 1) -> Plan:
         R, F, P = n_rows, fragment_chars, pattern_chars
         if R < 1:
             raise ValueError("corpus has no rows")
@@ -236,8 +249,15 @@ class Planner:
         if backend == "mxu" and per_row:
             raise ValueError("mxu kernel has no per-row-pattern formulation")
 
-        t_swar = self.swar_seconds(R, L, P, Q, predicate)
-        t_mxu = self.mxu_seconds(R, L, P, Q)
+        # Shard-aware pricing (DESIGN.md Sec. 3h): the kernels run per
+        # shard on R/S rows concurrently, so their roofline terms use the
+        # per-shard row count -- the critical path, not the total work.
+        # The ref backend scans the host buffer single-threaded and the
+        # tiny-workload escape hatch keys on total ops, so both keep R.
+        S = max(1, int(n_shards))
+        R_shard = -(-R // S)
+        t_swar = self.swar_seconds(R_shard, L, P, Q, predicate)
+        t_mxu = self.mxu_seconds(R_shard, L, P, Q)
 
         if backend is not None:
             chosen, reason = backend, "explicit override"
@@ -257,7 +277,8 @@ class Planner:
 
         wp, need = _swar_geometry(P, L)
         l_pad, p_chars, q_pad, f_chars = _mxu_geometry(P, L, Q)
-        R_pad = -(-R // _swar.ROW_TILE) * _swar.ROW_TILE
+        row_pad = _swar.ROW_TILE * S
+        R_pad = -(-R // row_pad) * row_pad
 
         if chosen == "swar":
             # Batched swar tiles each chunk Q times (one fused launch), so
@@ -275,7 +296,9 @@ class Planner:
             bytes_per_row = F + L * 4 * Q
             row_tile = 1
             est = self.ref_seconds(R, L, P, Q)
-        chunk = self._chunk_rows(R_pad, bytes_per_row, row_tile, chunk_rows)
+        chunk = self._chunk_rows(R_pad, bytes_per_row,
+                                 row_tile if chosen == "ref" else
+                                 row_tile * S, chunk_rows, n_shards=S)
 
         # Two-stage pricing (DESIGN.md Sec. 3g): for an eligible threshold
         # query, compare filter + estimated-survivor verify against the
@@ -287,8 +310,12 @@ class Planner:
         strategy, filter_words, surv = "scan", 0, 1.0
         if filter_ctx is not None and filter_ctx.prunable:
             frac = filter_ctx.survivor_frac
-            r_surv = max(1, math.ceil(frac * R))
-            t_fil = self.filter_seconds(R, filter_ctx.sig_words,
+            # Per-shard pricing: the filter kernel scans R/S signatures
+            # per shard, and survivors spread ~uniformly over shards
+            # (cyclic placement), so the verify stage is r_surv/S per
+            # shard too.
+            r_surv = max(1, math.ceil(frac * R / S))
+            t_fil = self.filter_seconds(R_shard, filter_ctx.sig_words,
                                         filter_ctx.n_queries)
             if chosen == "swar":
                 t_ver = self.swar_seconds(r_surv, L, P, Q, predicate)
@@ -305,20 +332,23 @@ class Planner:
                            f"{est:.3g}s (est survivors {frac:.3g})")
                 est = t_fil + t_ver
 
+        if S > 1:
+            reason += f"; priced per shard (S={S})"
         return Plan(backend=chosen, mode=mode, n_rows=R, fragment_chars=F,
                     pattern_chars=P, n_patterns=Q, n_locs=L, wp=wp,
                     need_words=need, l_pad=l_pad, p_chars_pad=p_chars,
                     q_pad=q_pad, f_chars=f_chars, chunk_rows=chunk,
                     est_seconds=est, reason=reason, predicate=predicate,
                     strategy=strategy, filter_words=filter_words,
-                    est_survivor_frac=surv)
+                    est_survivor_frac=surv, n_shards=S)
 
     # -- batch pricing --------------------------------------------------------
     def plan_batch(self, *, n_rows: int, fragment_chars: int,
                    pattern_chars: int, n_queries: int,
                    backend: Optional[str] = None,
                    chunk_rows: Optional[int] = None,
-                   predicate: str = "exact") -> BatchPlan:
+                   predicate: str = "exact",
+                   n_shards: int = 1) -> BatchPlan:
         """Price Q compatible shared-mode queries: coalesced vs. sequential.
 
         Sequential is Q independent single-pattern launches (each paying
@@ -332,7 +362,8 @@ class Planner:
             raise ValueError("n_queries must be >= 1")
         single = self.plan(n_rows=n_rows, fragment_chars=fragment_chars,
                            pattern_chars=pattern_chars, backend=backend,
-                           chunk_rows=chunk_rows, predicate=predicate)
+                           chunk_rows=chunk_rows, predicate=predicate,
+                           n_shards=n_shards)
         if n_queries == 1:
             return BatchPlan(coalesced=False, plan=single, n_queries=1,
                              est_coalesced_s=single.est_seconds,
@@ -341,7 +372,8 @@ class Planner:
         batched = self.plan(n_rows=n_rows, fragment_chars=fragment_chars,
                             pattern_chars=pattern_chars,
                             n_patterns=n_queries, backend=backend,
-                            chunk_rows=chunk_rows, predicate=predicate)
+                            chunk_rows=chunk_rows, predicate=predicate,
+                            n_shards=n_shards)
         est_seq = n_queries * single.est_seconds
         est_co = batched.est_seconds
         coalesced = est_co <= est_seq

@@ -78,6 +78,8 @@ class ServiceStats:
     n_filtered_launches: int = 0      # launches that ran filter-then-verify
     sum_survivor_frac: float = 0.0    # running sum over filtered launches
     total_latency_s: float = 0.0      # running sum (bounded state)
+    n_shards: int = 1                 # engine row shards (mesh-resident)
+    shard_rows: Optional[List[int]] = None   # live rows per shard
     _t_first_submit: Optional[float] = None
     _t_last_complete: Optional[float] = None
 
@@ -109,6 +111,19 @@ class ServiceStats:
                 if self.n_filtered_launches else 0.0)
 
     @property
+    def shard_balance(self) -> float:
+        """Max/min live-row ratio across shards (1.0 = perfectly even).
+
+        Cyclic row placement keeps this <= (j+1)/j for per-shard count j,
+        so it converges to 1.0 as the corpus grows; the shard benchmark
+        asserts <= 1.1 after ingest.
+        """
+        if not self.shard_rows or len(self.shard_rows) < 2:
+            return 1.0
+        lo = min(self.shard_rows)
+        return float(max(self.shard_rows)) / lo if lo else float("inf")
+
+    @property
     def qps(self) -> float:
         """Completed queries per second of wall time, submit to done."""
         if (self._t_first_submit is None or self._t_last_complete is None
@@ -138,6 +153,10 @@ class ServiceStats:
             "avg_survivor_frac": round(self.avg_survivor_frac, 4),
             "avg_latency_s": round(self.avg_latency_s, 6),
             "qps": round(self.qps, 1),
+            "n_shards": self.n_shards,
+            "shard_rows": list(self.shard_rows or []),
+            "shard_balance": (round(self.shard_balance, 4)
+                              if self.shard_rows else 1.0),
         }
 
 
@@ -225,6 +244,7 @@ class MatchService:
         self._ingest_queue: List[Tuple[IngestTicket, np.ndarray]] = []
         self._cache: "OrderedDict[MatchQuery, MatchResult]" = OrderedDict()
         self._cache_generation = engine.corpus.generation
+        self._note_shards()
 
     # -- submission -----------------------------------------------------------
     def submit(self, patterns, *, reduction=_UNSET, k=_UNSET,
@@ -417,7 +437,8 @@ class MatchService:
                 fragment_chars=self.engine.corpus.fragment_chars,
                 pattern_chars=first.pattern_chars, n_queries=n_q,
                 backend=first.backend, chunk_rows=first.chunk_rows,
-                predicate=first.predicate)
+                predicate=first.predicate,
+                n_shards=self.engine.n_shards)
         if bp is not None and bp.coalesced:
             fused = self._fuse_queries(members)
             self.stats.n_launches += 1
@@ -439,6 +460,17 @@ class MatchService:
                 self._cache_put(mem[0].query, res)
                 for p in mem:
                     self._complete(p, res, cached=False)
+
+    def _note_shards(self) -> None:
+        """Refresh per-shard placement stats from the engine.
+
+        Cyclic placement (DESIGN.md Sec. 3h) appends row n to shard
+        n % S -- always the shard with the fewest live rows -- so ingest
+        is balanced by construction; the snapshot makes that auditable.
+        """
+        self.stats.n_shards = self.engine.n_shards
+        self.stats.shard_rows = [
+            int(x) for x in self.engine.shard_live_rows()]
 
     def _apply_ingests(self) -> None:
         """Append all pending ingest rows as one batched in-place write."""
@@ -464,6 +496,7 @@ class MatchService:
         this tick.
         """
         self._apply_ingests()
+        self._note_shards()
         gen = self.engine.corpus.generation
         if gen != self._cache_generation:
             self._cache.clear()
