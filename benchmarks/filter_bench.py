@@ -45,8 +45,8 @@ FULL = dict(R=16384, F=256, P=32, planted=96, thr_offs=(0, 1),
 SMOKE = dict(R=1024, F=128, P=16, planted=12, thr_offs=(0,),
              dense_thr=4, repeats=1, force=True)
 
-REQUIRED_KEYS = ("shape", "interpret", "smoke", "index", "dense_strategy",
-                 "results")
+REQUIRED_KEYS = ("shape", "device_kind", "backend", "calibration",
+                 "interpret", "smoke", "index", "dense_strategy", "results")
 REQUIRED_RESULT_KEYS = ("case", "strategy", "scan_s", "filtered_s",
                         "speedup", "survivor_frac", "n_hits", "identical",
                         "oracle_ok")
@@ -112,6 +112,10 @@ def validate(record: dict) -> None:
     for key in REQUIRED_KEYS:
         if key not in record:
             raise ValueError(f"BENCH record missing key {key!r}")
+    if not (record["calibration"] == "static"
+            or record["calibration"].startswith("calibrated:")):
+        raise ValueError("malformed calibration provenance: "
+                         f"{record['calibration']!r}")
     if not record["results"]:
         raise ValueError("BENCH record has no results")
     if record["dense_strategy"] != "scan":
@@ -163,9 +167,11 @@ def run_bench(smoke: bool) -> dict:
     # at this shape would materialize millions of hits.
     dense = eng.compile(MatchQuery.exact(
         pat, reduction="threshold", threshold=float(cfg["dense_thr"])))
+    from repro.match.calibrate import bench_provenance
     record = {
         "shape": {"R": cfg["R"], "F": cfg["F"], "P": P,
                   "planted_rows": cfg["planted"]},
+        **bench_provenance(eng.planner.cost_source),
         "interpret": eng.interpret,
         "smoke": smoke,
         "forced": cfg["force"],

@@ -42,7 +42,8 @@ FULL = dict(R0=64, F=256, P=32, n_docs=192, ingest_batch=4, q_per_tick=2,
 SMOKE = dict(R0=16, F=128, P=16, n_docs=24, ingest_batch=4, q_per_tick=1,
              dedup_docs=12)
 
-REQUIRED_KEYS = ("shape", "interpret", "smoke", "results")
+REQUIRED_KEYS = ("shape", "device_kind", "backend", "calibration",
+                 "interpret", "smoke", "results")
 REQUIRED_RESULT_KEYS = ("scenario", "n_docs", "docs_per_s",
                         "resident_repacks", "engine_stable", "identical")
 
@@ -138,6 +139,10 @@ def validate(record: dict) -> None:
     for key in REQUIRED_KEYS:
         if key not in record:
             raise ValueError(f"BENCH record missing key {key!r}")
+    if not (record["calibration"] == "static"
+            or record["calibration"].startswith("calibrated:")):
+        raise ValueError("malformed calibration provenance: "
+                         f"{record['calibration']!r}")
     if not record["results"]:
         raise ValueError("BENCH record has no results")
     for row in record["results"]:
@@ -166,9 +171,11 @@ def run_bench(smoke: bool) -> dict:
     cfg = SMOKE if smoke else FULL
     rng = np.random.default_rng(11)
     results = [bench_service_mixed(cfg, rng), bench_dedup_growth(cfg, rng)]
+    from repro.match.calibrate import bench_provenance
     record = {
         "shape": {k: cfg[k] for k in
                   ("R0", "F", "P", "n_docs", "ingest_batch", "q_per_tick")},
+        **bench_provenance(),
         "interpret": _engine.default_interpret(),
         "smoke": smoke,
         "results": results,

@@ -13,8 +13,10 @@ emits ``BENCH_match_engine.json`` at the repo root so later PRs have a
 perf trajectory; it also asserts the steady-state no-repacking invariant.
 """
 
+import argparse
 import json
 import pathlib
+import sys
 import time
 
 import numpy as np
@@ -31,6 +33,28 @@ R, F, P = 512, 1024, 100
 ER, EF, EP, EQUERIES = 64, 512, 96, 5
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_match_engine.json"
+
+REQUIRED_KEYS = ("shape", "device_kind", "backend", "calibration",
+                 "interpret", "cold_s", "warm_s_per_query",
+                 "warm_rows_per_s", "cold_over_warm", "host_pack_count",
+                 "auto_backend", "planner_est_s")
+
+
+def validate(record: dict) -> None:
+    """Schema guard: fail loudly if the BENCH artifact is malformed."""
+    for key in REQUIRED_KEYS:
+        if key not in record:
+            raise ValueError(f"BENCH record missing key {key!r}")
+    if not (record["calibration"] == "static"
+            or record["calibration"].startswith("calibrated:")):
+        raise ValueError("malformed calibration provenance: "
+                         f"{record['calibration']!r}")
+    if record["host_pack_count"] != 1:
+        raise ValueError("corpus repacked on warm query "
+                         f"({record['host_pack_count']} packs)")
+    if record["cold_s"] <= 0 or record["warm_s_per_query"] <= 0:
+        raise ValueError("non-positive timing in BENCH record")
+    json.loads(json.dumps(record))      # round-trips as JSON
 
 
 def _setup():
@@ -49,9 +73,10 @@ def _setup():
     return rw, pw, mask, L
 
 
-def bench_engine():
+def bench_engine(smoke: bool = False):
     """Cold-pack vs. warm repeated-query path through the real engine."""
     from repro.match import MatchEngine
+    from repro.match.calibrate import bench_provenance
 
     rng = np.random.default_rng(42)
     frags = rng.integers(0, 4, (ER, EF), np.uint8)
@@ -77,6 +102,7 @@ def bench_engine():
     record = {
         "shape": {"R": ER, "F": EF, "P": EP, "chunk_rows": chunk,
                   "n_chunks": res.n_chunks},
+        **bench_provenance(eng.planner.cost_source),
         "cold_s": round(cold_s, 6),
         "warm_s_per_query": round(warm_s, 6),
         "warm_rows_per_s": round(ER / warm_s, 1),
@@ -86,7 +112,11 @@ def bench_engine():
         "planner_est_s": plan.est_seconds,
         "interpret": eng.interpret,
     }
-    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    validate(record)
+    if not smoke:
+        # Smoke mode (the CI schema guard) must not clobber the committed
+        # full-run artifact.
+        BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
     return record
 
 
@@ -166,3 +196,30 @@ def artifact_summary() -> str:
             f"cold_over_warm={rec['cold_over_warm']}x "
             f"backend={rec['auto_backend']} "
             f"host_packs={rec['host_pack_count']}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="validate the record without rewriting the "
+                         "committed artifact (CI schema guard)")
+    args = ap.parse_args()
+    try:
+        record = bench_engine(smoke=args.smoke)
+    except ValueError as e:
+        print(f"BENCH validation failed: {e}", file=sys.stderr)
+        return 1
+    print(f"cold={record['cold_s']*1e3:.1f}ms "
+          f"warm={record['warm_s_per_query']*1e3:.1f}ms/query "
+          f"cold/warm={record['cold_over_warm']}x "
+          f"auto_backend={record['auto_backend']} "
+          f"calibration={record['calibration']}")
+    if args.smoke:
+        print("smoke: record validated, artifact not written")
+    else:
+        print(f"wrote {BENCH_JSON}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

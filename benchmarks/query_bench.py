@@ -43,7 +43,8 @@ SMOKE = dict(R=16, F=128, P=16, iters=2, repeats=1)
 BACKEND = "swar"
 N_WILDCARDS = 4
 
-REQUIRED_KEYS = ("shape", "backend", "interpret", "smoke", "results")
+REQUIRED_KEYS = ("shape", "kernel_backend", "device_kind", "backend",
+                 "calibration", "interpret", "smoke", "results")
 REQUIRED_RESULT_KEYS = ("predicate", "uncompiled_us", "compiled_us",
                         "speedup", "identical", "oracle_ok")
 
@@ -111,6 +112,10 @@ def validate(record: dict) -> None:
     for key in REQUIRED_KEYS:
         if key not in record:
             raise ValueError(f"BENCH record missing key {key!r}")
+    if not (record["calibration"] == "static"
+            or record["calibration"].startswith("calibrated:")):
+        raise ValueError("malformed calibration provenance: "
+                         f"{record['calibration']!r}")
     if not record["results"]:
         raise ValueError("BENCH record has no results")
     preds = set()
@@ -143,9 +148,11 @@ def run_bench(smoke: bool) -> dict:
                                cfg["repeats"])
                for pred in ("exact", "wildcard")]
     by_pred = {r["predicate"]: r for r in results}
+    from repro.match.calibrate import bench_provenance
     record = {
         "shape": {"R": R, "F": F, "P": P},
-        "backend": BACKEND,
+        "kernel_backend": BACKEND,
+        **bench_provenance(eng.planner.cost_source),
         "interpret": eng.interpret,
         "smoke": smoke,
         "results": results,

@@ -8,6 +8,12 @@ roofline fraction:
 
 i.e. what fraction of the step-time *bound* is useful model compute -- the
 score §Perf hillclimbs.
+
+When a calibration table for the current substrate exists
+(``repro.match.calibrate``), the report also prints one greppable
+``CALIB_DELTA`` line per kernel: the static roofline price vs. the
+measured (curve) price at a reference shape, i.e. how far the datasheet
+model is from reality here.
 """
 
 from __future__ import annotations
@@ -77,13 +83,79 @@ def markdown(mesh: str = "16x16", path=None) -> str:
     return "\n".join(lines)
 
 
+# Reference shape per kernel for the static-vs-measured delta (the
+# largest point of the autotune grid: least intercept-dominated).
+_DELTA_SHAPES = {
+    "swar": dict(R=4096, F=128, P=16),
+    "swar_masks": dict(R=2048, F=512, P=64),
+    "mxu": dict(R=512, F=256, P=64, Q=128),
+    "ref": dict(R=1024, F=256, P=32),
+    "filter": dict(R=16384, sig_words=8),
+}
+
+
+def calibration_delta() -> List[dict]:
+    """Per-kernel static-vs-measured price delta, [] when no table fits.
+
+    Prices the same analytic estimate through both cost sources; the
+    ratio is the measured overhead the static model cannot see (in
+    interpret mode it is orders of magnitude).
+    """
+    from repro.core.tech import TPU_V5E, StaticCostSource
+    from repro.match import calibrate
+    from repro.match.planner import (analytic_filter_seconds,
+                                     analytic_mxu_seconds,
+                                     analytic_ref_seconds,
+                                     analytic_swar_seconds)
+
+    source = calibrate.load_cost_source()
+    if source is None:
+        return []
+    static = StaticCostSource()
+    out = []
+    for kernel, shape in _DELTA_SHAPES.items():
+        if kernel not in source.curves:
+            continue
+        if kernel == "filter":
+            analytic = analytic_filter_seconds(
+                TPU_V5E, shape["R"], shape["sig_words"], 1)
+        else:
+            L = shape["F"] - shape["P"] + 1
+            if kernel == "mxu":
+                analytic = analytic_mxu_seconds(
+                    TPU_V5E, shape["R"], L, shape["P"], shape["Q"])
+            elif kernel == "ref":
+                analytic = analytic_ref_seconds(
+                    TPU_V5E, shape["R"], L, shape["P"], 1)
+            else:
+                pred = "accept" if kernel == "swar_masks" else "exact"
+                analytic = analytic_swar_seconds(
+                    TPU_V5E, shape["R"], L, shape["P"], 1, pred)
+        s = static.price(kernel, analytic, 1)
+        m = source.price(kernel, analytic, 1)
+        curve = source.curves[kernel]
+        out.append({"kernel": kernel, "shape": shape,
+                    "static_s": s, "measured_s": m,
+                    "ratio": m / max(s, 1e-300),
+                    "alpha": curve.alpha, "beta": curve.beta,
+                    "rel_err": curve.rel_err, "tag": source.tag})
+    return out
+
+
 def run():
     rows = []
+    for d in calibration_delta():
+        rows.append((f"roofline/calib_delta/{d['kernel']}", 0.0,
+                     f"static_s={d['static_s']:.3g}"
+                     f" measured_s={d['measured_s']:.3g}"
+                     f" ratio={d['ratio']:.3g} alpha={d['alpha']:.4g}"
+                     f" beta={d['beta']:.3g} tag={d['tag']}"))
     cells = table("16x16")
     ok = [r for r in cells if r.get("status") == "ok"]
     if not ok:
-        return [("roofline/missing", 0.0,
-                 "run python -m repro.launch.dryrun --all first")]
+        rows.append(("roofline/missing", 0.0,
+                     "run python -m repro.launch.dryrun --all first"))
+        return rows
     for r in ok:
         rows.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
                      f"compute={r['compute_s']:.3g}s memory={r['memory_s']:.3g}s"
@@ -97,3 +169,22 @@ def run():
                  f"{collb['arch']}/{collb['shape']}"
                  f" coll_share={collb['collective_s']/collb['bound_s']:.3f}"))
     return rows
+
+
+def main() -> int:
+    deltas = calibration_delta()
+    if not deltas:
+        print("CALIB_DELTA none (no calibration table for this substrate; "
+              "run python -m repro.match.calibrate)")
+    for d in deltas:
+        print(f"CALIB_DELTA kernel={d['kernel']} "
+              f"static_s={d['static_s']:.4g} "
+              f"measured_s={d['measured_s']:.4g} ratio={d['ratio']:.4g} "
+              f"alpha={d['alpha']:.4g} beta={d['beta']:.4g} "
+              f"rel_err={d['rel_err']:.3g} tag={d['tag']}")
+    print(markdown())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,7 +38,8 @@ FULL = dict(R=48, F=256, P=32, q_levels=(1, 8, 64, 256), repeats=5)
 SMOKE = dict(R=48, F=128, P=16, q_levels=(1, 8, 16), repeats=1)
 BACKEND = "swar"
 
-REQUIRED_KEYS = ("shape", "backend", "interpret", "smoke", "q_levels",
+REQUIRED_KEYS = ("shape", "kernel_backend", "device_kind", "backend",
+                 "calibration", "interpret", "smoke", "q_levels",
                  "results")
 REQUIRED_RESULT_KEYS = ("Q", "seq_s", "svc_s", "seq_qps", "svc_qps",
                         "speedup", "identical", "coalesced_launches")
@@ -92,6 +93,10 @@ def validate(record: dict) -> None:
     for key in REQUIRED_KEYS:
         if key not in record:
             raise ValueError(f"BENCH record missing key {key!r}")
+    if not (record["calibration"] == "static"
+            or record["calibration"].startswith("calibrated:")):
+        raise ValueError("malformed calibration provenance: "
+                         f"{record['calibration']!r}")
     if not record["results"]:
         raise ValueError("BENCH record has no results")
     for row in record["results"]:
@@ -115,9 +120,11 @@ def run_bench(smoke: bool) -> dict:
     eng = MatchEngine(rng.integers(0, 4, (R, F), np.uint8))
     results = [bench_level(eng, Q, P, rng, cfg["repeats"])
                for Q in cfg["q_levels"]]
+    from repro.match.calibrate import bench_provenance
     record = {
         "shape": {"R": R, "F": F, "P": P},
-        "backend": BACKEND,
+        "kernel_backend": BACKEND,
+        **bench_provenance(eng.planner.cost_source),
         "interpret": eng.interpret,
         "smoke": smoke,
         "q_levels": list(cfg["q_levels"]),

@@ -77,7 +77,8 @@ SMOKE = dict(R=1 << 12, F=64, P=32, planted=24, shards=(1, 2, 4),
 SPEEDUP_FLOOR = 3.0      # at max shards, both paths (full run only)
 BALANCE_CEIL = 1.1       # max/min live rows per shard after ingest
 
-REQUIRED_KEYS = ("shape", "interpret", "smoke", "model", "cpu_count",
+REQUIRED_KEYS = ("shape", "device_kind", "backend", "calibration",
+                 "interpret", "smoke", "model", "cpu_count",
                  "shards", "scan", "filtered", "false_negatives", "service")
 REQUIRED_RESULT_KEYS = ("shards", "local_s", "merge_s", "critical_path_s",
                         "shardmap_wall_s", "speedup", "identical")
@@ -270,6 +271,10 @@ def validate(record: dict) -> None:
     for key in REQUIRED_KEYS:
         if key not in record:
             raise ValueError(f"BENCH record missing key {key!r}")
+    if not (record["calibration"] == "static"
+            or record["calibration"].startswith("calibrated:")):
+        raise ValueError("malformed calibration provenance: "
+                         f"{record['calibration']!r}")
     if record["model"] != "critical-path":
         raise ValueError("timing model must be declared as 'critical-path'")
     smoke = record["smoke"]
@@ -342,9 +347,11 @@ def run_bench(smoke: bool) -> dict:
     interpret = bool(e1.interpret)
     del e1
 
+    from repro.match.calibrate import bench_provenance
     record = {
         "shape": {"R": cfg["R"], "F": cfg["F"], "P": P,
                   "planted_rows": cfg["planted"]},
+        **bench_provenance(),
         "interpret": interpret,
         "smoke": smoke,
         "model": "critical-path",

@@ -1,4 +1,7 @@
-"""Technology parameters for CRAM-PM (paper Table 3) and TPU roofline constants.
+"""Technology parameters for CRAM-PM (paper Table 3), TPU roofline constants,
+and the ``CostSource`` abstraction that prices kernel dispatches for the
+match planner (static datasheet fallback vs. measured calibration --
+DESIGN.md Sec. 3i).
 
 Two MTJ technology points are modeled, exactly as in the paper:
 
@@ -20,6 +23,7 @@ asserted by ``tests/test_costmodel.py``.
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict, Mapping, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +156,120 @@ class TPURoofline:
 
 
 TPU_V5E = TPURoofline()
+
+# Per-kernel-dispatch overhead (host launch + program switch) the *static*
+# cost source charges; calibrated sources replace it with a measured
+# per-kernel intercept.  Calibrated order-of-magnitude for a real TPU.
+DISPATCH_OVERHEAD_S = 5e-6
+# The jnp reference path runs on the host with per-call framework overhead
+# well above a fused Pallas launch.
+REF_CALL_OVERHEAD_S = 5e-5
+
+
+class CostSource:
+    """Prices one kernel dispatch from its analytic roofline seconds.
+
+    The planner computes each kernel's *analytic* cost -- op and byte
+    counts against the ``TPURoofline`` constants, ``max(compute, mem)`` --
+    and asks the active source to turn that into wall seconds.  Two
+    implementations exist:
+
+    * ``StaticCostSource`` -- the datasheet model: analytic seconds plus a
+      fixed per-dispatch overhead.  This is the uncalibrated *fallback*;
+      on any substrate other than the one the constants describe (a CPU
+      container in interpret mode, a different TPU generation, a different
+      host), its absolute numbers -- and therefore its *decisions* -- are
+      fiction, exactly the failure mode the paper's Sec. 4 methodology
+      (device-level parameter extraction before any system claim) exists
+      to avoid.
+    * ``CalibratedCostSource`` -- per-kernel curves fitted from
+      microbenchmarks of the actual kernels on the current backend
+      (``repro.match.calibrate``): measured overhead factor over the
+      analytic model plus a measured per-dispatch intercept, so unseen
+      shapes interpolate through the same analytic arithmetic instead of
+      a lookup table.
+
+    ``tag`` is the provenance string recorded in every ``Plan.reason``
+    and BENCH artifact ("static" or "calibrated:<digest8>").
+    """
+
+    name = "abstract"
+
+    def price(self, kernel: str, analytic_s: float,
+              n_dispatch: int = 1) -> float:
+        raise NotImplementedError
+
+    @property
+    def tag(self) -> str:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.tag})"
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticCostSource(CostSource):
+    """Datasheet pricing: analytic roofline + fixed dispatch overhead."""
+
+    dispatch_overhead_s: float = DISPATCH_OVERHEAD_S
+    ref_call_overhead_s: float = REF_CALL_OVERHEAD_S
+    name = "static"
+
+    def price(self, kernel: str, analytic_s: float,
+              n_dispatch: int = 1) -> float:
+        per = (self.ref_call_overhead_s if kernel == "ref"
+               else self.dispatch_overhead_s)
+        return analytic_s + n_dispatch * per
+
+    @property
+    def tag(self) -> str:
+        return "static"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCurve:
+    """One kernel's fitted cost curve: measured = alpha*analytic + beta.
+
+    ``alpha`` is the measured overhead factor over the analytic op/byte
+    model (the SNIPPETS.md Sec. 2 idiom: measured cycles / pure-FMACS
+    cycles); ``beta`` is the measured per-dispatch intercept (launch,
+    program switch, interpreter setup).  Both are fitted under
+    positivity constraints, so calibrated pricing inherits the analytic
+    model's monotonicity in R, P and Q.
+    """
+
+    alpha: float                  # overhead factor (> 0)
+    beta: float                   # per-dispatch fixed seconds (>= 0)
+    n_samples: int = 0
+    rel_err: float = 0.0          # max relative residual of the fit
+
+    def seconds(self, analytic_s: float, n_dispatch: int = 1) -> float:
+        return self.alpha * analytic_s + n_dispatch * self.beta
+
+
+class CalibratedCostSource(CostSource):
+    """Measured per-kernel curves; unknown kernels fall back to static."""
+
+    name = "calibrated"
+
+    def __init__(self, curves: Mapping[str, KernelCurve], *, digest: str,
+                 meta: Optional[Mapping] = None,
+                 fallback: Optional[CostSource] = None):
+        self.curves: Dict[str, KernelCurve] = dict(curves)
+        self.digest = str(digest)
+        self.meta = dict(meta or {})
+        self.fallback = fallback or StaticCostSource()
+
+    def price(self, kernel: str, analytic_s: float,
+              n_dispatch: int = 1) -> float:
+        curve = self.curves.get(kernel)
+        if curve is None:
+            return self.fallback.price(kernel, analytic_s, n_dispatch)
+        return curve.seconds(analytic_s, n_dispatch)
+
+    @property
+    def tag(self) -> str:
+        return f"calibrated:{self.digest[:8]}"
 
 # Conservative series resistance seen by each cell's current path (access
 # transistor on-resistance + LL interconnect segment).  Single calibration

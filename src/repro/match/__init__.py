@@ -29,6 +29,13 @@ The single entry point for all string-matching workloads:
   invalidated on corpus generation change), and ingests new corpus rows
   online (``ingest``: appends batched per tick, interleaved with query
   execution against the same resident corpus).
+* ``calibrate`` / ``FeedbackStore`` -- measured cost model (DESIGN.md
+  Sec. 3i): ``autotune()`` microbenchmarks the kernels and fits
+  per-kernel overhead curves, persisted per substrate
+  (``load_cost_source()``); ``FeedbackStore`` is the online half, re-
+  pricing (kernel, shape-bucket)s whose observed runtimes drift past the
+  bound.  "Calibrate once, then serve":
+  ``MatchEngine(frags, cost_source=load_cost_source())``.
 
 ``repro.kernels.ops.match_scores`` is the thin one-shot compat shim over
 this package; long-lived consumers (dedup, serving-scale workloads) hold a
@@ -36,8 +43,11 @@ this package; long-lived consumers (dedup, serving-scale workloads) hold a
 traffic goes through a ``MatchService``.
 """
 
+from .calibrate import (CalibrationTable, autotune, bench_provenance,
+                        load_cost_source)
 from .corpus import PackedCorpus
 from .engine import CompiledMatch, MatchEngine, MatchResult
+from .feedback import EwmaRatio, FeedbackStore, kernel_key
 from .index import CorpusIndex, FilterOperands, build_query_filter
 from .planner import BatchPlan, FilterContext, Plan, Planner
 from .query import MatchQuery, as_query
@@ -48,4 +58,6 @@ __all__ = ["PackedCorpus", "Planner", "Plan", "BatchPlan", "FilterContext",
            "MatchQuery", "as_query", "CompiledMatch", "MatchEngine",
            "MatchResult", "MatchService", "MatchTicket", "IngestTicket",
            "ServiceStats", "CorpusIndex", "FilterOperands",
-           "build_query_filter"]
+           "build_query_filter", "CalibrationTable", "autotune",
+           "bench_provenance", "load_cost_source", "EwmaRatio",
+           "FeedbackStore", "kernel_key"]

@@ -41,6 +41,7 @@ the host merges scores) and of Jun et al.'s multi-engine fan-out.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import List, Optional, Tuple, Union
 
@@ -50,6 +51,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import encoding
+from repro.core.tech import CostSource
 from repro.distributed import sharding as _sharding
 from repro.kernels import filter_qgram as _fq
 from repro.kernels import match_mxu as _mxu
@@ -57,9 +59,10 @@ from repro.kernels import match_swar as _swar
 from repro.kernels import ref as _kref
 
 from .corpus import PackedCorpus
+from .feedback import kernel_key
 from . import index as _ix
 from .index import CorpusIndex, FilterOperands, build_query_filter
-from .planner import FilterContext, Plan, Planner
+from .planner import FilterContext, Plan, Planner, kernel_name
 from .query import _UNSET, MatchQuery, as_query
 
 
@@ -191,7 +194,7 @@ class CompiledMatch:
     __slots__ = ("engine", "query", "plan", "_packed", "_pats2d", "_sel",
                  "_idx", "_pad_idx", "_idx_stride", "_k_eff", "_k_vec",
                  "_thr_vec", "_empty", "_mode", "_lowered", "_filter_ops",
-                 "_filter_dev")
+                 "_filter_dev", "_fb_version")
 
     def __init__(self, engine: "MatchEngine", query: MatchQuery):
         self.engine = engine
@@ -207,6 +210,7 @@ class CompiledMatch:
         self._filter_ops: Optional[FilterOperands] = None
         self._filter_dev = None
         self._lowered = False
+        self._fb_version = engine.planner.feedback.version
         if self._empty:
             # A legal query whose answer is no rows; geometry is still
             # validated (pattern longer than fragment, empty pattern).
@@ -256,6 +260,7 @@ class CompiledMatch:
             query, self._mode, ops=self._filter_ops)
         self.plan = engine._plan_query(query, n_rows, mode=self._mode,
                                        filter_ctx=ctx)
+        self._fb_version = engine.planner.feedback.version
         plan = self.plan
 
         # Per-query reduction parameters (batched runs only).
@@ -321,6 +326,7 @@ class CompiledMatch:
             self.query, self._mode, ops=self._filter_ops)
         new_plan = self.engine._plan_query(self.query, n_rows,
                                            mode=self._mode, filter_ctx=ctx)
+        self._fb_version = self.engine.planner.feedback.version
         if new_plan.backend != self.plan.backend:
             self._lower(n_rows)
         else:
@@ -365,10 +371,17 @@ class CompiledMatch:
             R_pad = engine.corpus.n_rows_padded
             if not self._lowered:
                 self._lower(R)
-            elif self.plan.n_rows != R:
+            elif (self.plan.n_rows != R
+                  or engine.planner.feedback.version != self._fb_version):
+                # Row count moved *or* the feedback store re-priced some
+                # bucket since this program was planned: either can flip
+                # the kernel or strategy choice, so re-plan (a backend
+                # flip re-packs only the tiny pattern operands).
                 self._revalidate(R)
             if self.plan.strategy == "filter":
+                t0 = time.perf_counter()
                 flags = engine._run_filter(self, R)
+                t_fil = time.perf_counter() - t0
                 sel = np.flatnonzero(flags).astype(np.int64)
                 survivor_frac = len(sel) / R
                 ops = self._filter_ops
@@ -376,6 +389,13 @@ class CompiledMatch:
                     engine.index.estimate_survivor_frac(
                         ops.n_bits, ops.slacks, calibrated=False),
                     survivor_frac)
+                if engine.record_runtimes:
+                    p0 = self.plan
+                    r_sh = -(-p0.n_rows // p0.n_shards)
+                    engine.planner.feedback.observe(
+                        kernel_key("filter", r_sh, p0.filter_words,
+                                   ops.qsig_words.shape[0]),
+                        p0.est_filter_base_seconds, t_fil)
                 if len(sel) == 0:
                     res = engine._empty_result(query, self.plan)
                     res.survivor_rows = sel
@@ -411,6 +431,7 @@ class CompiledMatch:
         n_chunks = 0
         thr_vec = self._thr_vec
 
+        t_scan0 = time.perf_counter()
         for c0 in range(0, R_pad, step):
             c1 = min(c0 + step, R_pad)
             valid = min(c1, R) - c0       # rows in this chunk that are real
@@ -490,6 +511,22 @@ class CompiledMatch:
                     run_scores = top_s
                     run_rows = cat_r[top_i]
 
+        if engine.record_runtimes and n_chunks:
+            # Observed scan/verify-stage wall time vs. the feedback-free
+            # estimate at the *actual* rows scanned (for a filtered run the
+            # plan priced estimated survivors; recomputing at the measured
+            # count keeps selectivity error out of the kernel-cost EWMA --
+            # selectivity has its own feedback in CorpusIndex).  The ref
+            # backend is priced at total rows, kernels per shard.
+            r_price = R if plan.backend == "ref" else -(-R // plan.n_shards)
+            base = engine.planner.backend_seconds(
+                plan.backend, r_price, plan.n_locs, plan.pattern_chars,
+                plan.n_patterns, plan.predicate, base=True)
+            engine.planner.feedback.observe(
+                kernel_key(kernel_name(plan.backend, plan.predicate),
+                           r_price, plan.pattern_chars, plan.n_patterns),
+                base, time.perf_counter() - t_scan0)
+
         if reduction == "full":
             all_scores = np.concatenate(full, 0)
             return MatchResult(plan=plan, best_locs=all_scores.argmax(1),
@@ -528,6 +565,8 @@ class MatchEngine:
 
     def __init__(self, corpus: Union[PackedCorpus, np.ndarray], *,
                  planner: Optional[Planner] = None,
+                 cost_source: Optional[CostSource] = None,
+                 record_runtimes: Optional[bool] = None,
                  interpret: Optional[bool] = None,
                  mesh: Optional[Mesh] = None, rules=None,
                  compile_cache_size: int = 128,
@@ -572,7 +611,20 @@ class MatchEngine:
             self._row_axes if self._row_axes is None or
             len(self._row_axes) > 1 else self._row_axes[0],
             self._row_shards)
-        self.planner = planner or Planner()
+        if planner is None:
+            planner = Planner(cost_source=cost_source)
+        elif cost_source is not None:
+            planner.cost_source = cost_source
+        self.planner = planner
+        # Runtime feedback (DESIGN.md Sec. 3i): record observed per-launch
+        # wall times into the planner's FeedbackStore so drifted (kernel,
+        # shape-bucket) estimates get re-priced online.  Default: on when
+        # the source is calibrated (feedback is the serving half of that
+        # discipline), off for the static fallback -- whose decisions are
+        # a deterministic baseline that must not drift mid-session.
+        if record_runtimes is None:
+            record_runtimes = self.planner.cost_source.name != "static"
+        self.record_runtimes = bool(record_runtimes)
         self.interpret = default_interpret() if interpret is None else interpret
         self.compile_cache_size = int(compile_cache_size)
         self._compiled: "OrderedDict[MatchQuery, CompiledMatch]" = \
@@ -604,7 +656,8 @@ class MatchEngine:
         return (f"MatchEngine(rows={c.n_rows}, capacity={c.capacity}, "
                 f"shards={self._row_shards}"
                 + (f" over {axes}" if axes else "")
-                + f", interpret={self.interpret})")
+                + f", interpret={self.interpret}"
+                + f", cost={self.planner.cost_source.tag})")
 
     @property
     def n_shards(self) -> int:

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.distributed import sharding as _sharding
 from repro.kernels import filter_qgram as _fq
+from repro.match.feedback import EwmaRatio
 
 # Host signature packing proceeds in bounded row chunks: pack_bit_rows
 # materializes an (n, n_bits) occupancy matrix, which at 1M rows x 256
@@ -227,7 +228,9 @@ class CorpusIndex:
         # Selectivity feedback: EWMA of measured/predicted survivor-
         # fraction ratios from executed filtered queries (the planner's
         # calibration term), plus plain counters for stats surfaces.
-        self._calibration: Optional[float] = None
+        # The shared EwmaRatio idiom (repro.match.feedback) with the
+        # historically tight one-decade clamp -- see record_selectivity.
+        self._selectivity = EwmaRatio(decay=0.3, clamp=(0.1, 10.0))
         self.n_filter_runs = 0
         self.last_survivor_frac: Optional[float] = None
         corpus.attach_index(self)
@@ -351,6 +354,11 @@ class CorpusIndex:
             total *= self._calibration
         return float(min(1.0, total))
 
+    @property
+    def _calibration(self) -> Optional[float]:
+        """Measured-selectivity EWMA value (None until the first run)."""
+        return self._selectivity.value
+
     def record_selectivity(self, predicted: float, measured: float) -> None:
         """Fold one filtered run's outcome into the calibration EWMA.
 
@@ -367,10 +375,7 @@ class CorpusIndex:
         the calibration a long way therefore requires *consistent*
         evidence across runs, each of which still took the filter path.
         """
-        ratio = measured / max(predicted, 1e-9)
-        ratio = min(max(ratio, 0.1), 10.0)
-        prev = 1.0 if self._calibration is None else self._calibration
-        self._calibration = 0.7 * prev + 0.3 * ratio
+        self._selectivity.update(measured / max(predicted, 1e-9))
         self.n_filter_runs += 1
         self.last_survivor_frac = measured
 

@@ -1,14 +1,24 @@
 """Query planner: workload shape -> kernel + geometry (DESIGN.md Sec. 3b).
 
 Replaces the caller-supplied backend string of the old ``ops.match_scores``
-with a selection driven by the same roofline arithmetic the benchmarks use
-(``benchmarks/kernel_bench`` / ``benchmarks/roofline``): estimate each
-kernel's compute and memory terms against the ``core.tech.TPU_V5E``
-constants, take ``max`` per kernel, pick the minimum.  Structural
-constraints are applied first (the MXU formulation has no per-row-pattern
-path; a batched query on the SWAR kernel re-reads the corpus per pattern,
-where the MXU amortizes the reference read across patterns), and an
-explicit ``backend=`` override always wins.
+with a selection driven by roofline arithmetic: estimate each kernel's
+compute and memory terms, take ``max`` per kernel, pick the minimum.
+Structural constraints are applied first (the MXU formulation has no
+per-row-pattern path; a batched query on the SWAR kernel re-reads the
+corpus per pattern, where the MXU amortizes the reference read across
+patterns), and an explicit ``backend=`` override always wins.
+
+Pricing is layered (DESIGN.md Sec. 3i).  The *analytic* layer
+(``analytic_*_seconds`` module functions) turns a shape into roofline
+seconds against ``TPURoofline`` constants -- pure arithmetic, no
+overheads.  The active ``CostSource`` turns analytic seconds into wall
+seconds: the static datasheet model (``TPU_V5E`` constants plus a fixed
+dispatch overhead -- the uncalibrated fallback) or measured per-kernel
+curves fitted by ``repro.match.calibrate``.  A ``FeedbackStore`` of
+observed/estimated runtime ratios then re-prices any (kernel,
+shape-bucket) whose estimates have drifted past a bound.  Every ``Plan``
+records which source priced it (``Plan.cost_source``, also tagged into
+``Plan.reason``).
 
 The ``Plan`` carries every derived geometry number (word counts, tile
 paddings, chunking) so the executor never re-derives layout -- one source
@@ -21,18 +31,20 @@ import dataclasses
 import math
 from typing import Optional
 
-from repro.core.tech import TPU_V5E, TPURoofline
+from repro.core.tech import (DISPATCH_OVERHEAD_S, REF_CALL_OVERHEAD_S,
+                             TPU_V5E, CostSource, StaticCostSource,
+                             TPURoofline)
 from repro.kernels import match_mxu as _mxu
 from repro.kernels import match_swar as _swar
+from repro.match.feedback import FeedbackStore, kernel_key
 
 BACKENDS = ("swar", "mxu", "ref")
 
-# Per-kernel-dispatch overhead (host launch + program switch); calibrated
-# order-of-magnitude.  Every fused plan pays it once; Q sequential
-# single-query launches (plan_batch's alternative) pay it Q times.
-DISPATCH_OVERHEAD_S = 5e-6
 # Below this many (row, loc, patchar, query) ops the Pallas launch
-# dominates and the plain jnp reference is fastest.
+# dominates and the plain jnp reference is fastest.  This structural
+# escape hatch encodes the *static* model's launch-overhead belief; a
+# calibrated source has measured per-kernel intercepts, so under it the
+# tiny-shape decision is a genuine three-way price comparison instead.
 TINY_OPS = 4096
 # SWAR integer ops per (row, loc, word): shift/or/xor/and + popcount tree.
 SWAR_OPS_PER_WORD = 12
@@ -46,10 +58,68 @@ VPU_SLOWDOWN = 64
 # Host jnp reference throughput + per-call overhead: only has to rank the
 # ref backend sanely against the kernels when pricing batches.
 REF_OPS_PER_S = 1e9
-REF_CALL_OVERHEAD_S = 5e-5
 # Q-gram filter stage (filter_qgram kernel): and/not + full SWAR popcount
 # + compare per signature word.
 FILTER_OPS_PER_WORD = 18
+
+
+def kernel_name(backend: str, predicate: str = "exact") -> str:
+    """Cost-model kernel identifier for a (backend, predicate) pair.
+
+    The accept-set SWAR variant is a different kernel with a different
+    cost curve (bit-plane operands, ~2.5x the integer ops), so it
+    calibrates and feeds back separately from exact-match SWAR.
+    """
+    if backend == "swar" and predicate == "accept":
+        return "swar_masks"
+    return backend
+
+
+# -- analytic layer: shape -> roofline seconds, no overheads ------------------
+
+def analytic_swar_seconds(roofline: TPURoofline, R: int, L: int, P: int,
+                          Q: int = 1, predicate: str = "exact") -> float:
+    """Roofline seconds for one fused SWAR dispatch over Q pattern sets."""
+    wp, need = _swar_geometry(P, L)
+    if predicate == "accept":
+        ops_per_word, pat_words = SWAR_OPS_PER_WORD_MASKS, 4 * wp
+    else:
+        ops_per_word, pat_words = SWAR_OPS_PER_WORD, wp
+    ops = Q * R * L * wp * ops_per_word
+    bytes_hbm = Q * (R * need * 4 + R * pat_words * 4 + R * L * 4)
+    t_compute = ops / (roofline.peak_bf16_flops / VPU_SLOWDOWN)
+    t_mem = bytes_hbm / roofline.hbm_bw
+    return max(t_compute, t_mem)
+
+
+def analytic_mxu_seconds(roofline: TPURoofline, R: int, L: int, P: int,
+                         Q: int = 1) -> float:
+    """Roofline seconds for one batched MXU pass over all Q patterns."""
+    l_pad, p_chars, q_pad, f_chars = _mxu_geometry(P, L, Q)
+    n_chunks = p_chars // _mxu.CHARS_PER_CHUNK
+    flops = R * l_pad * (n_chunks * _mxu.K_CHUNK) * 2 * q_pad
+    bytes_hbm = (R * f_chars * 4 * 2 + p_chars * 4 * q_pad * 2
+                 + R * l_pad * q_pad * 4)
+    t_compute = flops / roofline.peak_bf16_flops
+    t_mem = bytes_hbm / roofline.hbm_bw
+    return max(t_compute, t_mem)
+
+
+def analytic_ref_seconds(roofline: TPURoofline, R: int, L: int, P: int,
+                         Q: int = 1) -> float:
+    """Host jnp reference compute for Q passes (overhead priced per call)."""
+    del roofline  # host path: independent of the accelerator target
+    return Q * R * L * P / REF_OPS_PER_S
+
+
+def analytic_filter_seconds(roofline: TPURoofline, R: int, sig_words: int,
+                            n_queries: int = 1) -> float:
+    """Roofline seconds for Q filter-kernel dispatches over R signatures."""
+    ops = n_queries * R * sig_words * FILTER_OPS_PER_WORD
+    bytes_hbm = n_queries * (R * sig_words * 4 + R * 4)
+    t_compute = ops / (roofline.peak_bf16_flops / VPU_SLOWDOWN)
+    t_mem = bytes_hbm / roofline.hbm_bw
+    return max(t_compute, t_mem)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +155,15 @@ class Plan:
     # per-shard row count (shards run concurrently; the critical path is
     # one shard's work plus the small host merge).
     n_shards: int = 1
+    # Cost provenance (DESIGN.md Sec. 3i): which source priced this plan
+    # ("static" | "calibrated:<digest8>"), the feedback-free estimate of
+    # the scan/verify stage (what observed runtimes are recorded against
+    # -- see feedback.FeedbackStore), and the filter stage's share of
+    # est_seconds when strategy == "filter".
+    cost_source: str = "static"
+    est_base_seconds: float = 0.0
+    est_filter_seconds: float = 0.0
+    est_filter_base_seconds: float = 0.0
 
 
 def _swar_geometry(P: int, L: int) -> tuple[int, int]:
@@ -136,16 +215,44 @@ class BatchPlan:
 
 
 class Planner:
-    """Roofline-based kernel selection against a TPU target."""
+    """Kernel selection: analytic roofline x cost source x runtime feedback.
+
+    ``cost_source`` prices analytic seconds into wall seconds (static
+    datasheet fallback, or measured calibration from
+    ``repro.match.calibrate.load_cost_source``).  ``feedback`` multiplies
+    in the published observed/estimated factor for the (kernel,
+    shape-bucket), so mispredicted buckets heal online; pass
+    ``feedback=None`` semantics via a fresh store -- every planner owns
+    one unless the caller shares theirs (the engine shares its store so
+    compiled plans and ad-hoc queries see the same corrections).
+    """
 
     def __init__(self, roofline: TPURoofline = TPU_V5E,
-                 memory_budget_bytes: float = 256 * 2**20):
+                 memory_budget_bytes: float = 256 * 2**20,
+                 cost_source: Optional[CostSource] = None,
+                 feedback: Optional[FeedbackStore] = None):
         self.roofline = roofline
         self.memory_budget_bytes = memory_budget_bytes
+        self.cost_source = cost_source or StaticCostSource()
+        self.feedback = feedback if feedback is not None else FeedbackStore()
 
     # -- cost terms -----------------------------------------------------------
+    def _price(self, kernel: str, analytic_s: float, n_dispatch: int,
+               R: int, x: int, Q: int, base: bool) -> float:
+        """Analytic seconds -> wall seconds via source, then feedback.
+
+        ``base=True`` skips the feedback factor: that is the estimate
+        observed runtimes are recorded against, so the EWMA converges to
+        truth/model rather than chasing its own corrections (the
+        geometric-mean trap -- see ``feedback`` module docstring).
+        """
+        priced = self.cost_source.price(kernel, analytic_s, n_dispatch)
+        if base:
+            return priced
+        return priced * self.feedback.factor(kernel_key(kernel, R, x, Q))
+
     def swar_seconds(self, R: int, L: int, P: int, Q: int = 1,
-                     predicate: str = "exact") -> float:
+                     predicate: str = "exact", *, base: bool = False) -> float:
         """One fused SWAR dispatch over Q pattern sets.
 
         The executor tiles the corpus chunk Q times and rides each pattern
@@ -156,23 +263,18 @@ class Planner:
         (four lane-equality tests per word) and read 4 plane words per
         pattern word -- the MXU, where wildcards are free, wins sooner.
         """
-        wp, need = _swar_geometry(P, L)
-        if predicate == "accept":
-            ops_per_word, pat_words = SWAR_OPS_PER_WORD_MASKS, 4 * wp
-        else:
-            ops_per_word, pat_words = SWAR_OPS_PER_WORD, wp
-        ops = Q * R * L * wp * ops_per_word
-        bytes_hbm = Q * (R * need * 4 + R * pat_words * 4 + R * L * 4)
-        t_compute = ops / (self.roofline.peak_bf16_flops / VPU_SLOWDOWN)
-        t_mem = bytes_hbm / self.roofline.hbm_bw
-        return max(t_compute, t_mem) + DISPATCH_OVERHEAD_S
+        analytic = analytic_swar_seconds(self.roofline, R, L, P, Q, predicate)
+        return self._price(kernel_name("swar", predicate), analytic, 1,
+                           R, P, Q, base)
 
-    def ref_seconds(self, R: int, L: int, P: int, Q: int = 1) -> float:
+    def ref_seconds(self, R: int, L: int, P: int, Q: int = 1,
+                    *, base: bool = False) -> float:
         """Q jnp reference passes on the host (batched ref still loops Q)."""
-        return Q * (R * L * P / REF_OPS_PER_S + REF_CALL_OVERHEAD_S)
+        analytic = analytic_ref_seconds(self.roofline, R, L, P, Q)
+        return self._price("ref", analytic, Q, R, P, Q, base)
 
-    def filter_seconds(self, R: int, sig_words: int,
-                       n_queries: int = 1) -> float:
+    def filter_seconds(self, R: int, sig_words: int, n_queries: int = 1,
+                       *, base: bool = False) -> float:
         """Q filter-kernel dispatches over R row signatures.
 
         Each dispatch reads ``sig_words`` uint32 per row plus the query
@@ -180,13 +282,13 @@ class Planner:
         writes one flag per row -- orders of magnitude less data touched
         than the exact scan, which is the whole point of the stage.
         """
-        ops = n_queries * R * sig_words * FILTER_OPS_PER_WORD
-        bytes_hbm = n_queries * (R * sig_words * 4 + R * 4)
-        t_compute = ops / (self.roofline.peak_bf16_flops / VPU_SLOWDOWN)
-        t_mem = bytes_hbm / self.roofline.hbm_bw
-        return max(t_compute, t_mem) + n_queries * DISPATCH_OVERHEAD_S
+        analytic = analytic_filter_seconds(self.roofline, R, sig_words,
+                                           n_queries)
+        return self._price("filter", analytic, n_queries,
+                           R, sig_words, n_queries, base)
 
-    def mxu_seconds(self, R: int, L: int, P: int, Q: int = 1) -> float:
+    def mxu_seconds(self, R: int, L: int, P: int, Q: int = 1,
+                    *, base: bool = False) -> float:
         """One batched MXU pass over all Q patterns.
 
         Identical for exact and accept-set predicates: a wildcard is just a
@@ -194,14 +296,18 @@ class Planner:
         the "wildcards are nearly free on the MXU" property the planner
         exploits.
         """
-        l_pad, p_chars, q_pad, f_chars = _mxu_geometry(P, L, Q)
-        n_chunks = p_chars // _mxu.CHARS_PER_CHUNK
-        flops = R * l_pad * (n_chunks * _mxu.K_CHUNK) * 2 * q_pad
-        bytes_hbm = (R * f_chars * 4 * 2 + p_chars * 4 * q_pad * 2
-                     + R * l_pad * q_pad * 4)
-        t_compute = flops / self.roofline.peak_bf16_flops
-        t_mem = bytes_hbm / self.roofline.hbm_bw
-        return max(t_compute, t_mem) + DISPATCH_OVERHEAD_S
+        analytic = analytic_mxu_seconds(self.roofline, R, L, P, Q)
+        return self._price("mxu", analytic, 1, R, P, Q, base)
+
+    def backend_seconds(self, backend: str, R: int, L: int, P: int,
+                        Q: int = 1, predicate: str = "exact",
+                        *, base: bool = False) -> float:
+        """Price any scan backend by name (the verify-stage dispatcher)."""
+        if backend == "swar":
+            return self.swar_seconds(R, L, P, Q, predicate, base=base)
+        if backend == "mxu":
+            return self.mxu_seconds(R, L, P, Q, base=base)
+        return self.ref_seconds(R, L, P, Q, base=base)
 
     # -- chunking -------------------------------------------------------------
     def _chunk_rows(self, R_pad: int, plan_bytes_per_row: int,
@@ -263,11 +369,29 @@ class Planner:
             chosen, reason = backend, "explicit override"
         elif per_row:
             chosen, reason = "swar", "per-row patterns: SWAR only"
-        elif R * L * P * Q <= TINY_OPS:
+        elif (self.cost_source.name == "static"
+              and R * L * P * Q <= TINY_OPS):
             # Q multiplies the work: a large batched query on a small corpus
             # is not tiny, and routing it to the Python-loop ref backend
-            # would cost Q sequential passes.
+            # would cost Q sequential passes.  This structural rule encodes
+            # the static model's launch-overhead belief; a calibrated
+            # source has measured per-kernel intercepts, so tiny shapes
+            # fall through to the three-way price comparison below.
             chosen, reason = "ref", "tiny workload: launch overhead dominates"
+        elif self.cost_source.name != "static":
+            # Calibrated: genuine three-way comparison.  The measured
+            # intercepts decide the tiny-shape regime (on a host-heavy
+            # substrate the jnp reference's per-call overhead can exceed
+            # an interpret-mode Pallas launch by orders of magnitude --
+            # exactly the kind of fact only calibration can know).
+            t_ref = self.ref_seconds(R, L, P, Q)
+            chosen, t_best = "swar", t_swar
+            if t_mxu < t_best:
+                chosen, t_best = "mxu", t_mxu
+            if t_ref < t_best:
+                chosen, t_best = "ref", t_ref
+            reason = (f"measured: {chosen} {t_best:.3g}s (swar {t_swar:.3g}s,"
+                      f" mxu {t_mxu:.3g}s, ref {t_ref:.3g}s, Q={Q})")
         elif t_mxu < t_swar:
             chosen = "mxu"
             reason = f"roofline: mxu {t_mxu:.3g}s < swar {t_swar:.3g}s (Q={Q})"
@@ -288,14 +412,18 @@ class Planner:
             bytes_per_row = (need * 4 + pat_words * 4 + L * 4) * Q
             row_tile = _swar.ROW_TILE
             est = t_swar
+            est_base = self.swar_seconds(R_shard, L, P, Q, predicate,
+                                         base=True)
         elif chosen == "mxu":
             bytes_per_row = f_chars * 4 * 2 + l_pad * q_pad * 4
             row_tile = 1
             est = t_mxu
+            est_base = self.mxu_seconds(R_shard, L, P, Q, base=True)
         else:
             bytes_per_row = F + L * 4 * Q
             row_tile = 1
             est = self.ref_seconds(R, L, P, Q)
+            est_base = self.ref_seconds(R, L, P, Q, base=True)
         chunk = self._chunk_rows(R_pad, bytes_per_row,
                                  row_tile if chosen == "ref" else
                                  row_tile * S, chunk_rows, n_shards=S)
@@ -308,6 +436,7 @@ class Planner:
         # calibration.  A query-level filter=True hint skips the pricing
         # (but never the prunability requirement).
         strategy, filter_words, surv = "scan", 0, 1.0
+        est_fil = est_fil_base = 0.0
         if filter_ctx is not None and filter_ctx.prunable:
             frac = filter_ctx.survivor_frac
             # Per-shard pricing: the filter kernel scans R/S signatures
@@ -317,12 +446,7 @@ class Planner:
             r_surv = max(1, math.ceil(frac * R / S))
             t_fil = self.filter_seconds(R_shard, filter_ctx.sig_words,
                                         filter_ctx.n_queries)
-            if chosen == "swar":
-                t_ver = self.swar_seconds(r_surv, L, P, Q, predicate)
-            elif chosen == "mxu":
-                t_ver = self.mxu_seconds(r_surv, L, P, Q)
-            else:
-                t_ver = self.ref_seconds(r_surv, L, P, Q)
+            t_ver = self.backend_seconds(chosen, r_surv, L, P, Q, predicate)
             if filter_ctx.force or t_fil + t_ver < est:
                 strategy = "filter"
                 filter_words = filter_ctx.sig_words
@@ -331,16 +455,27 @@ class Planner:
                            f"{'forced' if filter_ctx.force else '<'} scan "
                            f"{est:.3g}s (est survivors {frac:.3g})")
                 est = t_fil + t_ver
+                est_fil = t_fil
+                est_fil_base = self.filter_seconds(
+                    R_shard, filter_ctx.sig_words, filter_ctx.n_queries,
+                    base=True)
+                est_base = self.backend_seconds(chosen, r_surv, L, P, Q,
+                                                predicate, base=True)
 
         if S > 1:
             reason += f"; priced per shard (S={S})"
+        reason += f" [cost={self.cost_source.tag}]"
         return Plan(backend=chosen, mode=mode, n_rows=R, fragment_chars=F,
                     pattern_chars=P, n_patterns=Q, n_locs=L, wp=wp,
                     need_words=need, l_pad=l_pad, p_chars_pad=p_chars,
                     q_pad=q_pad, f_chars=f_chars, chunk_rows=chunk,
                     est_seconds=est, reason=reason, predicate=predicate,
                     strategy=strategy, filter_words=filter_words,
-                    est_survivor_frac=surv, n_shards=S)
+                    est_survivor_frac=surv, n_shards=S,
+                    cost_source=self.cost_source.tag,
+                    est_base_seconds=est_base,
+                    est_filter_seconds=est_fil,
+                    est_filter_base_seconds=est_fil_base)
 
     # -- batch pricing --------------------------------------------------------
     def plan_batch(self, *, n_rows: int, fragment_chars: int,
@@ -368,7 +503,8 @@ class Planner:
             return BatchPlan(coalesced=False, plan=single, n_queries=1,
                              est_coalesced_s=single.est_seconds,
                              est_sequential_s=single.est_seconds,
-                             reason="single query: nothing to coalesce")
+                             reason="single query: nothing to coalesce "
+                                    f"[cost={self.cost_source.tag}]")
         batched = self.plan(n_rows=n_rows, fragment_chars=fragment_chars,
                             pattern_chars=pattern_chars,
                             n_patterns=n_queries, backend=backend,
@@ -384,6 +520,7 @@ class Planner:
         else:
             reason = (f"sequential: {n_queries}x {single.backend} "
                       f"{est_seq:.3g}s < {batched.backend} {est_co:.3g}s")
+        reason += f" [cost={self.cost_source.tag}]"
         return BatchPlan(coalesced=coalesced,
                          plan=batched if coalesced else single,
                          n_queries=n_queries, est_coalesced_s=est_co,

@@ -80,6 +80,12 @@ class ServiceStats:
     total_latency_s: float = 0.0      # running sum (bounded state)
     n_shards: int = 1                 # engine row shards (mesh-resident)
     shard_rows: Optional[List[int]] = None   # live rows per shard
+    # Cost-model provenance (DESIGN.md Sec. 3i): which source prices the
+    # planner's decisions ("static" | "calibrated:<digest8>") and the
+    # runtime-feedback state (observation/misprediction counters, number
+    # of re-priced shape buckets) -- refreshed per tick from the planner.
+    cost_source: str = "static"
+    feedback: Optional[Dict] = None
     _t_first_submit: Optional[float] = None
     _t_last_complete: Optional[float] = None
 
@@ -157,6 +163,10 @@ class ServiceStats:
             "shard_rows": list(self.shard_rows or []),
             "shard_balance": (round(self.shard_balance, 4)
                               if self.shard_rows else 1.0),
+            "cost_source": self.cost_source,
+            "misprediction_rate": (self.feedback or {}).get(
+                "misprediction_rate", 0.0),
+            "feedback": dict(self.feedback or {}),
         }
 
 
@@ -245,6 +255,7 @@ class MatchService:
         self._cache: "OrderedDict[MatchQuery, MatchResult]" = OrderedDict()
         self._cache_generation = engine.corpus.generation
         self._note_shards()
+        self._note_calibration()
 
     # -- submission -----------------------------------------------------------
     def submit(self, patterns, *, reduction=_UNSET, k=_UNSET,
@@ -472,6 +483,17 @@ class MatchService:
         self.stats.shard_rows = [
             int(x) for x in self.engine.shard_live_rows()]
 
+    def _note_calibration(self) -> None:
+        """Refresh cost-model provenance + feedback state from the planner.
+
+        Taken per tick (like the shard stats) so a feedback re-pricing
+        that lands mid-session shows up in the next snapshot, not only at
+        construction time.
+        """
+        planner = self.engine.planner
+        self.stats.cost_source = planner.cost_source.tag
+        self.stats.feedback = planner.feedback.snapshot()
+
     def _apply_ingests(self) -> None:
         """Append all pending ingest rows as one batched in-place write."""
         batch, self._ingest_queue = self._ingest_queue, []
@@ -497,6 +519,7 @@ class MatchService:
         """
         self._apply_ingests()
         self._note_shards()
+        self._note_calibration()
         gen = self.engine.corpus.generation
         if gen != self._cache_generation:
             self._cache.clear()

@@ -1,0 +1,318 @@
+"""Calibrated cost model: fitting, persistence, feedback (DESIGN.md 3i).
+
+No microbenchmarks run here -- tables are built synthetically (curve
+fitting and persistence are pure functions of the samples) so the suite
+stays fast and deterministic.  The measured path is covered by
+``benchmarks/calibrate_bench.py`` and the CI autotune job.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.tech import (DISPATCH_OVERHEAD_S, REF_CALL_OVERHEAD_S,
+                             CalibratedCostSource, KernelCurve,
+                             StaticCostSource)
+from repro.match import MatchEngine, MatchQuery
+from repro.match.calibrate import (GOLDEN_SHAPES, TABLE_VERSION,
+                                   CalibrationTable, bench_provenance,
+                                   fit_curve, golden_decisions,
+                                   load_cost_source, quantize_q2,
+                                   table_filename)
+from repro.match.feedback import (EwmaRatio, FeedbackStore, kernel_key,
+                                  octave)
+from repro.match.planner import Planner
+
+
+def make_table(alphas=None) -> CalibrationTable:
+    """Synthetic table with interpret-mode-like overhead factors."""
+    alphas = alphas or {"swar": 256.0, "swar_masks": 181.0, "mxu": 4096.0,
+                        "ref": 2.83, "filter": 16.0}
+    curves = {k: KernelCurve(alpha=a, beta=1e-5, n_samples=4, rel_err=0.1)
+              for k, a in alphas.items()}
+    return CalibrationTable(device_kind="cpu", backend="cpu",
+                            interpret=True, curves=curves)
+
+
+# -- fitting ------------------------------------------------------------------
+
+class TestFit:
+    def test_recovers_linear_data_within_quantization(self):
+        x = np.array([1e-6, 1e-5, 1e-4, 1e-3])
+        y = 37.0 * x + 2e-5
+        c = fit_curve(x, y)
+        assert c.alpha == pytest.approx(37.0, rel=0.10)
+        assert c.beta == pytest.approx(2e-5, rel=0.10)
+        assert c.n_samples == 4
+
+    def test_negative_intercept_clamps_to_origin(self):
+        x = np.array([1e-4, 1e-3, 1e-2])
+        y = 10.0 * x - 5e-5          # noise made the intercept negative
+        c = fit_curve(x, y)
+        assert c.beta == 0.0
+        assert c.alpha > 0.0
+
+    def test_positivity_makes_curve_monotone(self):
+        rng = np.random.default_rng(3)
+        x = np.sort(rng.uniform(1e-6, 1e-2, 6))
+        y = 50.0 * x * rng.uniform(0.5, 2.0, 6)   # very noisy
+        c = fit_curve(x, y)
+        assert c.alpha > 0.0 and c.beta >= 0.0
+        grid = np.linspace(1e-7, 1e-1, 32)
+        priced = [c.seconds(a) for a in grid]
+        assert all(b >= a for a, b in zip(priced, priced[1:]))
+
+    def test_single_sample_median_fallback(self):
+        c = fit_curve([1e-4], [3e-3])
+        assert c.alpha == pytest.approx(30.0, rel=0.10)
+        assert c.beta == 0.0
+
+    def test_zero_samples_raises(self):
+        with pytest.raises(ValueError):
+            fit_curve([], [])
+
+    def test_quantize_quarter_octave(self):
+        assert quantize_q2(0.0) == 0.0
+        for v in (3e-5, 1.0, 37.0, 4096.0):
+            q = quantize_q2(v)
+            assert q == pytest.approx(v, rel=0.10)
+            assert quantize_q2(q) == q            # idempotent
+        # Values within ~4% land in the same bin (noise immunity).
+        assert quantize_q2(100.0) == quantize_q2(103.0)
+
+
+# -- cost sources -------------------------------------------------------------
+
+class TestCostSources:
+    def test_static_pricing_matches_legacy_constants(self):
+        s = StaticCostSource()
+        assert s.price("swar", 1e-4, 3) == pytest.approx(
+            1e-4 + 3 * DISPATCH_OVERHEAD_S)
+        assert s.price("ref", 1e-4, 1) == pytest.approx(
+            1e-4 + REF_CALL_OVERHEAD_S)
+        assert s.tag == "static"
+
+    def test_calibrated_unknown_kernel_falls_back_to_static(self):
+        src = CalibratedCostSource({"swar": KernelCurve(10.0, 1e-6)},
+                                   digest="ab" * 16)
+        assert src.price("swar", 1e-4) == pytest.approx(1e-3 + 1e-6)
+        assert src.price("mxu", 1e-4) == pytest.approx(
+            StaticCostSource().price("mxu", 1e-4))
+        assert src.tag == "calibrated:abababab"
+
+
+# -- persistence --------------------------------------------------------------
+
+class TestPersistence:
+    def test_roundtrip_identical_decisions_on_golden_matrix(self, tmp_path):
+        table = make_table()
+        path = table.save(tmp_path)
+        assert path.name == table_filename("cpu", "cpu", True)
+        loaded = CalibrationTable.load("cpu", "cpu", True, tmp_path)
+        assert loaded.digest == table.digest
+        assert golden_decisions(loaded.cost_source()) == \
+            golden_decisions(table.cost_source())
+
+    def test_load_cost_source_missing_table_is_none(self, tmp_path):
+        assert load_cost_source("cpu", "cpu", True, tmp_path) is None
+
+    def test_load_cost_source_corrupt_json_is_none(self, tmp_path):
+        p = tmp_path / table_filename("cpu", "cpu", True)
+        p.write_text("{not json")
+        assert load_cost_source("cpu", "cpu", True, tmp_path) is None
+
+    def test_tampered_digest_rejected(self, tmp_path):
+        table = make_table()
+        p = table.save(tmp_path)
+        doc = json.loads(p.read_text())
+        doc["curves"]["swar"]["alpha"] *= 2      # edit without re-digesting
+        p.write_text(json.dumps(doc))
+        with pytest.raises(ValueError, match="digest"):
+            CalibrationTable.load("cpu", "cpu", True, tmp_path)
+        assert load_cost_source("cpu", "cpu", True, tmp_path) is None
+
+    def test_version_mismatch_rejected(self):
+        doc = make_table().to_json()
+        doc["version"] = TABLE_VERSION + 1
+        with pytest.raises(ValueError, match="version"):
+            CalibrationTable.from_json(doc)
+
+    def test_digest_tracks_decision_relevant_fields_only(self):
+        a, b = make_table(), make_table()
+        b.samples = {"swar": [{"R": 1}]}
+        b.meta = {"grid": "different"}
+        assert a.digest == b.digest
+        c = make_table({"swar": 999.0, "swar_masks": 181.0, "mxu": 4096.0,
+                        "ref": 2.83, "filter": 16.0})
+        assert c.digest != a.digest
+
+    def test_bench_provenance_shape(self):
+        prov = bench_provenance()
+        assert set(prov) == {"device_kind", "backend", "calibration"}
+        assert prov["calibration"] == "static"
+        tagged = bench_provenance(make_table().cost_source())
+        assert tagged["calibration"].startswith("calibrated:")
+
+
+# -- planner integration ------------------------------------------------------
+
+class TestPlannerIntegration:
+    def test_plans_carry_cost_source_tag(self):
+        p = Planner()
+        plan = p.plan(n_rows=1024, fragment_chars=256, pattern_chars=32)
+        assert plan.cost_source == "static"
+        assert "[cost=static]" in plan.reason
+
+        src = make_table().cost_source()
+        pc = Planner(cost_source=src)
+        plan_c = pc.plan(n_rows=1024, fragment_chars=256, pattern_chars=32)
+        assert plan_c.cost_source == src.tag
+        assert f"[cost={src.tag}]" in plan_c.reason
+        assert plan_c.reason.startswith("measured:")
+
+    def test_tiny_escape_is_static_only(self):
+        # Static keeps the TINY_OPS ref escape; a calibrated source does a
+        # genuine three-way comparison and (with interpret-mode ref
+        # overhead) picks the kernel instead.
+        shape = dict(n_rows=2, fragment_chars=20, pattern_chars=8)
+        assert Planner().plan(**shape).backend == "ref"
+        src = make_table().cost_source()
+        assert Planner(cost_source=src).plan(**shape).backend == "swar"
+
+    def test_engine_repr_shows_cost_tag(self):
+        eng = MatchEngine(np.zeros((4, 32), np.uint8))
+        assert "cost=static" in repr(eng)
+        src = make_table().cost_source()
+        eng_c = MatchEngine(np.zeros((4, 32), np.uint8), cost_source=src)
+        assert f"cost={src.tag}" in repr(eng_c)
+        # record_runtimes defaults on for calibrated, off for static.
+        assert eng_c.record_runtimes and not eng.record_runtimes
+
+    def test_golden_decisions_cover_all_shapes(self):
+        dec = golden_decisions(StaticCostSource())
+        assert len(dec) == len(GOLDEN_SHAPES)
+        assert all(b in ("swar", "mxu", "ref") for _, b in dec)
+
+
+# -- feedback store -----------------------------------------------------------
+
+class TestFeedback:
+    KEY = kernel_key("swar", 1024, 32, 1)
+
+    def test_octave_bucketing(self):
+        assert octave(0) == 0 and octave(1) == 0
+        assert octave(1024) == 10 and octave(2047) == 10
+        assert kernel_key("swar", 1024, 32, 1) == \
+            kernel_key("swar", 2000, 60, 1)
+        assert kernel_key("swar", 1024, 32, 1) != \
+            kernel_key("mxu", 1024, 32, 1)
+
+    def test_warmup_observation_discarded(self):
+        fb = FeedbackStore()
+        fb.observe(self.KEY, 1e-3, 1.0)          # compile-paying outlier
+        assert fb.n_observations == 0
+        assert fb.factor(self.KEY) == 1.0
+
+    def test_min_samples_gates_repricing(self):
+        fb = FeedbackStore(min_samples=3)
+        for _ in range(3):                       # warmup + 2 observations
+            fb.observe(self.KEY, 1e-3, 1e-1)
+        assert fb.factor(self.KEY) == 1.0
+        fb.observe(self.KEY, 1e-3, 1e-1)         # third post-warmup
+        assert fb.factor(self.KEY) == pytest.approx(100.0, rel=0.2)
+        assert fb.version >= 1
+        assert self.KEY in fb.repriced()
+
+    def test_within_bound_keeps_model_price(self):
+        fb = FeedbackStore(drift_bound=2.0)
+        for _ in range(6):
+            fb.observe(self.KEY, 1e-3, 1.5e-3)   # 1.5x: inside the bound
+        assert fb.factor(self.KEY) == 1.0
+        assert fb.misprediction_rate == 0.0
+        assert fb.version == 0
+
+    def test_misprediction_counting_and_snapshot(self):
+        fb = FeedbackStore()
+        for _ in range(4):
+            fb.observe(self.KEY, 1e-3, 5e-3)     # 5x off: mispredictions
+        snap = fb.snapshot()
+        assert snap["n_observations"] == 3       # first was warmup
+        assert snap["n_mispredictions"] == 3
+        assert snap["misprediction_rate"] == 1.0
+        assert snap["n_buckets"] == 1
+        assert snap["n_repriced"] == 1
+        assert snap["version"] == fb.version >= 1
+
+    def test_nonpositive_observations_ignored(self):
+        fb = FeedbackStore()
+        fb.observe(self.KEY, 0.0, 1.0)
+        fb.observe(self.KEY, 1.0, 0.0)
+        assert not fb._cells
+
+    def test_ewma_ratio_clamps_single_outliers(self):
+        e = EwmaRatio(decay=0.5, clamp=(0.1, 10.0))
+        assert e.value is None
+        e.update(1e9)                            # clamped to 10
+        assert e.value == pytest.approx(5.5)     # (1 + 10)/2
+
+    def test_planner_applies_published_factor(self):
+        p = Planner()
+        R, L, P = 1024, 225, 32
+        base = p.swar_seconds(R, L, P, base=True)
+        before = p.swar_seconds(R, L, P)
+        key = kernel_key("swar", R, P, 1)
+        for _ in range(5):
+            p.feedback.observe(key, base, base * 50.0)
+        after = p.swar_seconds(R, L, P)
+        assert before == pytest.approx(base)     # static == base pre-drift
+        assert after == pytest.approx(base * 50.0, rel=0.3)
+        # base pricing must stay feedback-free (the anti-geometric-mean
+        # invariant: observations are recorded against it).
+        assert p.swar_seconds(R, L, P, base=True) == pytest.approx(base)
+
+    def test_feedback_repricing_flips_plan(self):
+        # Make the static winner (swar) look 1000x worse than measured;
+        # the next plan must flip to the alternative.
+        p = Planner()
+        shape = dict(n_rows=4096, fragment_chars=256, pattern_chars=32,
+                     n_patterns=64)
+        first = p.plan(**shape)
+        assert first.backend == "swar"
+        base = p.swar_seconds(-(-4096 // first.n_shards), 225, 32, 64,
+                              base=True)
+        key = kernel_key("swar", 4096, 32, 64)
+        for _ in range(5):
+            p.feedback.observe(key, base, base * 1000.0)
+        assert p.plan(**shape).backend == "mxu"
+
+    def test_engine_records_and_reprices(self):
+        rng = np.random.default_rng(0)
+        frags = rng.integers(0, 4, (64, 96), np.uint8)
+        eng = MatchEngine(frags, record_runtimes=True)
+        q = MatchQuery.exact(frags[0, :16].copy(), backend="swar")
+        first_est = eng.compile(q).plan.est_seconds
+        for _ in range(6):
+            eng.match(q)
+        snap = eng.planner.feedback.snapshot()
+        assert snap["n_observations"] >= 4       # warmup discarded
+        # Static pricing in interpret mode is off by orders of magnitude,
+        # so the hot bucket must have been re-priced and the compiled
+        # plan revalidated against the bumped version.
+        assert snap["n_repriced"] >= 1
+        # Freeze the store, then one more run: the compiled plan must
+        # revalidate against the bumped feedback version.
+        eng.record_runtimes = False
+        eng.match(q)
+        cm = eng.compile(q)
+        assert cm._fb_version == eng.planner.feedback.version
+        assert cm.plan.est_seconds > first_est
+
+    def test_static_engine_does_not_record_by_default(self):
+        rng = np.random.default_rng(0)
+        frags = rng.integers(0, 4, (64, 96), np.uint8)
+        eng = MatchEngine(frags)
+        q = MatchQuery.exact(frags[0, :16].copy())
+        for _ in range(3):
+            eng.match(q)
+        assert eng.planner.feedback.snapshot()["n_buckets"] == 0

@@ -1,0 +1,95 @@
+"""Cost-model monotonicity properties (hypothesis-driven; DESIGN.md 3i).
+
+Split out behind ``importorskip`` so a missing ``hypothesis`` install
+skips only this module (repo convention, see
+``test_kernels_properties.py``).
+
+Properties:
+
+* every ``Planner.*_seconds`` estimate is monotone non-decreasing in R,
+  Q, and P (holding L fixed) under BOTH cost sources -- for the static
+  model this is the roofline arithmetic, for a calibrated source it is
+  the positivity clamps on the fitted curve (alpha > 0, beta >= 0), and
+  it must hold for ANY such curve, not just the fitted ones, or a noisy
+  calibration could make the planner prefer *more* work;
+* table persistence round-trips: for ANY positive curve set,
+  save -> load gives the identical digest and identical plan decisions
+  on the golden shape matrix.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.tech import (CalibratedCostSource, KernelCurve,  # noqa: E402
+                             StaticCostSource)
+from repro.match.calibrate import (KERNELS, CalibrationTable,  # noqa: E402
+                                   golden_decisions)
+from repro.match.planner import Planner  # noqa: E402
+
+# Decision-scale alphas/betas: overhead factors from ~ideal (1) to
+# interpret-mode (1e5), intercepts up to 10ms.
+curve_st = st.builds(
+    KernelCurve,
+    alpha=st.floats(1e-2, 1e5, allow_nan=False, allow_infinity=False),
+    beta=st.floats(0.0, 1e-2, allow_nan=False, allow_infinity=False))
+
+curves_st = st.fixed_dictionaries({k: curve_st for k in KERNELS})
+
+source_st = st.one_of(
+    st.just(StaticCostSource()),
+    st.builds(lambda curves: CalibratedCostSource(curves, digest="ab" * 16),
+              curves_st))
+
+
+def _prices(planner, R, L, P, Q, pred):
+    return (planner.swar_seconds(R, L, P, Q, pred),
+            planner.mxu_seconds(R, L, P, Q),
+            planner.ref_seconds(R, L, P, Q),
+            planner.filter_seconds(R, max(1, P // 4), Q))
+
+
+class TestMonotonicity:
+    @settings(max_examples=80, deadline=None)
+    @given(source_st,
+           st.integers(1, 1 << 20), st.integers(0, 1 << 20),
+           st.integers(1, 4096),
+           st.integers(1, 512), st.integers(0, 512),
+           st.integers(1, 256), st.integers(0, 256),
+           st.sampled_from(["exact", "accept"]))
+    def test_seconds_monotone_in_R_P_Q(self, source, R, dR, L, P, dP, Q,
+                                       dQ, pred):
+        p = Planner(cost_source=source)
+        base = _prices(p, R, L, P, Q, pred)
+        for grown, label in ((_prices(p, R + dR, L, P, Q, pred), "R"),
+                             (_prices(p, R, L, P + dP, Q, pred), "P"),
+                             (_prices(p, R, L, P, Q + dQ, pred), "Q")):
+            for b, g, fn in zip(base, grown,
+                                ("swar", "mxu", "ref", "filter")):
+                assert g >= b * (1.0 - 1e-9), \
+                    f"{fn}_seconds decreased as {label} grew: {b} -> {g}"
+
+    @settings(max_examples=40, deadline=None)
+    @given(source_st, st.integers(1, 1 << 20), st.integers(1, 4096),
+           st.integers(1, 512), st.integers(1, 256))
+    def test_seconds_positive(self, source, R, L, P, Q):
+        p = Planner(cost_source=source)
+        assert all(s > 0.0 for s in _prices(p, R, L, P, Q, "exact"))
+
+
+class TestPersistenceRoundtrip:
+    @settings(max_examples=25, deadline=None)
+    @given(curves=curves_st)
+    def test_roundtrip_identical_golden_decisions(self, curves):
+        # Serialize through the actual on-disk JSON format (the
+        # filesystem half is covered in test_match_calibrate.py).
+        import json
+
+        table = CalibrationTable(device_kind="cpu", backend="cpu",
+                                 interpret=True, curves=curves)
+        loaded = CalibrationTable.from_json(
+            json.loads(json.dumps(table.to_json())))
+        assert loaded.digest == table.digest
+        assert golden_decisions(loaded.cost_source()) == \
+            golden_decisions(table.cost_source())

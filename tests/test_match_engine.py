@@ -57,7 +57,9 @@ class TestPlanner:
     def test_explicit_override_wins(self):
         p = self.plan(n_rows=2, fragment_chars=20, pattern_chars=8,
                       backend="mxu")
-        assert p.backend == "mxu" and p.reason == "explicit override"
+        assert p.backend == "mxu"
+        assert p.reason == "explicit override [cost=static]"
+        assert p.cost_source == "static"
 
     def test_mxu_per_row_rejected(self):
         with pytest.raises(ValueError, match="per-row"):
