@@ -15,6 +15,7 @@ Modules (one per paper table/figure + assignment deliverables):
   query_bench       -- compiled-query reuse + wildcard predicates (beyond)
   ingest_bench      -- online ingestion into a live store (beyond paper)
   filter_bench      -- q-gram filter-then-verify vs full scan (beyond)
+  standing_bench    -- fused standing-query bank vs per-pattern loop
   shard_bench       -- mesh-sharded 1M-row scaling sweep (beyond paper)
   calibrate_bench   -- autotuned cost model: the three Sec. 3i proofs
   roofline          -- dry-run roofline table (assignment)
@@ -43,7 +44,8 @@ MODULES = [
     "table1_gates", "fig5_throughput", "fig6_breakdown", "fig7_patlen",
     "fig8_tech", "fig9_10_nmp", "fig11_gates", "table4_apps",
     "sec5_5_variation", "kernel_bench", "service_bench", "query_bench",
-    "ingest_bench", "filter_bench", "shard_bench", "calibrate_bench",
+    "ingest_bench", "filter_bench", "standing_bench", "shard_bench",
+    "calibrate_bench",
     "roofline",
 ]
 

@@ -100,3 +100,85 @@ def filter_qgram_ref(row_sigs: np.ndarray, qsig: np.ndarray,
     bytes_ = absent.view(np.uint8).reshape(absent.shape[0], -1)
     counts = np.unpackbits(bytes_, axis=1).sum(1).astype(np.int64)
     return (counts <= slack).astype(np.int32)
+
+
+# -- pattern-bank prefilter (standing queries, DESIGN.md Sec. 3j) -------------
+#
+# The inverted regime swaps the roles: the *patterns* are the resident
+# axis (thousands of standing queries in a PatternBank) and the arriving
+# document batch is the transient side.  One dispatch answers, for every
+# pattern at once, "can this pattern possibly fire on any document of the
+# batch?" -- the corpus filter's q-gram lemma read backwards: a document
+# that contains a qualifying alignment of pattern p contains all of that
+# window's q-grams, so every *required* signature bit of p absent from
+# the document's occurrence signature witnesses a destroyed q-gram, and
+# ``popcount(psig & ~docsig) > slack_p`` proves p cannot fire on it.
+# Per-pattern slacks ride as a dynamic operand (unlike the corpus
+# filter's static slack: the bank mixes thresholds freely and must not
+# recompile per distinct value).
+
+def _bank_kernel(psig_ref, dsig_ref, slack_ref, out_ref):
+    psigs = psig_ref[...]                    # (TILE, Wb) required bits
+    dsigs = dsig_ref[...]                    # (D, Wb) doc occurrence sigs
+    slacks = slack_ref[...]                  # (TILE, 1) per-pattern budget
+    absent = popcount_words(
+        psigs[:, None, :] & ~dsigs[None, :, :]).sum(axis=-1)  # (TILE, D)
+    out_ref[...] = (absent <= slacks).any(axis=1,
+                                          keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bank_prefilter(pat_sigs: jnp.ndarray, doc_sigs: jnp.ndarray,
+                   slacks: jnp.ndarray, *,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Surviving-pattern bitmap for one document batch.
+
+    pat_sigs (Q, Wb) uint32 -- per-pattern required-bit signatures, rows
+                               padded to ``FILTER_ROW_TILE`` (pad rows
+                               carry slack -1 and never survive).
+    doc_sigs (D, Wb) uint32 -- per-document occurrence signatures (all-
+                               zero pad docs admit only unprunable
+                               patterns, which survive regardless).
+    slacks   (Q, 1)  int32  -- per-pattern mismatch budgets e*q
+                               (negative: unsatisfiable, never fires).
+    out      (Q, 1)  int32  -- 1 iff some document admits the pattern.
+    """
+    Q, Wb = pat_sigs.shape
+    D = doc_sigs.shape[0]
+    if Q % FILTER_ROW_TILE:
+        raise ValueError(
+            f"patterns must be padded to a multiple of {FILTER_ROW_TILE}")
+    if doc_sigs.shape[1] != Wb:
+        raise ValueError(f"doc_sigs must be (D, {Wb}); got "
+                         f"{doc_sigs.shape}")
+    if slacks.shape != (Q, 1):
+        raise ValueError(f"slacks must be ({Q}, 1); got {slacks.shape}")
+    # Per-pattern-row footprint includes the (TILE, D, Wb) popcount
+    # temporary, so the coarsening budget sees D * Wb words per row.
+    tile = coarse_row_tile(Q, FILTER_ROW_TILE, (Wb * (D + 1) + D + 2) * 4)
+    grid = (Q // tile,)
+    return pl.pallas_call(
+        _bank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, Wb), lambda i: (i, 0)),
+            pl.BlockSpec((D, Wb), lambda i: (0, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        interpret=interpret,
+    )(pat_sigs, doc_sigs, slacks)
+
+
+def bank_prefilter_ref(pat_sigs: np.ndarray, doc_sigs: np.ndarray,
+                       slacks: np.ndarray) -> np.ndarray:
+    """NumPy oracle for ``bank_prefilter`` ((Q,) int32 survivor flags)."""
+    ps = np.asarray(pat_sigs, np.uint32)[:, None, :]
+    ds = np.asarray(doc_sigs, np.uint32)[None, :, :]
+    absent = ps & ~ds                                # (Q, D, Wb)
+    bytes_ = absent.view(np.uint8).reshape(
+        absent.shape[0], absent.shape[1], -1)
+    counts = np.unpackbits(bytes_, axis=2).sum(2).astype(np.int64)
+    return (counts <= np.asarray(slacks).reshape(-1, 1)).any(1).astype(
+        np.int32)

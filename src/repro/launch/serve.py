@@ -11,6 +11,12 @@ corpus (micro-batched multi-tenant execution, DESIGN.md Sec. 3d), mixed
 with online ingestion (``--ingest-every``: the corpus grows in place under
 load, Sec. 3f), and reports coalescing + cache + ingest stats alongside
 QPS.
+
+``--workload stream`` is the inverted regime (DESIGN.md Sec. 3j): an
+open-loop document-arrival generator drives ``MatchService.ingest``
+against a standing ``PatternBank`` -- mostly benign docs, a few with
+planted bank hits -- over a sliding-window corpus, and reports per-tick
+bank-launch counts, hit latency, and prefilter survivor fractions.
 """
 
 from __future__ import annotations
@@ -118,9 +124,91 @@ def run_match_service(args) -> None:
         assert grew == stats["n_ingested_rows"]
 
 
+def run_stream(args) -> None:
+    """Open-loop document stream against a standing pattern bank.
+
+    Each tick, ``--docs-per-tick`` synthetic documents arrive via
+    ``service.ingest``; every ``--plant-every``-th document carries a
+    planted substring of a registered standing pattern, so the expected
+    hit stream is known.  The service scans each tick's fused batch
+    against the whole bank in **one** roles-swapped launch before
+    appending (asserted below), evicts past ``--window-rows``, and the
+    report covers exactly what a standing-query deployment is judged on:
+    bank launches per tick, planted-hit detection + latency percentiles,
+    and prefilter survivor fractions.
+    """
+    from repro.match import MatchEngine, MatchService, PackedCorpus, \
+        PatternBank
+
+    rng = np.random.default_rng(0)
+    F, P = args.fragment_chars, args.pattern_chars
+    corpus = PackedCorpus(rng.integers(0, 4, (args.corpus_rows, F),
+                                       np.uint8))
+    eng = MatchEngine(corpus)
+    bank = PatternBank(F, P, capacity=max(8, args.bank_patterns),
+                       filter={"auto": None, "on": True,
+                               "off": False}[args.bank_filter])
+    pats = rng.integers(0, 4, (args.bank_patterns, P), np.uint8)
+    pids = [bank.register(p, threshold=P) for p in pats]
+    svc = MatchService(eng, bank=bank, window_rows=args.window_rows or None)
+
+    per_tick_launches, survivor_fracs, latencies = [], [], []
+    n_planted = n_detected = 0
+    t0 = time.perf_counter()
+    for tick in range(args.ticks):
+        docs = rng.integers(0, 4, (args.docs_per_tick, F), np.uint8)
+        planted_docs = set()
+        if args.plant_every:
+            for d in range(0, args.docs_per_tick, args.plant_every):
+                j = int(rng.integers(0, args.bank_patterns))
+                off = int(rng.integers(0, F - P + 1))
+                docs[d, off:off + P] = pats[j]
+                planted_docs.add(d)
+                n_planted += 1
+        t_arrive = time.perf_counter()
+        ticket = svc.ingest(docs)
+        before = svc.stats.n_bank_launches
+        svc.tick()
+        t_done = time.perf_counter()
+        per_tick_launches.append(svc.stats.n_bank_launches - before)
+        bt = ticket.bank_ticket
+        hit_docs = set(int(d) for d in bt.hits[:, 0])
+        n_detected += len(planted_docs & hit_docs)
+        latencies.extend((t_done - t_arrive,) * len(planted_docs & hit_docs))
+        if bt.survivor_frac is not None:
+            survivor_fracs.append(bt.survivor_frac)
+    dt = time.perf_counter() - t0
+
+    assert all(n == 1 for n in per_tick_launches), \
+        "every ingest tick must cost exactly one fused bank launch"
+    assert n_detected == n_planted, \
+        f"planted hits missed: {n_detected}/{n_planted}"
+    total_docs = args.ticks * args.docs_per_tick
+    lat = np.array(sorted(latencies)) if latencies else np.zeros(1)
+    print(f"streamed {total_docs} docs over {args.ticks} ticks against "
+          f"{bank.n_live} standing patterns in {dt:.2f}s "
+          f"({total_docs / dt:.1f} docs/s)")
+    print(f"bank launches/tick={np.mean(per_tick_launches):.0f} "
+          f"(total {svc.stats.n_bank_launches}, prefilter "
+          f"{svc.stats.n_bank_prefilter_launches}) "
+          f"planted hits detected {n_detected}/{n_planted} "
+          f"hit latency p50={np.percentile(lat, 50) * 1e3:.1f}ms "
+          f"p95={np.percentile(lat, 95) * 1e3:.1f}ms")
+    surv = (f"mean={np.mean(survivor_fracs):.4f} "
+            f"last={survivor_fracs[-1]:.4f}" if survivor_fracs
+            else "(scan strategy: no prefilter launches)")
+    print(f"prefilter survivor fractions {surv}")
+    if args.window_rows:
+        print(f"window: corpus {corpus.n_live} live / {corpus.n_rows} "
+              f"physical rows (evicted {svc.stats.n_evicted_rows}, "
+              f"compactions {corpus.n_compactions})")
+        assert corpus.n_live <= args.window_rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=("lm", "match"), default="lm")
+    ap.add_argument("--workload", choices=("lm", "match", "stream"),
+                    default="lm")
     ap.add_argument("--arch", choices=list(ARCHS), default="llama3.2-1b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=6)
@@ -149,10 +237,30 @@ def main() -> None:
     ap.add_argument("--tick-every", type=int, default=8,
                     help="match workload: drive a service tick every K "
                          "submissions (0: one big flush at the end)")
+    ap.add_argument("--bank-patterns", type=int, default=64,
+                    help="stream workload: standing patterns registered "
+                         "in the bank")
+    ap.add_argument("--ticks", type=int, default=8,
+                    help="stream workload: arrival ticks to run")
+    ap.add_argument("--docs-per-tick", type=int, default=16,
+                    help="stream workload: documents arriving per tick")
+    ap.add_argument("--plant-every", type=int, default=4,
+                    help="stream workload: every Kth arriving doc carries "
+                         "a planted bank hit (0 disables)")
+    ap.add_argument("--window-rows", type=int, default=256,
+                    help="stream workload: sliding-window corpus bound "
+                         "(0: append-only)")
+    ap.add_argument("--bank-filter", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="stream workload: pattern-side q-gram prefilter "
+                         "routing (auto: planner prices it)")
     args = ap.parse_args()
 
     if args.workload == "match":
         run_match_service(args)
+        return
+    if args.workload == "stream":
+        run_stream(args)
         return
 
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -29,6 +29,13 @@ The single entry point for all string-matching workloads:
   invalidated on corpus generation change), and ingests new corpus rows
   online (``ingest``: appends batched per tick, interleaved with query
   execution against the same resident corpus).
+* ``PatternBank`` / ``HitTicket`` -- standing queries over a document
+  stream (DESIGN.md Sec. 3j): thousands of frozen threshold patterns
+  packed once into device-resident operands, scored against every
+  ``MatchService.ingest`` batch in one roles-swapped fused launch before
+  the batch splices in, with a pattern-side q-gram prefilter (zero false
+  negatives), per-pattern TTLs/callbacks, and windowed corpus operation
+  (tombstone eviction + periodic compaction).
 * ``calibrate`` / ``FeedbackStore`` -- measured cost model (DESIGN.md
   Sec. 3i): ``autotune()`` microbenchmarks the kernels and fits
   per-kernel overhead curves, persisted per substrate
@@ -50,14 +57,17 @@ from .engine import CompiledMatch, MatchEngine, MatchResult
 from .feedback import EwmaRatio, FeedbackStore, kernel_key
 from .index import CorpusIndex, FilterOperands, build_query_filter
 from .planner import BatchPlan, FilterContext, Plan, Planner
-from .query import MatchQuery, as_query
+from .planner import BankPlan
+from .query import MatchQuery, as_masks, as_query
 from .service import (IngestTicket, MatchService, MatchTicket,
                       ServiceStats)
+from .standing import HitTicket, PatternBank, StandingPattern
 
 __all__ = ["PackedCorpus", "Planner", "Plan", "BatchPlan", "FilterContext",
-           "MatchQuery", "as_query", "CompiledMatch", "MatchEngine",
-           "MatchResult", "MatchService", "MatchTicket", "IngestTicket",
-           "ServiceStats", "CorpusIndex", "FilterOperands",
+           "MatchQuery", "as_query", "as_masks", "CompiledMatch",
+           "MatchEngine", "MatchResult", "MatchService", "MatchTicket",
+           "IngestTicket", "ServiceStats", "CorpusIndex", "FilterOperands",
            "build_query_filter", "CalibrationTable", "autotune",
            "bench_provenance", "load_cost_source", "EwmaRatio",
-           "FeedbackStore", "kernel_key"]
+           "FeedbackStore", "kernel_key", "PatternBank", "StandingPattern",
+           "HitTicket", "BankPlan"]

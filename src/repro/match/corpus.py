@@ -28,8 +28,20 @@ resident rows are never repacked, mirroring a CRAM row write into an
 already-laid-out array.  Capacity growth itself is a device-side
 zero-extension (``jnp.concatenate`` with zero rows), not a host repack.
 ``generation`` bumps on every content mutation (``append_rows`` /
-``set_rows`` / ``invalidate``) so result caches (match.service) never serve
-scores computed against older corpus contents.
+``set_rows`` / ``tombstone`` / ``compact`` / ``invalidate``) so result
+caches (match.service) never serve scores computed against older corpus
+contents.
+
+**Windowed operation** (DESIGN.md Sec. 3j): ``tombstone(rows)`` marks live
+rows dead without moving anything -- the device forms are untouched and
+the engine's reductions mask dead rows out on the host (threshold hits
+drop, top-k excludes, best/full report the -1 sentinel).  ``compact()``
+reclaims the dead slots by shifting the live tail down *in the host
+buffer* and splicing only the moved rows into the device forms
+(``_splice_device``), so eviction never repacks resident rows either --
+the pack counters stay flat through an arbitrary tombstone/compact
+history, which is what lets the corpus run as a bounded sliding window
+instead of append-only.
 
 **Row sharding** (``shard_rows``, DESIGN.md Sec. 3h): on a mesh the device
 forms are stored in the *cyclic physical layout* of
@@ -111,9 +123,17 @@ class PackedCorpus:
         # Incremental row writes (device splice, not a repack).
         self.row_update_count = 0
         # Content generation: bumped on every mutation (append_rows /
-        # set_rows / invalidate).  Result caches keyed on it
-        # (match.service) drop entries computed against older contents.
+        # set_rows / tombstone / compact / invalidate).  Result caches
+        # keyed on it (match.service) drop entries computed against older
+        # contents.
         self.generation = 0
+        # Tombstone mask over the capacity buffer (windowed operation,
+        # DESIGN.md Sec. 3j): a dead row stays physically resident (its
+        # device-form words are untouched) but reductions mask it out;
+        # compact() reclaims the slots.
+        self._dead = np.zeros(self.capacity, bool)
+        self.n_dead = 0
+        self.n_compactions = 0
         # Attached derived forms (match.index.CorpusIndex): observers that
         # mirror the residency protocol -- notified of exactly the touched
         # rows on splices, of capacity growth, and of invalidation, so
@@ -155,6 +175,23 @@ class PackedCorpus:
     def host_pack_count(self) -> int:
         """Total host-side full-corpus packing events (both forms)."""
         return self.swar_pack_count + self.onehot_pack_count
+
+    # -- tombstones (windowed operation, DESIGN.md Sec. 3j) --------------------
+    @property
+    def n_live(self) -> int:
+        """Rows that are appended and not tombstoned."""
+        return self._n_rows - self.n_dead
+
+    @property
+    def dead_mask(self) -> np.ndarray:
+        """(n_rows,) bool tombstone mask over the live region (read-only)."""
+        m = self._dead[:self._n_rows]
+        m.flags.writeable = False
+        return m
+
+    def live_row_ids(self) -> np.ndarray:
+        """Ascending logical ids of non-tombstoned rows."""
+        return np.flatnonzero(~self._dead[:self._n_rows])
 
     # -- row sharding ----------------------------------------------------------
     @property
@@ -342,6 +379,8 @@ class PackedCorpus:
             return
         grow = np.zeros((capacity - self.capacity, self.fragment_chars),
                         np.uint8)
+        self._dead = np.concatenate(
+            [self._dead, np.zeros(capacity - self.capacity, bool)])
         self._frags = np.concatenate([self._frags, grow], 0)
         c_pad = self.capacity_padded
         if self._swar is not None and self._swar.shape[0] < c_pad:
@@ -368,6 +407,11 @@ class PackedCorpus:
                 f"appended rows must be (n, {self.fragment_chars}); got "
                 f"shape {rows.shape}")
         n = rows.shape[0]
+        if n == 0:
+            # An empty append is a no-op: no device launch, no generation
+            # bump (a bump would needlessly drop every generation-keyed
+            # result cache for contents that did not change).
+            return self._n_rows
         start = self._n_rows
         if start + n > self.capacity:
             self.reserve(max(self.capacity * 2, start + n, ROW_TILE))
@@ -440,6 +484,65 @@ class PackedCorpus:
         self._frags[start:start + n] = rows
         self._splice_device(start, rows)
         self.generation += 1
+
+    # -- eviction (windowed operation, DESIGN.md Sec. 3j) ----------------------
+    def tombstone(self, rows) -> int:
+        """Mark live rows dead; returns how many were newly tombstoned.
+
+        O(1) device work: nothing moves and no form is touched -- the
+        mask is host state that the engine's reductions honor (dead rows
+        produce no threshold hits, are excluded from top-k, and report
+        the -1 best-score sentinel).  ``generation`` bumps when the mask
+        actually changed, so result caches never serve scores that
+        include since-evicted rows.  Re-tombstoning a dead row is a
+        no-op; reclaim the slots with ``compact()``.
+        """
+        rows = np.atleast_1d(np.asarray(rows, np.int64))
+        if rows.size == 0:
+            return 0
+        if rows.min() < 0 or rows.max() >= self._n_rows:
+            raise ValueError(
+                f"tombstone rows must be in [0, {self._n_rows}), got "
+                f"[{rows.min()}, {rows.max()}]")
+        newly = int((~self._dead[rows]).sum())
+        if newly:
+            self._dead[rows] = True
+            self.n_dead += newly
+            self.generation += 1
+        return newly
+
+    def compact(self) -> int:
+        """Reclaim tombstoned slots; returns the number of rows dropped.
+
+        Live rows shift down in the host buffer (order preserved: logical
+        ids above a dead row shrink by the dead count below them) and only
+        the rows at or after the first dead slot are re-spliced into the
+        cached device forms -- the same touched-rows-only
+        ``_splice_device`` path appends use, so the pack counters stay
+        flat no matter how many eviction cycles the corpus lives through.
+        The vacated tail is zeroed (and spliced as zeros) so it behaves
+        exactly like reserved capacity.  No-op when nothing is dead.
+        """
+        if self.n_dead == 0:
+            return 0
+        old_n = self._n_rows
+        dead = self._dead[:old_n]
+        first = int(np.argmax(dead))
+        live_after = np.flatnonzero(~dead[first:]) + first
+        new_n = first + live_after.size
+        # Copy before overwrite: source and destination ranges overlap.
+        moved = np.array(self._frags[live_after])
+        self._frags[first:new_n] = moved
+        self._frags[new_n:old_n] = 0
+        self._dead[:old_n] = False
+        self.n_dead = 0
+        self._n_rows = new_n
+        # One splice covers the moved rows and the zeroed tail; observers
+        # (CorpusIndex) ride the same notification.
+        self._splice_device(first, self._frags[first:old_n])
+        self.generation += 1
+        self.n_compactions += 1
+        return old_n - new_n
 
     def invalidate(self) -> None:
         """Drop cached device forms (next query repacks)."""

@@ -194,7 +194,7 @@ class CompiledMatch:
     __slots__ = ("engine", "query", "plan", "_packed", "_pats2d", "_sel",
                  "_idx", "_pad_idx", "_idx_stride", "_k_eff", "_k_vec",
                  "_thr_vec", "_empty", "_mode", "_lowered", "_filter_ops",
-                 "_filter_dev", "_fb_version")
+                 "_filter_dev", "_fb_version", "_sel_max")
 
     def __init__(self, engine: "MatchEngine", query: MatchQuery):
         self.engine = engine
@@ -206,6 +206,7 @@ class CompiledMatch:
         self._empty = self._sel is not None and self._sel.size == 0
         self._packed = self._pats2d = self._idx = self._pad_idx = None
         self._idx_stride = 0
+        self._sel_max = -1
         self._k_eff, self._k_vec, self._thr_vec = 0, None, None
         self._filter_ops: Optional[FilterOperands] = None
         self._filter_dev = None
@@ -225,6 +226,7 @@ class CompiledMatch:
                 raise IndexError(
                     f"rows must be in [0, {corpus.n_rows}), got "
                     f"[{self._sel.min()}, {self._sel.max()}]")
+            self._sel_max = int(self._sel.max())
             R = len(self._sel)
             R_pad = -(-R // corpus.row_pad) * corpus.row_pad
             pad_idx = np.zeros(R_pad, np.int64)
@@ -351,7 +353,21 @@ class CompiledMatch:
         reduction = query.reduction
         sel = self._sel
         survivor_frac = None
+        # Tombstone mask (windowed corpus, DESIGN.md Sec. 3j): dead rows
+        # stay physically resident so the kernels run unchanged; the
+        # reductions below mask them out on the host.  None when nothing
+        # is dead -- the append-only fast path pays zero extra work.
+        dead_full = (engine.corpus.dead_mask if engine.corpus.n_dead
+                     else None)
         if sel is not None:
+            if self._sel_max >= engine.corpus.n_rows:
+                # compact() shrank the live region below a row this subset
+                # names; the gather would silently clamp to a wrong row.
+                raise IndexError(
+                    f"rows subset names row {self._sel_max} but the corpus "
+                    f"now holds {engine.corpus.n_rows} live rows (did "
+                    "compact() reclaim evicted rows?); recompile with "
+                    "current row ids")
             R = len(sel)
             if (engine._row_shards > 1
                     and self._idx_stride != engine.corpus.shard_stride):
@@ -383,6 +399,10 @@ class CompiledMatch:
                 flags = engine._run_filter(self, R)
                 t_fil = time.perf_counter() - t0
                 sel = np.flatnonzero(flags).astype(np.int64)
+                if dead_full is not None:
+                    # Tombstoned rows can survive the signature test but
+                    # must not reach the verify stage (nor the hits).
+                    sel = sel[~dead_full[sel]]
                 survivor_frac = len(sel) / R
                 ops = self._filter_ops
                 engine.index.record_selectivity(
@@ -442,12 +462,27 @@ class CompiledMatch:
             if not shard_phys:
                 scores = scores[:valid]
             n_chunks += 1
+            # Per-chunk tombstone mask in logical row order (None when the
+            # whole chunk is alive).
+            alive = None
+            if dead_full is not None:
+                chunk_ids = (np.arange(c0, c0 + valid, dtype=np.int64)
+                             if sel is None
+                             else np.asarray(sel[c0:c0 + valid]))
+                alive = ~dead_full[chunk_ids]
+                if alive.all():
+                    alive = None
             if reduction == "full":
                 # Host materialization is the point of this reduction; the
                 # best reduction is derived from it at the end.
                 sc = np.asarray(scores)
                 if shard_phys:
                     sc = _sharding.cyclic_unpermute(sc, S)[:valid]
+                if alive is not None:
+                    # Dead rows report the -1 sentinel (scores are >= 0
+                    # for live rows, so the sentinel is unambiguous).
+                    sc = sc.copy()
+                    sc[~alive] = -1
                 full.append(sc)
                 continue
             # Fused per-chunk reduction: only (chunk, ...) lives at once.
@@ -461,6 +496,10 @@ class CompiledMatch:
                 bs_np = _sharding.cyclic_unpermute(np.asarray(bs), S)[:valid]
             else:
                 bl_np, bs_np = np.asarray(bl), np.asarray(bs)
+            if alive is not None:
+                bl_np, bs_np = bl_np.copy(), bs_np.copy()
+                bl_np[~alive] = 0
+                bs_np[~alive] = -1        # dead-row best-score sentinel
             best_l.append(bl_np)
             best_s.append(bs_np)
             # topk / threshold report *corpus* row ids; with a rows= subset
@@ -479,16 +518,28 @@ class CompiledMatch:
                         local[:, 0] = sel[local[:, 0] + c0]
                     else:
                         local[:, 0] += c0
-                    hit_rows.append(np.concatenate(
-                        [local, vals[:, None].astype(np.int64)], 1))
+                    if dead_full is not None:
+                        keep = ~dead_full[local[:, 0]]
+                        local, vals = local[keep], vals[keep]
+                    if local.size:
+                        hit_rows.append(np.concatenate(
+                            [local, vals[:, None].astype(np.int64)], 1))
             elif reduction == "topk":
-                if shard_phys:
-                    # Shard-local maxima merge on the host: bit-identical
-                    # to the device path (see _host_topk_merge).
-                    run_rows, run_scores = _host_topk_merge(
-                        run_rows, run_scores, bs_np,
-                        np.arange(c0, c0 + valid, dtype=np.int64),
-                        self._k_eff)
+                if shard_phys or dead_full is not None:
+                    # Shard-local maxima (and/or tombstoned chunks) merge
+                    # on the host: bit-identical to the device path (see
+                    # _host_topk_merge); dead rows are dropped outright so
+                    # they can never occupy a top-k slot.
+                    rows_np = (np.arange(c0, c0 + valid, dtype=np.int64)
+                               if sel is None
+                               else np.asarray(sel[c0:c0 + valid]))
+                    b_sel = bs_np
+                    if alive is not None:
+                        rows_np, b_sel = rows_np[alive], bs_np[alive]
+                    if rows_np.size:
+                        run_rows, run_scores = _host_topk_merge(
+                            run_rows, run_scores, b_sel, rows_np,
+                            self._k_eff)
                     continue
                 if sel is not None:
                     chunk_rows_ids = jnp.asarray(sel[c0:c0 + valid])
@@ -546,8 +597,16 @@ class CompiledMatch:
             res.hits = (np.concatenate(hit_rows, 0) if hit_rows
                         else np.zeros((0, width), np.int64))
         elif reduction == "topk":
-            res.topk_rows = np.asarray(run_rows)
-            res.topk_scores = np.asarray(run_scores)
+            if run_rows is None:
+                # Every scanned row was tombstoned: a well-formed empty
+                # top-k (matches the empty-subset result shape).
+                shape0 = ((0, plan.n_patterns) if plan.mode == "batched"
+                          else (0,))
+                res.topk_rows = np.zeros(shape0, np.int64)
+                res.topk_scores = np.zeros(shape0, np.int32)
+            else:
+                res.topk_rows = np.asarray(run_rows)
+                res.topk_scores = np.asarray(run_scores)
         return res
 
     __call__ = run

@@ -192,6 +192,34 @@ def binom_cdf(k: int, n: int, p: float) -> float:
     return min(1.0, total)
 
 
+def expected_density(n_chars: int, q: int, n_bits: int) -> float:
+    """Analytic prior for hashed q-gram signature occupancy.
+
+    A length-``n_chars`` row throws ``n_chars - q + 1`` q-grams into
+    ``n_bits`` bins; the expected fraction of bits set is the classic
+    occupancy formula.  Shared between the corpus index (before the
+    first pack measures the real density) and the pattern bank (which
+    models the *arriving documents'* density without ever packing
+    them).
+    """
+    g = int(n_chars) - int(q) + 1
+    return 1.0 - (1.0 - 1.0 / int(n_bits)) ** max(g, 0)
+
+
+def pass_probability(n_query_bits: int, slack: int, density: float) -> float:
+    """Probability one random row admits one query under the filter.
+
+    Required bits are modeled as independently present at ``density``;
+    the query passes iff at most ``slack`` of its ``n_query_bits``
+    required bits are absent.  Negative slack is the unsatisfiable
+    sentinel (prunes everything); ``n_query_bits == 0`` or
+    ``slack >= n_query_bits`` passes everything.
+    """
+    if slack < 0:
+        return 0.0
+    return binom_cdf(int(slack), int(n_query_bits), 1.0 - float(density))
+
+
 class CorpusIndex:
     """Per-row q-gram signatures, device-resident and grown in place.
 
@@ -328,8 +356,8 @@ class CorpusIndex:
         n = self.corpus.n_rows
         if self._sigs is not None and n:
             return float(self._row_bits[:n].mean()) / self.n_bits
-        g = self.corpus.fragment_chars - self.q + 1
-        return 1.0 - (1.0 - 1.0 / self.n_bits) ** max(g, 0)
+        return expected_density(self.corpus.fragment_chars, self.q,
+                                self.n_bits)
 
     def estimate_survivor_frac(self, n_query_bits: Sequence[int],
                                slacks: Sequence[int], *,
@@ -349,7 +377,7 @@ class CorpusIndex:
         for bq, slack in zip(n_query_bits, slacks):
             if slack < 0:
                 continue                 # unsatisfiable: prunes every row
-            total += binom_cdf(int(slack), int(bq), 1.0 - d)
+            total += pass_probability(bq, slack, d)
         if calibrated and self._calibration is not None:
             total *= self._calibration
         return float(min(1.0, total))

@@ -214,6 +214,32 @@ class BatchPlan:
     reason: str
 
 
+@dataclasses.dataclass(frozen=True)
+class BankPlan:
+    """Pricing verdict for one ingest batch against a standing bank.
+
+    The inverted regime (DESIGN.md Sec. 3j): the pattern bank is the
+    resident axis, the arriving document batch the transient one.
+    ``strategy == "scan"`` verifies every live pattern against the batch
+    in one fused accept-set SWAR launch; ``"filter"`` first runs one
+    ``bank_prefilter`` dispatch (pattern signatures vs. per-doc
+    occurrence signatures) and verifies only the estimated survivors.
+    Either way the batch costs exactly one verify launch -- the filter
+    only shrinks its pattern axis.
+    """
+
+    strategy: str               # "scan" | "filter"
+    n_docs: int                 # arriving batch size D
+    n_patterns: int             # live bank slots Qp
+    est_seconds: float          # chosen-path estimate
+    est_scan_seconds: float     # full bank scan estimate
+    est_filter_seconds: float   # prefilter stage share (0 for scan)
+    est_survivor_frac: float    # estimated surviving-pattern fraction
+    est_verify_patterns: int    # pattern axis priced into the verify
+    reason: str
+    cost_source: str = "static"
+
+
 class Planner:
     """Kernel selection: analytic roofline x cost source x runtime feedback.
 
@@ -476,6 +502,69 @@ class Planner:
                     est_base_seconds=est_base,
                     est_filter_seconds=est_fil,
                     est_filter_base_seconds=est_fil_base)
+
+    # -- standing-bank pricing (DESIGN.md Sec. 3j) ----------------------------
+    def plan_bank(self, *, n_docs: int, fragment_chars: int,
+                  pattern_chars: int, n_patterns: int, sig_words: int,
+                  survivor_frac: float, prunable: bool = True,
+                  force: Optional[bool] = None) -> BankPlan:
+        """Price one ingest batch against the bank: prefilter or full scan.
+
+        The roles are swapped relative to ``plan``: the batch's ``n_docs``
+        rides the row axis, the bank's live slots ride the pattern axis,
+        and the backend is always the accept-set SWAR kernel (the bank's
+        resident operands are bit planes; re-deriving MXU operands per
+        batch would repack the resident side, which the residency
+        protocol forbids).  The prefilter is a *single* dispatch whose
+        work is patterns x docs x signature words, so it is priced
+        through the filter kernel's calibrated curve with the doc count
+        as the inner extent.  ``force=True`` pins the filtered strategy
+        whenever the bank is prunable (never overrides prunability);
+        ``force=False`` pins the full scan.
+        """
+        D, F, P, Qp = int(n_docs), int(fragment_chars), int(pattern_chars), \
+            int(n_patterns)
+        if D < 1:
+            raise ValueError("batch has no documents")
+        if Qp < 1:
+            raise ValueError("bank has no live patterns")
+        L = F - P + 1
+        if L <= 0:
+            raise ValueError("pattern longer than fragment")
+        t_scan = self.swar_seconds(D, L, P, Qp, "accept")
+        strategy, est, t_fil, q_surv = "scan", t_scan, 0.0, Qp
+        frac = min(1.0, max(float(survivor_frac), 0.0))
+        if prunable and force is not False:
+            q_surv_est = max(1, math.ceil(frac * Qp))
+            analytic = analytic_filter_seconds(self.roofline, Qp,
+                                               sig_words, D)
+            t_fil = self._price("filter", analytic, 1, Qp, sig_words, D,
+                                False)
+            t_ver = self.swar_seconds(D, L, P, q_surv_est, "accept")
+            if force or t_fil + t_ver < t_scan:
+                strategy = "filter"
+                est = t_fil + t_ver
+                q_surv = q_surv_est
+                reason = (f"bank prefilter+verify {est:.3g}s "
+                          f"{'forced' if force else '<'} scan "
+                          f"{t_scan:.3g}s (est survivors {frac:.3g} of "
+                          f"{Qp})")
+            else:
+                reason = (f"bank scan {t_scan:.3g}s <= prefilter+verify "
+                          f"{t_fil + t_ver:.3g}s")
+                t_fil = 0.0
+        elif force is False:
+            reason = f"bank scan forced ({Qp} patterns x {D} docs)"
+        else:
+            reason = f"bank scan: no prunable patterns ({Qp} x {D} docs)"
+        reason += f" [cost={self.cost_source.tag}]"
+        return BankPlan(strategy=strategy, n_docs=D, n_patterns=Qp,
+                        est_seconds=est, est_scan_seconds=t_scan,
+                        est_filter_seconds=t_fil,
+                        est_survivor_frac=frac if strategy == "filter"
+                        else 1.0,
+                        est_verify_patterns=q_surv, reason=reason,
+                        cost_source=self.cost_source.tag)
 
     # -- batch pricing --------------------------------------------------------
     def plan_batch(self, *, n_rows: int, fragment_chars: int,

@@ -239,6 +239,34 @@ class MatchQuery:
         return h.hexdigest()
 
 
+def as_masks(pattern) -> np.ndarray:
+    """Normalize one pattern spelling to a 1-D uint8 accept-mask array.
+
+    Accepts the three spellings the query constructors accept -- a 1-D
+    ``MatchQuery`` (its masks are taken verbatim; reduction/rows baggage
+    is ignored), an IUPAC string, or a raw array (uint8 character codes
+    0..3, lifted to one-hot masks like ``MatchQuery.exact``).  The
+    PatternBank registers through this so every spelling freezes to the
+    same canonical form.
+    """
+    if isinstance(pattern, MatchQuery):
+        if len(pattern.shape) != 1:
+            raise ValueError("standing patterns are single patterns; got a "
+                             f"{pattern.shape} query")
+        return np.array(pattern.masks)
+    if isinstance(pattern, str):
+        return _mask_array(encoding.encode_iupac(pattern))
+    codes = np.asarray(pattern, np.uint8)
+    if codes.ndim != 1:
+        raise ValueError("pattern arrays must be 1-D uint8 codes")
+    if codes.size and codes.max() > 3:
+        raise ValueError(
+            f"pattern codes must be < 4 (A=0 C=1 G=2 T=3); got max "
+            f"{int(codes.max())}. Spell ambiguity as an IUPAC string or "
+            "a 1-D MatchQuery")
+    return _mask_array((np.uint8(1) << codes).astype(np.uint8))
+
+
 _SHIM_DEFAULTS = dict(reduction="best", k=_DEFAULT_K, threshold=None,
                       rows=None, backend=None, mode=None, chunk_rows=None,
                       filter=None)

@@ -36,6 +36,15 @@ reference in lock step (Sec. 3.4); the service is the TPU analogue:
   its resident rows and the engine (with its compile cache) survives
   growth -- the store ingests while serving, the regime the paper's
   resident-reference design exists for (DESIGN.md Sec. 3f).
+* **Standing queries** (DESIGN.md Sec. 3j).  With a ``PatternBank``
+  attached, every tick's fused ingest batch is scanned against the whole
+  bank in **one** roles-swapped batched launch *before* it splices into
+  the corpus (TTL-expired patterns are retired first); hits ride the
+  ``IngestTicket`` and the bank's per-pattern callbacks.  ``window_rows``
+  turns the corpus into a sliding window: after each append the oldest
+  live rows beyond the window are tombstoned (reductions mask them; the
+  standing scan already fired for them at ingest) and the corpus
+  compacts once the dead fraction crosses ``compact_dead_frac``.
 * **Stats.**  Per-request latency plus launch/coalescing/cache/ingest
   counters, per-tick launch counts, cache hit-rate, and q-gram filter
   routing (filtered-launch count, hit-rate, measured survivor fraction --
@@ -86,6 +95,15 @@ class ServiceStats:
     # of re-priced shape buckets) -- refreshed per tick from the planner.
     cost_source: str = "static"
     feedback: Optional[Dict] = None
+    # Standing-query / windowed-corpus counters (DESIGN.md Sec. 3j):
+    # bank launch counts mirror the attached PatternBank per tick, so
+    # "one ingest batch = one fused bank launch" is auditable here.
+    n_bank_launches: int = 0          # fused bank verify dispatches
+    n_bank_prefilter_launches: int = 0
+    n_bank_hits: int = 0              # standing hits delivered via ingest
+    n_evicted_rows: int = 0           # rows tombstoned by the window
+    n_compactions: int = 0            # corpus compactions triggered
+    bank: Optional[Dict] = None       # PatternBank.stats() snapshot
     _t_first_submit: Optional[float] = None
     _t_last_complete: Optional[float] = None
 
@@ -167,6 +185,12 @@ class ServiceStats:
             "misprediction_rate": (self.feedback or {}).get(
                 "misprediction_rate", 0.0),
             "feedback": dict(self.feedback or {}),
+            "n_bank_launches": self.n_bank_launches,
+            "n_bank_prefilter_launches": self.n_bank_prefilter_launches,
+            "n_bank_hits": self.n_bank_hits,
+            "n_evicted_rows": self.n_evicted_rows,
+            "n_compactions": self.n_compactions,
+            "bank": dict(self.bank) if self.bank is not None else None,
         }
 
 
@@ -213,16 +237,21 @@ class IngestTicket:
 
     ``start`` / ``n`` give the corpus row range the submission landed in
     once ``done``; rows from all same-tick submissions are appended in
-    submission order by one batched ``append_rows``.
+    submission order by one batched ``append_rows``.  With a standing
+    ``PatternBank`` attached, ``bank_ticket`` carries the tick's shared
+    ``HitTicket`` (one fused scan covers every same-tick submission;
+    filter its ``corpus_rows`` by ``[start, start + n)`` for this
+    submission's hits).
     """
 
-    __slots__ = ("_service", "done", "start", "n")
+    __slots__ = ("_service", "done", "start", "n", "bank_ticket")
 
     def __init__(self, service: "MatchService", n: int):
         self._service = service
         self.done = False
         self.start: Optional[int] = None
         self.n = n
+        self.bank_ticket = None
 
     def wait(self, max_ticks: int = 1024) -> int:
         """Drive the service until the rows are appended; returns start."""
@@ -246,9 +275,27 @@ class MatchService:
     them as read-only.
     """
 
-    def __init__(self, engine: MatchEngine, *, cache_size: int = 256):
+    def __init__(self, engine: MatchEngine, *, cache_size: int = 256,
+                 bank=None, window_rows: Optional[int] = None,
+                 compact_dead_frac: float = 0.5):
+        """``bank`` attaches a ``PatternBank`` scanned at every ingest;
+        ``window_rows`` bounds the corpus to a sliding window (oldest live
+        rows are tombstoned past it, and the corpus compacts once
+        ``n_dead / n_rows`` reaches ``compact_dead_frac``)."""
         self.engine = engine
         self.cache_size = int(cache_size)
+        if bank is not None and (bank.fragment_chars
+                                 != engine.corpus.fragment_chars):
+            raise ValueError(
+                f"bank fragment_chars={bank.fragment_chars} != corpus "
+                f"fragment_chars={engine.corpus.fragment_chars}")
+        self.bank = bank
+        if window_rows is not None and int(window_rows) < 1:
+            raise ValueError("window_rows must be >= 1")
+        self.window_rows = None if window_rows is None else int(window_rows)
+        if not (0.0 < float(compact_dead_frac) <= 1.0):
+            raise ValueError("compact_dead_frac must be in (0, 1]")
+        self.compact_dead_frac = float(compact_dead_frac)
         self.stats = ServiceStats()
         self._queue: List[_Pending] = []
         self._ingest_queue: List[Tuple[IngestTicket, np.ndarray]] = []
@@ -315,6 +362,13 @@ class MatchService:
             raise ValueError(f"ingested rows must be (n, {F}); got shape "
                              f"{rows.shape}")
         ticket = IngestTicket(self, rows.shape[0])
+        if rows.shape[0] == 0:
+            # Empty batch: a complete no-op.  Queueing it would charge an
+            # ingest batch, a zero-row append launch, a generation bump
+            # and therefore a spurious result-cache drop at the next tick.
+            ticket.start = self.engine.corpus.n_rows
+            ticket.done = True
+            return ticket
         # Copy: the append happens at tick time and the caller's buffer
         # must not mutate underneath the queue.
         self._ingest_queue.append((ticket, np.array(rows)))
@@ -495,19 +549,59 @@ class MatchService:
         self.stats.feedback = planner.feedback.snapshot()
 
     def _apply_ingests(self) -> None:
-        """Append all pending ingest rows as one batched in-place write."""
+        """Append all pending ingest rows as one batched in-place write.
+
+        With a bank attached, the fused batch is scanned against every
+        live standing pattern first -- one roles-swapped launch covering
+        all same-tick submissions -- so alerts fire before the rows even
+        splice in (and regardless of any later window eviction).
+        """
         batch, self._ingest_queue = self._ingest_queue, []
         if not batch:
             return
         rows = (batch[0][1] if len(batch) == 1
                 else np.concatenate([r for _, r in batch], 0))
+        scan = None
+        if self.bank is not None:
+            scan = self.bank.scan(rows, base_row=self.engine.corpus.n_rows)
+            self.stats.n_bank_hits += scan.hits.shape[0]
         start = self.engine.corpus.append_rows(rows)
         self.stats.n_ingest_batches += 1
         self.stats.n_ingested_rows += rows.shape[0]
         for ticket, r in batch:
             ticket.start = start
             ticket.done = True
+            ticket.bank_ticket = scan
             start += r.shape[0]
+        self._evict()
+
+    def _evict(self) -> None:
+        """Enforce the sliding window: tombstone past it, compact lazily.
+
+        Tombstoned rows stay physically resident (reductions mask them;
+        no repack, no splice); compaction -- which does pay one
+        touched-rows splice -- runs only when the dead fraction crosses
+        the configured threshold, amortizing it over many evictions.
+        """
+        if self.window_rows is None:
+            return
+        corpus = self.engine.corpus
+        excess = corpus.n_live - self.window_rows
+        if excess > 0:
+            corpus.tombstone(corpus.live_row_ids()[:excess])
+            self.stats.n_evicted_rows += excess
+        if (corpus.n_dead
+                and corpus.n_dead / corpus.n_rows >= self.compact_dead_frac):
+            corpus.compact()
+
+    def _note_bank(self) -> None:
+        """Mirror bank + window counters into the stats snapshot."""
+        self.stats.n_compactions = self.engine.corpus.n_compactions
+        if self.bank is not None:
+            self.stats.n_bank_launches = self.bank.n_bank_launches
+            self.stats.n_bank_prefilter_launches = \
+                self.bank.n_prefilter_launches
+            self.stats.bank = self.bank.stats()
 
     def tick(self) -> int:
         """Drain the queues once: ingests, cache hits, grouped launches.
@@ -517,9 +611,14 @@ class MatchService:
         below covers the append.  Returns the number of requests completed
         this tick.
         """
+        if self.bank is not None:
+            # Retire TTL-expired standing patterns before this tick's
+            # ingest scan: a pattern past its deadline must not fire.
+            self.bank.expire()
         self._apply_ingests()
         self._note_shards()
         self._note_calibration()
+        self._note_bank()
         gen = self.engine.corpus.generation
         if gen != self._cache_generation:
             self._cache.clear()

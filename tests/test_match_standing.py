@@ -1,0 +1,494 @@
+"""Standing-query pattern bank tests (DESIGN.md Sec. 3j).
+
+The load-bearing invariants:
+
+* **bank residency** -- device operands pack lazily at most once
+  (``plane_pack_count`` / ``sig_pack_count`` <= 1) across registration,
+  unregistration, capacity growth and scans; ``register``/``unregister``
+  splice only the touched slots and live patterns stay dense over
+  ``[0, n_live)``;
+* **one fused launch per batch** -- a ``scan`` (and a
+  ``MatchService.ingest`` batch) costs exactly one ``match_swar_masks``
+  dispatch regardless of bank size, and its hits are **bit-identical**
+  to compiling each standing pattern as an ad-hoc threshold query over
+  the same documents;
+* the **pattern-side prefilter** has zero false negatives (q-gram lemma,
+  roles swapped), including wildcard/IUPAC patterns whose spanned
+  q-grams drop out of the signature;
+* **windowed corpus operation** -- tombstoned rows vanish from every
+  reduction exactly as if the corpus had been rebuilt from the live
+  window, and compaction preserves results with flat pack counters;
+* the **service integration** satellites: empty-ingest no-op, TTL
+  expiry, hit delivery on tickets/callbacks, bank stats in the snapshot.
+"""
+
+import numpy as np
+import pytest
+
+from repro.kernels.filter_qgram import (FILTER_ROW_TILE, bank_prefilter,
+                                        bank_prefilter_ref)
+from repro.match import (MatchEngine, MatchQuery, MatchService,
+                         PackedCorpus, PatternBank, Planner, as_masks)
+from repro.match.index import build_query_filter, row_signatures
+
+F, P = 96, 16
+
+
+def make_docs(n=24, f=F, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng, rng.integers(0, 4, (n, f), np.uint8)
+
+
+def make_bank(n_patterns=6, docs=None, planted=(), seed=1, **kw):
+    """Bank of random exact patterns; ``planted`` (doc, off) pairs copy
+    pattern i into docs so the expected hit stream is non-empty."""
+    rng = np.random.default_rng(seed)
+    kw.setdefault("capacity", max(4, n_patterns))
+    bank = PatternBank(F, P, **kw)
+    pids = []
+    for i in range(n_patterns):
+        pat = rng.integers(0, 4, P, np.uint8)
+        if docs is not None and i < len(planted):
+            d, off = planted[i]
+            docs[d, off:off + P] = pat
+        pids.append(bank.register(pat, threshold=P))
+    return bank, pids
+
+
+def adhoc_hits(docs, bank, pid):
+    """Reference: compile the standing pattern ad-hoc over the docs."""
+    eng = MatchEngine(PackedCorpus(docs))
+    return eng.match(bank.pattern(pid).query).hits
+
+
+# -- registration / validation ------------------------------------------------
+
+def test_register_spellings_canonicalize():
+    bank = PatternBank(F, P, capacity=4)
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 4, P, np.uint8)
+    a = bank.register(codes, threshold=P)
+    b = bank.register("".join("ACGT"[c] for c in codes), threshold=P)
+    q = MatchQuery.exact(codes, reduction="threshold", threshold=float(P))
+    c = bank.register(q, threshold=P)
+    assert (bank.pattern(a).query == bank.pattern(b).query
+            == bank.pattern(c).query)
+
+
+def test_register_validates():
+    bank = PatternBank(F, P, capacity=4)
+    with pytest.raises(ValueError):
+        bank.register(np.zeros(P + 1, np.uint8), threshold=P)  # wrong len
+    with pytest.raises(ValueError):
+        bank.register(np.full(P, 7, np.uint8), threshold=P)  # bad codes
+    with pytest.raises(ValueError):
+        bank.register(np.zeros((2, P), np.uint8), threshold=P)  # 2-D
+    with pytest.raises(ValueError):
+        PatternBank(F, F + 1)           # pattern longer than fragment
+    with pytest.raises(ValueError):
+        bank.unregister(999)
+
+
+def test_as_masks_rejects_2d_query():
+    q = MatchQuery.exact(np.zeros((2, P), np.uint8), mode="batched")
+    with pytest.raises(ValueError):
+        as_masks(q)
+
+
+# -- residency protocol -------------------------------------------------------
+
+def test_pack_counters_flat_across_lifecycle():
+    rng, docs = make_docs()
+    # One planted pattern keeps the prefilter from pruning the whole bank,
+    # so the verify operand actually packs (once).
+    bank, pids = make_bank(4, docs=docs, planted=[(0, 8)], filter=True)
+    for _ in range(3):
+        bank.scan(docs)
+    extra = bank.register(rng.integers(0, 4, P, np.uint8), threshold=P)
+    bank.scan(docs)
+    bank.unregister(pids[1])
+    bank.scan(docs)
+    # Growth past capacity: reserve doubles, no repack.
+    for _ in range(bank.capacity):
+        bank.register(rng.integers(0, 4, P, np.uint8), threshold=P)
+    bank.scan(docs)
+    assert bank.plane_pack_count == 1
+    assert bank.sig_pack_count == 1
+    assert bank.slot_update_count > 0        # splices, not packs
+    assert bank.capacity > 4                 # growth happened in place
+
+
+def test_unregister_swap_keeps_slots_dense():
+    _, docs = make_docs()
+    bank, pids = make_bank(5)
+    bank.scan(docs)                          # pack before mutating
+    bank.unregister(pids[1])                 # middle: last slot swaps in
+    bank.unregister(pids[4])                 # the swapped-in one again
+    assert bank.n_live == 3
+    live = set(int(x) for x in bank.live_ids())
+    assert live == {pids[0], pids[2], pids[3]}
+    # Device forms stay correct after the swaps: hits match ad-hoc.
+    t = bank.scan(docs)
+    for pid in live:
+        mine = t.hits[t.hits[:, 2] == pid][:, [0, 1, 3]]
+        assert np.array_equal(adhoc_hits(docs, bank, pid), mine)
+
+
+def test_lazy_pack_defers_until_first_scan():
+    bank, _ = make_bank(3)
+    assert bank.plane_pack_count == 0 and bank.sig_pack_count == 0
+    assert bank.slot_update_count == 0       # nothing resident to splice
+
+
+# -- one fused launch + bit-identity ------------------------------------------
+
+def test_scan_is_one_launch_any_bank_size():
+    _, docs = make_docs()
+    for n in (1, 7, 40):
+        bank, _ = make_bank(n, capacity=64)
+        before = bank.n_bank_launches
+        bank.scan(docs)
+        assert bank.n_bank_launches - before == 1
+
+
+def test_hits_bit_identical_to_adhoc_compiles():
+    _, docs = make_docs(seed=3)
+    bank, pids = make_bank(
+        6, docs=docs, planted=[(2, 5), (9, 40), (9, 77)], seed=4)
+    t = bank.scan(docs)
+    assert t.hits.shape[0] >= 3
+    for pid in pids:
+        mine = t.hits[t.hits[:, 2] == pid][:, [0, 1, 3]]
+        assert np.array_equal(adhoc_hits(docs, bank, pid), mine)
+
+
+def test_hits_bit_identical_with_wildcards_and_thresholds():
+    _, docs = make_docs(seed=5)
+    bank = PatternBank(F, P, capacity=8)
+    docs[4, 10:10 + P] = 2
+    pids = [
+        bank.register("GG" + "N" * (P - 4) + "GG", threshold=P - 2),
+        bank.register("RYRYRYRYRYRYRYRY", threshold=P - 6),
+        bank.register(docs[0, 3:3 + P].copy(), threshold=P - 1),
+    ]
+    t = bank.scan(docs)
+    assert t.hits.shape[0] > 0
+    for pid in pids:
+        mine = t.hits[t.hits[:, 2] == pid][:, [0, 1, 3]]
+        assert np.array_equal(adhoc_hits(docs, bank, pid), mine)
+
+
+def test_scan_anchors_corpus_rows():
+    _, docs = make_docs(seed=3)
+    bank, _ = make_bank(4, docs=docs, planted=[(2, 5)], seed=4)
+    t = bank.scan(docs, base_row=100)
+    assert (t.corpus_rows == 100 + t.hits[:, 0]).all()
+    assert bank.scan(docs).corpus_rows is None
+
+
+def test_empty_batch_and_empty_bank_launch_nothing():
+    _, docs = make_docs()
+    bank, _ = make_bank(3)
+    t = bank.scan(np.zeros((0, F), np.uint8))
+    assert t.hits.shape == (0, 4) and bank.n_bank_launches == 0
+    empty = PatternBank(F, P)
+    t = empty.scan(docs)
+    assert t.hits.shape == (0, 4) and empty.n_bank_launches == 0
+    assert empty.n_scans == 0
+
+
+# -- pattern-side prefilter ---------------------------------------------------
+
+def test_bank_prefilter_kernel_matches_oracle():
+    rng = np.random.default_rng(7)
+    Q, Wb, D = 2 * FILTER_ROW_TILE, 8, 16
+    psigs = rng.integers(0, 1 << 32, (Q, Wb), np.uint64).astype(np.uint32)
+    dsigs = rng.integers(0, 1 << 32, (D, Wb), np.uint64).astype(np.uint32)
+    slacks = rng.integers(-2, 260, (Q, 1)).astype(np.int32)
+    got = np.asarray(bank_prefilter(psigs, dsigs, slacks,
+                                    interpret=True))[:, 0]
+    assert np.array_equal(got, bank_prefilter_ref(psigs, dsigs, slacks))
+
+
+def test_bank_prefilter_validates():
+    z = np.zeros((FILTER_ROW_TILE, 8), np.uint32)
+    s = np.zeros((FILTER_ROW_TILE, 1), np.int32)
+    with pytest.raises(ValueError):
+        bank_prefilter(z[:-1], z[:4], s[:-1], interpret=True)
+    with pytest.raises(ValueError):
+        bank_prefilter(z, z[:4, :-1], s, interpret=True)
+    with pytest.raises(ValueError):
+        bank_prefilter(z, z[:4], s[:-1], interpret=True)
+
+
+_REALIZE = {"A": 0, "C": 1, "G": 2, "T": 3, "N": 0, "R": 0, "Y": 1}
+
+
+@pytest.mark.parametrize("kind", ["exact", "wildcard", "iupac"])
+def test_prefilter_zero_false_negatives(kind):
+    """Forced-filter hits == forced-scan hits on every pattern flavor."""
+    rng = np.random.default_rng(11)
+    docs = rng.integers(0, 4, (32, F), np.uint8)
+    specs = []
+    for i in range(8):
+        s = "".join("ACGT"[c] for c in rng.integers(0, 4, P, np.uint8))
+        if kind == "wildcard":
+            s = "NNNN" + s[4:]
+        elif kind == "iupac":
+            s = "RYRY" + s[4:]
+        specs.append(s)
+        if i < 4:
+            # Plant a realization consistent with the ambiguity codes
+            # (R -> A, Y -> C) so real hits exist for the filter to keep.
+            real = np.array([_REALIZE[ch] for ch in s], np.uint8)
+            docs[i, 3 + 11 * i:3 + 11 * i + P] = real
+    tickets = {}
+    for mode in (True, False):
+        bank = PatternBank(F, P, capacity=8, filter=mode)
+        for s in specs:
+            bank.register(s, threshold=P - 2)
+        tickets[mode] = bank.scan(docs)
+        assert bank.n_prefilter_launches == (1 if mode else 0)
+    # Same registration order -> same pattern ids, and survivors keep
+    # ascending slot order, so the hit arrays must be exactly equal.
+    assert tickets[False].hits.shape[0] >= 4    # planted hits fired
+    assert np.array_equal(tickets[True].hits, tickets[False].hits)
+    assert tickets[True].n_verified <= tickets[False].n_verified
+
+
+def test_prefilter_prunes_and_calibrates():
+    _, docs = make_docs(n=16, seed=13)
+    bank, pids = make_bank(12, docs=docs, planted=[(0, 8)], seed=14,
+                           filter=True)
+    t = bank.scan(docs)
+    assert t.plan.strategy == "filter"
+    assert t.survivor_frac is not None and t.survivor_frac < 1.0
+    assert bank.last_survivor_frac == t.survivor_frac
+    assert bank.stats()["calibration"] is not None
+    # The planted pattern survived and fired.
+    assert pids[0] in set(int(x) for x in t.hits[:, 2])
+
+
+def test_unsatisfiable_threshold_never_fires():
+    _, docs = make_docs()
+    bank = PatternBank(F, P, capacity=4, filter=True)
+    pid = bank.register(docs[0, :P].copy(), threshold=P + 5)
+    t = bank.scan(docs)
+    assert t.hits.shape[0] == 0
+    assert bank.pattern(pid).slack < 0
+
+
+def test_plan_bank_pricing():
+    pl = Planner()
+    scan = pl.plan_bank(n_docs=8, fragment_chars=F, pattern_chars=P,
+                        n_patterns=4, sig_words=8, survivor_frac=0.9,
+                        prunable=False)
+    assert scan.strategy == "scan" and scan.est_filter_seconds == 0.0
+    forced = pl.plan_bank(n_docs=8, fragment_chars=F, pattern_chars=P,
+                          n_patterns=4, sig_words=8, survivor_frac=0.9,
+                          prunable=True, force=True)
+    assert forced.strategy == "filter"
+    off = pl.plan_bank(n_docs=8, fragment_chars=F, pattern_chars=P,
+                       n_patterns=4, sig_words=8, survivor_frac=0.01,
+                       prunable=True, force=False)
+    assert off.strategy == "scan"
+    # Selective big bank: the two-stage path must eventually win.
+    big = pl.plan_bank(n_docs=64, fragment_chars=F, pattern_chars=P,
+                       n_patterns=4096, sig_words=8, survivor_frac=0.001,
+                       prunable=True)
+    assert big.strategy == "filter"
+    assert big.est_seconds < big.est_scan_seconds
+    with pytest.raises(ValueError):
+        pl.plan_bank(n_docs=0, fragment_chars=F, pattern_chars=P,
+                     n_patterns=1, sig_words=8, survivor_frac=1.0)
+
+
+# -- TTL ----------------------------------------------------------------------
+
+def test_ttl_expiry():
+    clock = [0.0]
+    _, docs = make_docs(seed=3)
+    bank = PatternBank(F, P, capacity=4, clock=lambda: clock[0])
+    planted = docs[2, 5:5 + P].copy()
+    a = bank.register(planted, threshold=P, ttl_s=10.0)
+    b = bank.register(planted, threshold=P)           # immortal twin
+    clock[0] = 5.0
+    t = bank.scan(docs)
+    assert {a, b} <= set(int(x) for x in t.hits[:, 2])
+    clock[0] = 10.0
+    assert bank.expire() == [a]
+    t = bank.scan(docs)
+    hit_ids = set(int(x) for x in t.hits[:, 2])
+    assert b in hit_ids and a not in hit_ids
+    assert bank.n_expired == 1 and bank.n_live == 1
+
+
+# -- windowed corpus (tombstones + compaction) --------------------------------
+
+def window_pair(n=40, window=24, seed=21):
+    """(windowed corpus engine, from-scratch engine over the live rows)."""
+    rng = np.random.default_rng(seed)
+    frags = rng.integers(0, 4, (n, F), np.uint8)
+    corpus = PackedCorpus(frags)
+    corpus.tombstone(np.arange(n - window))
+    fresh = PackedCorpus(frags[n - window:])
+    return rng, corpus, MatchEngine(corpus), MatchEngine(fresh), n - window
+
+
+@pytest.mark.parametrize("reduction", ["threshold", "topk", "full", "best"])
+def test_tombstones_match_fresh_window(reduction):
+    rng, corpus, eng, fresh_eng, shift = window_pair()
+    pat = np.array(corpus.fragments[corpus.live_row_ids()[3]][7:7 + P])
+    kw = (dict(threshold=P - 4) if reduction == "threshold"
+          else dict(k=5) if reduction == "topk" else {})
+    res = eng.match(pat, reduction=reduction, **kw)
+    ref = fresh_eng.match(pat, reduction=reduction, **kw)
+    if reduction == "threshold":
+        moved = ref.hits.copy()
+        if moved.size:
+            moved[:, 0] += shift
+        assert np.array_equal(res.hits, moved)
+    elif reduction == "topk":
+        assert np.array_equal(res.topk_rows, ref.topk_rows + shift)
+        assert np.array_equal(res.topk_scores, ref.topk_scores)
+    elif reduction == "full":
+        live = res.scores[shift:]
+        assert np.array_equal(live, ref.scores)
+        assert (res.scores[:shift] == -1).all()      # dead-row sentinel
+    else:
+        assert np.array_equal(res.best_scores[shift:], ref.best_scores)
+        assert (res.best_scores[:shift] == -1).all()
+
+
+def test_tombstone_validates_and_counts():
+    _, corpus, *_ = window_pair()
+    n = corpus.n_rows
+    assert corpus.n_live == 24 and corpus.n_dead == n - 24
+    assert corpus.tombstone(np.array([0])) == 0       # already dead: no-op
+    gen = corpus.generation
+    assert corpus.tombstone(np.zeros(0, np.int64)) == 0
+    assert corpus.generation == gen                   # no-op: no bump
+    with pytest.raises(ValueError):
+        corpus.tombstone(np.array([n]))
+
+
+def test_compaction_preserves_results_with_flat_packs():
+    rng, corpus, eng, fresh_eng, shift = window_pair()
+    # Copy: compact() rewrites the fragment buffer this view aliases.
+    pat = np.array(corpus.fragments[corpus.live_row_ids()[0]][11:11 + P])
+    eng.match(pat)                                    # pack the forms
+    packs = corpus.swar_pack_count
+    freed = corpus.compact()
+    assert freed == shift and corpus.n_dead == 0
+    assert corpus.n_rows == corpus.n_live == 24
+    assert corpus.swar_pack_count == packs            # splice, not repack
+    res = eng.match(pat, reduction="threshold", threshold=P - 4)
+    ref = fresh_eng.match(pat, reduction="threshold", threshold=P - 4)
+    assert np.array_equal(res.hits, ref.hits)         # rows now align
+
+
+def test_compiled_rows_subset_stale_after_compact():
+    _, corpus, eng, _, _ = window_pair()
+    q = MatchQuery.exact(np.array(corpus.fragments[30][:P]),
+                         rows=np.arange(30, 40))
+    cm = eng.compile(q)
+    cm.run()
+    corpus.compact()                                  # n_rows shrinks to 24
+    with pytest.raises(IndexError):
+        cm.run()
+
+
+def test_filtered_query_skips_tombstoned_rows():
+    rng = np.random.default_rng(23)
+    frags = rng.integers(0, 4, (48, F), np.uint8)
+    pat = frags[5, 9:9 + P].copy()
+    frags[40, 9:9 + P] = pat                          # live twin
+    eng = MatchEngine(PackedCorpus(frags))
+    eng.corpus.tombstone(np.array([5]))
+    res = eng.match(MatchQuery.exact(pat, reduction="threshold",
+                                     threshold=P, filter=True))
+    rows = set(int(r) for r in res.hits[:, 0])
+    assert 40 in rows and 5 not in rows
+
+
+# -- service integration ------------------------------------------------------
+
+def make_service(seed=31, window=None, bank_kw=None, **kw):
+    rng = np.random.default_rng(seed)
+    frags = rng.integers(0, 4, (24, F), np.uint8)
+    eng = MatchEngine(PackedCorpus(frags, capacity=256))
+    bank = PatternBank(F, P, capacity=8, **(bank_kw or {}))
+    svc = MatchService(eng, bank=bank, window_rows=window, **kw)
+    return rng, eng, bank, svc
+
+
+def test_empty_ingest_is_noop():
+    rng, eng, bank, svc = make_service()
+    gen = eng.corpus.generation
+    # Seed the result cache, then prove the empty ingest doesn't drop it.
+    q = MatchQuery.exact(rng.integers(0, 4, P, np.uint8))
+    svc.submit(q).wait()
+    t = svc.ingest(np.zeros((0, F), np.uint8))
+    assert t.done and t.n == 0 and t.start == eng.corpus.n_rows
+    svc.tick()
+    assert eng.corpus.generation == gen
+    assert svc.stats.n_ingest_batches == 0
+    assert svc.stats.n_bank_launches == 0
+    tk = svc.submit(q)
+    svc.tick()
+    assert tk.cached                                   # cache survived
+
+
+def test_ingest_scans_bank_once_before_splice():
+    rng, eng, bank, svc = make_service()
+    docs = rng.integers(0, 4, (10, F), np.uint8)
+    got = []
+    pid = bank.register(
+        docs[4, 20:20 + P].copy(), threshold=P,
+        on_hit=lambda p, h: got.append((p, eng.corpus.n_rows)))
+    base = eng.corpus.n_rows
+    t1 = svc.ingest(docs[:6])
+    t2 = svc.ingest(docs[6:])
+    before = svc.stats.n_bank_launches
+    svc.tick()
+    # One fused launch covered both same-tick submissions...
+    assert svc.stats.n_bank_launches - before == 1
+    # ...and fired before the rows spliced in.
+    assert got and got[0][1] == base
+    bt = t1.bank_ticket
+    assert bt is t2.bank_ticket and bt.base_row == base
+    assert (bt.corpus_rows == base + bt.hits[:, 0]).all()
+    assert {(4, 20)} <= {(int(h[0]), int(h[1])) for h in bt.hits}
+    assert svc.stats.n_bank_hits == bt.hits.shape[0]
+    snap = svc.stats.snapshot()
+    assert snap["n_bank_launches"] == 1
+    assert snap["bank"]["hits_by_pattern"][pid] >= 1
+
+
+def test_service_ttl_expires_before_scan():
+    clock = [0.0]
+    rng, eng, bank, svc = make_service(
+        bank_kw=dict(clock=lambda: clock[0]))
+    docs = rng.integers(0, 4, (4, F), np.uint8)
+    pid = bank.register(docs[0, 3:3 + P].copy(), threshold=P, ttl_s=1.0)
+    clock[0] = 2.0
+    t = svc.ingest(docs)
+    svc.tick()
+    assert bank.n_live == 0 and bank.n_expired == 1
+    assert t.bank_ticket.hits.shape[0] == 0
+
+
+def test_sliding_window_eviction_end_to_end():
+    rng, eng, bank, svc = make_service(window=30, compact_dead_frac=0.3)
+    for _ in range(5):
+        svc.ingest(rng.integers(0, 4, (8, F), np.uint8))
+        svc.tick()
+    corpus = eng.corpus
+    assert corpus.n_live == 30
+    assert svc.stats.n_evicted_rows == 24 + 5 * 8 - 30
+    assert svc.stats.n_compactions == corpus.n_compactions > 0
+    # The window holds exactly the newest 30 rows, query-visible.
+    planted = np.array(corpus.fragments[corpus.live_row_ids()[-1]])
+    res = svc.match(MatchQuery.exact(planted[:P], reduction="threshold",
+                                     threshold=P))
+    assert res.hits.shape[0] >= 1

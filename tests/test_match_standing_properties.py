@@ -1,0 +1,150 @@
+"""Randomized properties of the standing-query bank (hypothesis-driven;
+DESIGN.md Sec. 3j).
+
+Split out behind ``importorskip`` so a missing ``hypothesis`` install
+skips only this module (repo convention, see
+``test_kernels_properties.py``).
+
+Properties:
+
+* **prefilter conservativeness, roles swapped** -- for ANY bank (random
+  wildcard mixes, random thresholds incl. unsatisfiable ones) and ANY
+  document batch, the forced-prefilter scan returns hits exactly equal
+  to the forced-full-scan (the pattern-side q-gram lemma may only drop
+  patterns that provably cannot fire);
+* **fused launch = ad-hoc compiles** -- every live pattern's hit stream
+  out of the one roles-swapped launch is bit-identical to compiling
+  that pattern as an ad-hoc threshold query over the same docs;
+* **lifecycle invariants** -- under ANY register/unregister/scan
+  interleaving the live slots stay dense, pack counters stay <= 1, and
+  the bank keeps answering exactly like a fresh bank holding the same
+  surviving patterns.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.match import (MatchEngine, PackedCorpus,  # noqa: E402
+                         PatternBank)
+
+
+def random_masks(rng, p, wild_frac):
+    codes = rng.integers(0, 4, p, np.uint8)
+    masks = (np.uint8(1) << codes).astype(np.uint8)
+    wild = rng.random(p) < wild_frac
+    masks[wild] = rng.integers(1, 16, int(wild.sum()), np.uint8)
+    return masks
+
+
+def spell(masks):
+    """Accept masks -> IUPAC string (the bank registers any spelling)."""
+    from repro.core.encoding import IUPAC_MASKS
+    inv = {v: k for k, v in IUPAC_MASKS.items()}
+    return "".join(inv[int(m)] for m in masks)
+
+
+class TestStandingProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31), st.data())
+    def test_property_prefilter_never_loses_a_hit(self, seed, data):
+        rng = np.random.default_rng(seed)
+        d, f = int(rng.integers(1, 16)), int(rng.integers(24, 64))
+        p = int(rng.integers(4, min(f, 20)))
+        wild = data.draw(st.sampled_from([0.0, 0.2, 0.5]))
+        n_pat = int(rng.integers(1, 12))
+        docs = rng.integers(0, 4, (d, f), np.uint8)
+        specs, thrs = [], []
+        for i in range(n_pat):
+            masks = random_masks(rng, p, wild)
+            specs.append(spell(masks))
+            # Thresholds sweep satisfiable -> unsatisfiable (> p).
+            thrs.append(float(rng.integers(0, p + 2)))
+            if rng.random() < 0.5:
+                # Plant the lowest accepted code per position: a real
+                # qualifying window for any threshold <= p.
+                row = int(rng.integers(0, d))
+                off = int(rng.integers(0, f - p + 1))
+                lowest = np.array([0, 0, 1, 0, 2, 0, 1, 0,
+                                   3, 0, 1, 0, 2, 0, 1, 0], np.uint8)
+                docs[row, off:off + p] = lowest[masks]
+        tickets = {}
+        for mode in (True, False):
+            bank = PatternBank(f, p, capacity=n_pat, filter=mode,
+                               interpret=True)
+            for s, t in zip(specs, thrs):
+                bank.register(s, threshold=t)
+            tickets[mode] = bank.scan(docs)
+        np.testing.assert_array_equal(tickets[True].hits,
+                                      tickets[False].hits)
+        assert tickets[True].n_verified <= tickets[False].n_verified
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_bank_hits_equal_adhoc_compiles(self, seed):
+        rng = np.random.default_rng(seed)
+        d, f = int(rng.integers(1, 12)), int(rng.integers(24, 56))
+        p = int(rng.integers(4, min(f, 18)))
+        docs = rng.integers(0, 4, (d, f), np.uint8)
+        bank = PatternBank(f, p, capacity=8, interpret=True)
+        pids = []
+        for i in range(int(rng.integers(1, 8))):
+            masks = random_masks(rng, p, float(rng.random() * 0.4))
+            thr = float(rng.integers(max(0, p - 4), p + 1))
+            if rng.random() < 0.6:
+                row = int(rng.integers(0, d))
+                off = int(rng.integers(0, f - p + 1))
+                lowest = np.array([0, 0, 1, 0, 2, 0, 1, 0,
+                                   3, 0, 1, 0, 2, 0, 1, 0], np.uint8)
+                docs[row, off:off + p] = lowest[masks]
+            pids.append(bank.register(spell(masks), threshold=thr))
+        t = bank.scan(docs)
+        eng = MatchEngine(PackedCorpus(docs), interpret=True)
+        for pid in pids:
+            mine = t.hits[t.hits[:, 2] == pid][:, [0, 1, 3]]
+            ref = eng.match(bank.pattern(pid).query).hits
+            np.testing.assert_array_equal(mine, ref)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_property_lifecycle_keeps_invariants(self, seed):
+        rng = np.random.default_rng(seed)
+        f, p = 40, 8
+        docs = rng.integers(0, 4, (6, f), np.uint8)
+        bank = PatternBank(f, p, capacity=2, interpret=True)
+        live = {}
+        for step in range(20):
+            op = rng.random()
+            if op < 0.55 or not live:
+                pat = rng.integers(0, 4, p, np.uint8)
+                if rng.random() < 0.5:
+                    docs[int(rng.integers(0, 6)), 3:3 + p] = pat
+                thr = float(rng.integers(p - 2, p + 1))
+                pid = bank.register(pat, threshold=thr)
+                live[pid] = (pat, thr)
+            elif op < 0.8:
+                pid = int(rng.choice(list(live)))
+                bank.unregister(pid)
+                del live[pid]
+            else:
+                bank.scan(docs)
+            assert bank.n_live == len(live)
+            assert set(int(x) for x in bank.live_ids()) == set(live)
+            assert bank.plane_pack_count <= 1
+            assert bank.sig_pack_count <= 1
+        # The survivors answer exactly like a fresh bank of the same
+        # patterns (fresh ids follow registration order = slot order of
+        # nothing in particular, so compare per-pattern by position).
+        fresh = PatternBank(f, p, capacity=max(1, len(live)),
+                            interpret=True)
+        remap = {fresh.register(pat, threshold=thr): pid
+                 for pid, (pat, thr) in live.items()}
+        told, tnew = bank.scan(docs), fresh.scan(docs)
+        by_old = {int(k): v[:, [0, 1, 3]]
+                  for k, v in told.by_pattern().items()}
+        for fid, pid in remap.items():
+            mine = tnew.hits[tnew.hits[:, 2] == fid][:, [0, 1, 3]]
+            theirs = by_old.get(pid, np.zeros((0, 3), np.int64))
+            np.testing.assert_array_equal(mine, theirs)
