@@ -65,8 +65,9 @@ SMOKE = dict(repeats=1, shapes=SMOKE_SHAPES, fb=dict(R=2048, F=128, P=16),
              fb_runs=6, tol=1.5)
 
 REQUIRED_KEYS = ("interpret", "smoke", "device_kind", "backend",
-                 "calibration", "table", "decisions", "n_decisions_differ",
-                 "never_slower", "feedback")
+                 "calibration", "n_processes", "n_hosts", "table",
+                 "decisions", "n_decisions_differ", "never_slower",
+                 "feedback")
 REQUIRED_NS_KEYS = ("shape", "static_choice", "calibrated_choice", "differs",
                     "static_s", "calibrated_s", "ratio", "ok")
 REQUIRED_FB_KEYS = ("runs", "static_base_s", "est_s", "observed_s", "ratio",

@@ -46,7 +46,8 @@ SMOKE = dict(R=1024, F=128, P=16, planted=12, thr_offs=(0,),
              dense_thr=4, repeats=1, force=True)
 
 REQUIRED_KEYS = ("shape", "device_kind", "backend", "calibration",
-                 "interpret", "smoke", "index", "dense_strategy", "results")
+                 "n_processes", "n_hosts", "interpret", "smoke", "index",
+                 "dense_strategy", "results")
 REQUIRED_RESULT_KEYS = ("case", "strategy", "scan_s", "filtered_s",
                         "speedup", "survivor_frac", "n_hits", "identical",
                         "oracle_ok")

@@ -43,7 +43,7 @@ SMOKE = dict(R0=16, F=128, P=16, n_docs=24, ingest_batch=4, q_per_tick=1,
              dedup_docs=12)
 
 REQUIRED_KEYS = ("shape", "device_kind", "backend", "calibration",
-                 "interpret", "smoke", "results")
+                 "n_processes", "n_hosts", "interpret", "smoke", "results")
 REQUIRED_RESULT_KEYS = ("scenario", "n_docs", "docs_per_s",
                         "resident_repacks", "engine_stable", "identical")
 

@@ -35,9 +35,9 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_match_engine.json"
 
 REQUIRED_KEYS = ("shape", "device_kind", "backend", "calibration",
-                 "interpret", "cold_s", "warm_s_per_query",
-                 "warm_rows_per_s", "cold_over_warm", "host_pack_count",
-                 "auto_backend", "planner_est_s")
+                 "n_processes", "n_hosts", "interpret", "cold_s",
+                 "warm_s_per_query", "warm_rows_per_s", "cold_over_warm",
+                 "host_pack_count", "auto_backend", "planner_est_s")
 
 
 def validate(record: dict) -> None:

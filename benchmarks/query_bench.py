@@ -44,7 +44,8 @@ BACKEND = "swar"
 N_WILDCARDS = 4
 
 REQUIRED_KEYS = ("shape", "kernel_backend", "device_kind", "backend",
-                 "calibration", "interpret", "smoke", "results")
+                 "calibration", "n_processes", "n_hosts", "interpret",
+                 "smoke", "results")
 REQUIRED_RESULT_KEYS = ("predicate", "uncompiled_us", "compiled_us",
                         "speedup", "identical", "oracle_ok")
 

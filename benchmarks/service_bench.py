@@ -39,8 +39,8 @@ SMOKE = dict(R=48, F=128, P=16, q_levels=(1, 8, 16), repeats=1)
 BACKEND = "swar"
 
 REQUIRED_KEYS = ("shape", "kernel_backend", "device_kind", "backend",
-                 "calibration", "interpret", "smoke", "q_levels",
-                 "results")
+                 "calibration", "n_processes", "n_hosts", "interpret",
+                 "smoke", "q_levels", "results")
 REQUIRED_RESULT_KEYS = ("Q", "seq_s", "svc_s", "seq_qps", "svc_qps",
                         "speedup", "identical", "coalesced_launches")
 

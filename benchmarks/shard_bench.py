@@ -44,6 +44,13 @@ Emits ``BENCH_match_shard.json`` at the repo root and exits nonzero if
 the record is malformed.  CI runs ``--smoke``: same pipeline, asserts
 and schema on a reduced shape (no speedup floor -- scaling needs the
 real row count), without overwriting the committed artifact.
+
+``--processes N`` (default 2 on full runs) additionally runs the
+N-process ``jax.distributed`` CPU demo (repro.launch.cluster): the same
+8-shard mesh split over N controllers must produce bit-identical
+threshold / filtered / top-k / best results with flat per-host pack
+counters, and the gated row is committed into the artifact.  The
+``multihost`` CI job runs ``--smoke --processes 2``.
 """
 
 from __future__ import annotations
@@ -54,6 +61,7 @@ import os
 import pathlib
 import sys
 import time
+from typing import Optional
 
 # Forced host devices for the shard sweep -- must land before jax
 # initializes its backend (harmless on real accelerators: the flag only
@@ -78,8 +86,12 @@ SPEEDUP_FLOOR = 3.0      # at max shards, both paths (full run only)
 BALANCE_CEIL = 1.1       # max/min live rows per shard after ingest
 
 REQUIRED_KEYS = ("shape", "device_kind", "backend", "calibration",
-                 "interpret", "smoke", "model", "cpu_count",
-                 "shards", "scan", "filtered", "false_negatives", "service")
+                 "n_processes", "n_hosts", "interpret", "smoke", "model",
+                 "cpu_count", "shards", "scan", "filtered",
+                 "false_negatives", "service")
+REQUIRED_MP_KEYS = ("n_processes", "local_devices", "n_shards", "identical",
+                    "merge_path", "collective_bytes", "pack_counts",
+                    "demo_wall_s")
 REQUIRED_RESULT_KEYS = ("shards", "local_s", "merge_s", "critical_path_s",
                         "shardmap_wall_s", "speedup", "identical")
 
@@ -266,11 +278,58 @@ def bench_service(cfg) -> dict:
     }
 
 
+def bench_multiprocess(n_processes: int) -> dict:
+    """Multi-controller row (DESIGN.md Sec. 3k): the 2-process CPU
+    ``jax.distributed`` bit-identity demo, gated before the row is
+    committed -- a non-identical result raises instead of recording."""
+    from repro.launch.cluster import run_cpu_demo
+
+    t0 = time.perf_counter()
+    summary = run_cpu_demo(n_processes=n_processes)
+    wall = time.perf_counter() - t0
+    if not summary["identical"]:
+        raise AssertionError(
+            f"multi-process run not bit-identical to single-process: "
+            f"{summary['mismatches']}")
+    m0 = summary["multiprocess"][0]
+    return {
+        "n_processes": summary["n_processes"],
+        "local_devices": summary["local_devices"],
+        "n_shards": summary["n_shards"],
+        "identical": True,
+        "merge_path": m0["merge_path"],
+        "collective_bytes": m0["collective_bytes"],
+        "n_collectives": m0["n_collectives"],
+        "pack_counts": m0["pack_counts"],
+        "single_pack_counts": summary["single"]["pack_counts"],
+        "n_stages": len(m0["results"]),
+        "demo_wall_s": round(wall, 1),
+    }
+
+
 def validate(record: dict) -> None:
     """Schema guard: fail loudly if the BENCH artifact is malformed."""
     for key in REQUIRED_KEYS:
         if key not in record:
             raise ValueError(f"BENCH record missing key {key!r}")
+    if not record["smoke"] and "multiprocess" not in record:
+        raise ValueError("full-run artifact must carry the multi-process "
+                         "row (run with --processes >= 2)")
+    if "multiprocess" in record:
+        mp = record["multiprocess"]
+        for key in REQUIRED_MP_KEYS:
+            if key not in mp:
+                raise ValueError(f"multiprocess row missing key {key!r}")
+        if not mp["identical"]:
+            raise ValueError("multi-process run not bit-identical to "
+                             "single-process")
+        if mp["merge_path"] != "device":
+            raise ValueError("multi-process run must merge device-side, "
+                             f"got {mp['merge_path']!r}")
+        if mp["pack_counts"] != mp["single_pack_counts"]:
+            raise ValueError(
+                "per-host pack counters moved vs single-process: "
+                f"{mp['pack_counts']} != {mp['single_pack_counts']}")
     if not (record["calibration"] == "static"
             or record["calibration"].startswith("calibrated:")):
         raise ValueError("malformed calibration provenance: "
@@ -320,10 +379,16 @@ def validate(record: dict) -> None:
     json.loads(json.dumps(record))      # round-trips as JSON
 
 
-def run_bench(smoke: bool) -> dict:
+def run_bench(smoke: bool, n_processes: Optional[int] = None) -> dict:
     import jax
 
     from repro.match import MatchEngine, MatchQuery
+
+    if n_processes is None:
+        # The committed artifact always carries the multi-process row;
+        # plain --smoke (the fast CI schema guard) skips it -- the
+        # multihost CI job runs --smoke --processes 2 explicitly.
+        n_processes = 0 if smoke else 2
 
     cfg = SMOKE if smoke else FULL
     if len(jax.devices()) < max(cfg["shards"]):
@@ -363,6 +428,8 @@ def run_bench(smoke: bool) -> dict:
         "false_negatives": check_false_negatives(frags, pat, cfg, rng),
         "service": bench_service(cfg),
     }
+    if n_processes >= 2:
+        record["multiprocess"] = bench_multiprocess(n_processes)
     validate(record)
     if not smoke:
         # Smoke mode (the CI schema guard) must not clobber the committed
@@ -374,6 +441,10 @@ def run_bench(smoke: bool) -> dict:
 def run(smoke: bool = False):
     """``benchmarks.run`` driver hook: (name, us_per_call, derived) rows."""
     record = run_bench(smoke)
+    if "multiprocess" in record:
+        mp = record["multiprocess"]
+        print(f"multiprocess: {mp['n_processes']}x{mp['local_devices']}dev "
+              f"identical={mp['identical']} merge={mp['merge_path']}")
     out = []
     for path in ("scan", "filtered"):
         for row in record[path]:
@@ -402,10 +473,14 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced shape, no speedup floor (CI schema guard)")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="also run the N-process jax.distributed CPU "
+                         "bit-identity demo and record a multi-process "
+                         "row (default: 2 on full runs, off with --smoke)")
     args = ap.parse_args()
     try:
-        record = run_bench(args.smoke)
-    except (ValueError, RuntimeError) as e:
+        record = run_bench(args.smoke, n_processes=args.processes)
+    except (ValueError, RuntimeError, AssertionError) as e:
         print(f"BENCH validation failed: {e}", file=sys.stderr)
         return 1
     for path in ("scan", "filtered"):
@@ -419,6 +494,13 @@ def main() -> int:
     print(f"service: shards={record['service']['n_shards']} "
           f"rows={record['service']['shard_rows']} "
           f"balance={record['service']['balance']}")
+    if "multiprocess" in record:
+        mp = record["multiprocess"]
+        print(f"multiprocess: {mp['n_processes']} procs x "
+              f"{mp['local_devices']} devices, {mp['n_shards']} shards, "
+              f"identical={mp['identical']} merge={mp['merge_path']} "
+              f"collective_bytes={mp['collective_bytes']} "
+              f"({mp['demo_wall_s']}s)")
     if args.smoke:
         print("smoke: record validated, artifact not written")
     else:

@@ -47,7 +47,8 @@ FULL = dict(n_patterns=1024, D=64, F=256, P=32, planted=24, repeats=3)
 SMOKE = dict(n_patterns=64, D=16, F=128, P=16, planted=6, repeats=1)
 
 REQUIRED_KEYS = ("shape", "device_kind", "backend", "calibration",
-                 "interpret", "smoke", "bank", "results")
+                 "n_processes", "n_hosts", "interpret", "smoke", "bank",
+                 "results")
 REQUIRED_RESULT_KEYS = ("case", "loop_s", "bank_s", "speedup",
                         "survivor_frac", "n_hits", "n_launches",
                         "identical")

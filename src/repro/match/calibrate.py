@@ -454,12 +454,19 @@ def bench_provenance(cost_source: Optional[CostSource] = None) -> dict:
     ``calibration`` is the cost-source tag that priced the run's planner
     decisions ("static" when no source was loaded), so an artifact can
     finally say what hardware -- and what cost model -- its numbers mean.
+    ``n_processes`` / ``n_hosts`` record the controller topology
+    (DESIGN.md Sec. 3k): a multi-controller artifact measured collective
+    merges, a single-controller one did not -- numbers from the two are
+    not comparable without this field.
     """
     return {
         "device_kind": device_kind(),
         "backend": backend_name(),
         "calibration": cost_source.tag if cost_source is not None
         else "static",
+        "n_processes": jax.process_count(),
+        "n_hosts": len({d.host_id if hasattr(d, "host_id")
+                        else d.process_index for d in jax.devices()}),
     }
 
 

@@ -55,6 +55,18 @@ fewest-live-rows-first), capacity growth is a per-shard zero-extension
 per-shard slot slices (no cross-device traffic while streaming).  The
 host buffer and all public row ids stay logical; only the device forms
 are permuted.
+
+**Multi-host** (DESIGN.md Sec. 3k): under ``jax.distributed`` some mesh
+shards live on other processes' devices, which eager ``device_put`` /
+``.at[].set`` / ``reshape`` cannot touch.  The first pack then goes
+through ``jax.make_array_from_callback`` -- *each process packs only the
+shard blocks it owns* (block ``s`` of the cyclic layout is exactly
+``pack(frags[s::S])``, so per-host packing is bit-identical to permuting
+a global pack), keeping pack counters flat per host -- and every
+subsequent splice or zero-extension runs as a jitted update (replicated
+host operands in, XLA writes only addressable slots).  The host
+fragment buffer stays fully replicated on every process by SPMD
+discipline: ingest calls present identical rows on all processes.
 """
 
 from __future__ import annotations
@@ -69,6 +81,8 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.core import encoding
 from repro.distributed import sharding as _sharding
 from repro.kernels import match_swar as _swar
+
+from . import merge as _merge
 
 ROW_TILE = _swar.ROW_TILE
 
@@ -239,11 +253,29 @@ class PackedCorpus:
                 or self._indexes):
             self.invalidate()
 
+    @property
+    def _multiprocess(self) -> bool:
+        """Sharded over devices some of which another process owns."""
+        return (self.n_shards > 1 and self._mesh is not None
+                and jax.process_count() > 1)
+
+    def _row_sharding(self) -> NamedSharding:
+        return NamedSharding(self._mesh, PartitionSpec(self._row_axes))
+
     def _place(self, arr) -> jnp.ndarray:
-        """Device placement: NamedSharding over the row axes when sharded."""
+        """Device placement: NamedSharding over the row axes when sharded.
+
+        Multi-controller, ``arr`` is a replicated *host* array (identical
+        on every process); each process materializes only the shard
+        blocks its own devices hold.
+        """
         if self.n_shards > 1 and self._mesh is not None:
-            return jax.device_put(
-                arr, NamedSharding(self._mesh, PartitionSpec(self._row_axes)))
+            ns = self._row_sharding()
+            if jax.process_count() > 1:
+                a = np.asarray(arr)
+                return jax.make_array_from_callback(
+                    a.shape, ns, lambda idx: a[idx])
+            return jax.device_put(arr, ns)
         return jnp.asarray(arr)
 
     def _grow_form_rows(self, form: jnp.ndarray, c_pad: int) -> jnp.ndarray:
@@ -253,7 +285,10 @@ class PackedCorpus:
         *inside* each shard's block -- reshape (S, J_old, w), pad slot
         axis, reshape back -- so every resident row keeps its shard and
         slot (growth stays in place per shard) and the result re-places
-        onto the same NamedSharding.
+        onto the same NamedSharding.  Multi-controller the same program
+        runs jitted (growth events are O(log capacity) per lifetime, so
+        a fresh trace per doubling is fine): eager reshape of a
+        non-addressable array would throw.
         """
         S, w = self.n_shards, form.shape[1]
         if S == 1:
@@ -261,10 +296,23 @@ class PackedCorpus:
                 [form, jnp.zeros((c_pad - form.shape[0], w), form.dtype)], 0)
             return self._place(grown)
         j_old, j_new = form.shape[0] // S, c_pad // S
-        f3 = form.reshape(S, j_old, w)
-        f3 = jnp.concatenate(
-            [f3, jnp.zeros((S, j_new - j_old, w), form.dtype)], 1)
-        return self._place(f3.reshape(S * j_new, w))
+
+        def grow(f):
+            f3 = f.reshape(S, j_old, w)
+            f3 = jnp.concatenate(
+                [f3, jnp.zeros((S, j_new - j_old, w), f.dtype)], 1)
+            return f3.reshape(S * j_new, w)
+
+        if self._multiprocess:
+            return jax.jit(grow, out_shardings=self._row_sharding())(form)
+        return self._place(grow(form))
+
+    def _grow_form_cols(self, form: jnp.ndarray, grow: int) -> jnp.ndarray:
+        """Zero-extend a device form's word/column axis, in place per row."""
+        if self._multiprocess:
+            return jax.jit(lambda f: jnp.pad(f, ((0, 0), (0, grow))),
+                           out_shardings=self._row_sharding())(form)
+        return self._place(jnp.pad(form, ((0, 0), (0, grow))))
 
     def attach_index(self, index) -> None:
         """Register a derived-form observer (see ``match.index``).
@@ -304,25 +352,55 @@ class PackedCorpus:
         whole capacity and appends are pure row splices.
         """
         if self._swar is None:
-            words = encoding.pack_codes_u32(self._frags)
-            c_pad = self.capacity_padded
-            if c_pad > words.shape[0]:
-                words = np.concatenate(
-                    [words, np.zeros((c_pad - words.shape[0], words.shape[1]),
-                                     np.uint32)], 0)
-            if words.shape[1] < need_words:
-                words = np.concatenate(
-                    [words, np.zeros((c_pad, need_words - words.shape[1]),
-                                     np.uint32)], 1)
-            words = _sharding.cyclic_permute(words, self.n_shards)
-            self._swar = self._place(words)
+            if self._multiprocess:
+                self._swar = self._build_swar_per_host(need_words)
+            else:
+                words = encoding.pack_codes_u32(self._frags)
+                c_pad = self.capacity_padded
+                if c_pad > words.shape[0]:
+                    words = np.concatenate(
+                        [words,
+                         np.zeros((c_pad - words.shape[0], words.shape[1]),
+                                  np.uint32)], 0)
+                if words.shape[1] < need_words:
+                    words = np.concatenate(
+                        [words, np.zeros((c_pad, need_words - words.shape[1]),
+                                         np.uint32)], 1)
+                words = _sharding.cyclic_permute(words, self.n_shards)
+                self._swar = self._place(words)
             self.swar_pack_count += 1
         elif self._swar.shape[1] < need_words:
-            grow = need_words - self._swar.shape[1]
-            self._swar = self._place(jnp.concatenate(
-                [self._swar,
-                 jnp.zeros((self._swar.shape[0], grow), jnp.uint32)], 1))
+            self._swar = self._grow_form_cols(
+                self._swar, need_words - self._swar.shape[1])
         return self._swar
+
+    def _build_swar_per_host(self, need_words: int) -> jnp.ndarray:
+        """First SWAR pack, multi-controller: each process packs only the
+        shard blocks its devices own.
+
+        Block ``s`` of ``cyclic_permute(pack(frags))`` is exactly
+        ``pack(frags[s::S])`` (packing is row-wise), so per-host packing
+        reproduces the single-process layout bit for bit while every
+        host does ~1/P of the packing work.  Reserved rows are zero
+        codes and pack to zero words, matching the zero row padding.
+        """
+        S, c_pad = self.n_shards, self.capacity_padded
+        J = c_pad // S
+        W = max(encoding.pack_codes_u32(self._frags[:1]).shape[1],
+                need_words)
+        blocks: dict = {}
+
+        def cb(index):
+            s = (index[0].start or 0) // J
+            blk = blocks.get(s)
+            if blk is None:
+                words = encoding.pack_codes_u32(self._frags[s::S])
+                blk = np.zeros((J, W), np.uint32)
+                blk[:words.shape[0], :words.shape[1]] = words
+                blocks[s] = blk
+            return blk
+        return jax.make_array_from_callback(
+            (c_pad, W), self._row_sharding(), cb)
 
     # -- one-hot form ----------------------------------------------------------
     def onehot_flat(self, f_chars: int) -> jnp.ndarray:
@@ -334,26 +412,59 @@ class PackedCorpus:
         chunks divide evenly over the mesh.
         """
         if self._onehot is None:
-            base = _one_hot_flat(self._frags)
-            base[self._n_rows:] = 0.0         # reserved rows: all-zero
-            c_pad = self.capacity_padded
-            if c_pad > base.shape[0]:
-                base = np.concatenate(
-                    [base, np.zeros((c_pad - base.shape[0], base.shape[1]),
-                                    np.float32)], 0)
-            need = max(f_chars, self.fragment_chars) * 4
-            if base.shape[1] < need:
-                base = np.concatenate(
-                    [base, np.zeros((base.shape[0], need - base.shape[1]),
-                                    np.float32)], 1)
-            base = _sharding.cyclic_permute(base, self.n_shards)
-            self._onehot = self._place(jnp.asarray(base, jnp.bfloat16))
+            if self._multiprocess:
+                self._onehot = self._build_onehot_per_host(f_chars)
+            else:
+                base = _one_hot_flat(self._frags)
+                base[self._n_rows:] = 0.0     # reserved rows: all-zero
+                c_pad = self.capacity_padded
+                if c_pad > base.shape[0]:
+                    base = np.concatenate(
+                        [base,
+                         np.zeros((c_pad - base.shape[0], base.shape[1]),
+                                  np.float32)], 0)
+                need = max(f_chars, self.fragment_chars) * 4
+                if base.shape[1] < need:
+                    base = np.concatenate(
+                        [base, np.zeros((base.shape[0],
+                                         need - base.shape[1]),
+                                        np.float32)], 1)
+                base = _sharding.cyclic_permute(base, self.n_shards)
+                self._onehot = self._place(jnp.asarray(base, jnp.bfloat16))
             self.onehot_pack_count += 1
         elif self._onehot.shape[1] < f_chars * 4:
-            grow = f_chars * 4 - self._onehot.shape[1]
-            self._onehot = self._place(
-                jnp.pad(self._onehot, ((0, 0), (0, grow))))
+            self._onehot = self._grow_form_cols(
+                self._onehot, f_chars * 4 - self._onehot.shape[1])
         return self._onehot
+
+    def _build_onehot_per_host(self, f_chars: int) -> jnp.ndarray:
+        """First one-hot pack, multi-controller: per-host shard blocks.
+
+        Shard ``s`` holds logical rows ``s::S``; its first
+        ``ceil((n_rows - s) / S)`` slots are live and the rest must be
+        all-zero one-hot (code-0 reserved rows would otherwise read as
+        'A' columns), exactly as the single-process build zeroes
+        ``base[n_rows:]`` before permuting.
+        """
+        S, c_pad = self.n_shards, self.capacity_padded
+        J = c_pad // S
+        need = max(f_chars, self.fragment_chars) * 4
+        n = self._n_rows
+        blocks: dict = {}
+
+        def cb(index):
+            s = (index[0].start or 0) // J
+            blk = blocks.get(s)
+            if blk is None:
+                oh = _one_hot_flat(self._frags[s::S])
+                live_s = max(0, (n - s + S - 1) // S)
+                oh[live_s:] = 0.0
+                blk = np.zeros((J, need), np.float32)
+                blk[:oh.shape[0], :oh.shape[1]] = oh
+                blocks[s] = blk = np.asarray(blk, dtype=jnp.bfloat16)
+            return blk
+        return jax.make_array_from_callback(
+            (c_pad, need), self._row_sharding(), cb)
 
     # -- growth ----------------------------------------------------------------
     def reserve(self, capacity: int) -> None:
@@ -430,10 +541,11 @@ class PackedCorpus:
         """
         n = rows.shape[0]
         phys = None
+        mp = self._multiprocess
         if self.n_shards > 1:
-            phys = jnp.asarray(_sharding.cyclic_physical_rows(
+            phys = _sharding.cyclic_physical_rows(
                 np.arange(start, start + n), self.n_shards,
-                self.shard_stride))
+                self.shard_stride)
         if self._swar is not None:
             words = encoding.pack_codes_u32(rows)
             w = self._swar.shape[1]
@@ -443,8 +555,15 @@ class PackedCorpus:
             if phys is None:
                 self._swar = self._swar.at[start:start + n, :].set(
                     jnp.asarray(words))
+            elif mp:
+                # Jitted scatter with replicated host operands: every
+                # process computes the same update, XLA writes only the
+                # slots its devices hold (eager .at[] would throw on
+                # non-addressable shards).
+                self._swar = _merge.scatter_rows(self._swar, phys, words)
             else:
-                self._swar = self._swar.at[phys, :].set(jnp.asarray(words))
+                self._swar = self._swar.at[jnp.asarray(phys), :].set(
+                    jnp.asarray(words))
         if self._onehot is not None:
             oh = _one_hot_flat(rows)
             w = self._onehot.shape[1]
@@ -454,8 +573,11 @@ class PackedCorpus:
             if phys is None:
                 self._onehot = self._onehot.at[start:start + n, :].set(
                     jnp.asarray(oh, jnp.bfloat16))
+            elif mp:
+                self._onehot = _merge.scatter_rows(
+                    self._onehot, phys, np.asarray(oh, dtype=jnp.bfloat16))
             else:
-                self._onehot = self._onehot.at[phys, :].set(
+                self._onehot = self._onehot.at[jnp.asarray(phys), :].set(
                     jnp.asarray(oh, jnp.bfloat16))
         for ix in self._indexes:
             ix._on_rows_written(start, rows)

@@ -26,16 +26,21 @@ accept-set queries (IUPAC, N wildcards, character classes) ride the
 bit-plane SWAR variant / multi-hot MXU matrix -- same resident corpus
 forms either way.
 
-Sharding (DESIGN.md Sec. 3h): with a ``jax.sharding.Mesh`` the corpus rows
-distribute over the mesh axes mapped by the ``rows`` logical axis
+Sharding (DESIGN.md Sec. 3h/3k): with a ``jax.sharding.Mesh`` the corpus
+rows distribute over the mesh axes mapped by the ``rows`` logical axis
 (``distributed.sharding``).  Device forms and q-gram signatures live in
 the *cyclic physical layout* (logical row r -> shard r % S, slot r // S)
 under a ``NamedSharding``; chunks slice per-shard slot blocks (no
 cross-device traffic), kernels run under ``shard_map``, and reductions
-are shard-local with a small host-side cross-shard merge that is
-bit-identical to the single-shard result -- the direct analogue of the
-paper's array-level parallelism (Sec. 3.4: arrays compute independently,
-the host merges scores) and of Jun et al.'s multi-engine fan-out.
+merge **device-side** through ``repro.match.merge.ShardMerger`` --
+shard-local maxima combine with collectives under ``shard_map`` and only
+the final reduced state crosses to the host, bit-identical to the
+single-shard result at any shard *and process* count.  That is the
+direct analogue of the paper's array-level parallelism (Sec. 3.4:
+arrays compute independently and exchange reduced state) and of Jun et
+al.'s multi-engine fan-out, and it is what lets the same engine run
+multi-host on ``jax.distributed`` (``repro.launch.cluster``), where
+per-shard results on another host's devices cannot be pulled at all.
 """
 
 from __future__ import annotations
@@ -61,6 +66,8 @@ from repro.kernels import ref as _kref
 from .corpus import PackedCorpus
 from .feedback import kernel_key
 from . import index as _ix
+from . import merge as _merge
+from .merge import ShardMerger
 from .index import CorpusIndex, FilterOperands, build_query_filter
 from .planner import FilterContext, Plan, Planner, kernel_name
 from .query import _UNSET, MatchQuery, as_query
@@ -90,6 +97,13 @@ class MatchResult:
     survivor_frac: Optional[float] = None       # n_surv / live rows
     # Resolved mesh row shards the query executed over (1 = unsharded).
     n_shards: int = 1
+    # Where cross-shard results combined: "device" (collectives under
+    # shard_map; only reduced state crossed to the host) or "host"
+    # (single shard -- nothing to merge).  ``collective_bytes`` is the
+    # estimated per-link collective traffic this run moved (ring
+    # all_gather model), the quantity the Planner prices.
+    merge_path: str = "host"
+    collective_bytes: int = 0
 
 
 def _valid_mask(P: int, wp: int) -> np.ndarray:
@@ -132,38 +146,6 @@ def _pack_patterns_mxu(masks: np.ndarray, p_chars: int, q_pad: int
     bits = (masks[:, :, None] >> np.arange(4, dtype=np.uint8)) & 1
     pat_mat[:P, :, :Q] = bits.astype(np.float32).transpose(1, 2, 0)
     return pat_mat.reshape(p_chars * 4, q_pad)
-
-
-def _host_topk_merge(run_rows, run_scores, bs: np.ndarray,
-                     rows_ids: np.ndarray, k_eff: int):
-    """Host-side cross-shard/cross-chunk top-k merge.
-
-    Bit-identical to the device ``lax.top_k`` running-merge path: both
-    realize the total order (score desc, row asc).  The device merge ties
-    break to the earliest concatenated position, which -- with the running
-    state kept sorted and chunk rows appended in ascending order -- is
-    always the lowest row id; ``np.lexsort`` with primary ``-score`` and
-    secondary ``row`` keys reproduces exactly that.  Scores are int32, so
-    the comparison is exact (the int64 negation cannot overflow).
-    """
-    if bs.ndim == 2:                     # batched: (rows, Q)
-        rows2 = np.broadcast_to(rows_ids[:, None], bs.shape)
-    else:
-        rows2 = rows_ids
-    cat_s = bs if run_scores is None else np.concatenate([run_scores, bs], 0)
-    cat_r = rows2 if run_rows is None else np.concatenate([run_rows, rows2], 0)
-    kk = min(k_eff, cat_s.shape[0])
-    if cat_s.ndim == 2:
-        out_s = np.empty((kk, cat_s.shape[1]), cat_s.dtype)
-        out_r = np.empty((kk, cat_s.shape[1]), np.int64)
-        for q in range(cat_s.shape[1]):
-            order = np.lexsort(
-                (cat_r[:, q], -cat_s[:, q].astype(np.int64)))[:kk]
-            out_s[:, q] = cat_s[order, q]
-            out_r[:, q] = cat_r[order, q]
-        return out_r, out_s
-    order = np.lexsort((cat_r, -cat_s.astype(np.int64)))[:kk]
-    return cat_r[order], cat_s[order]
 
 
 class CompiledMatch:
@@ -300,13 +282,22 @@ class CompiledMatch:
                 pat_rows, valid = _pack_mask_planes(masks2d, plan.wp)
             else:
                 pat_rows, valid = _pack_patterns_swar(self._pats2d, plan.wp)
-            # Upload once at compile time; run() chunks reuse the resident
-            # device operands.
-            self._packed = (jnp.asarray(pat_rows), jnp.asarray(valid))
+            if engine.merger.multiprocess:
+                # Multi-controller: keep the (tiny) operands as host
+                # arrays -- every process holds identical copies, and the
+                # jitted shard_map dispatch places them per its in_specs.
+                # A committed single-device upload could not be resharded
+                # onto a mesh spanning other processes' devices.
+                self._packed = (pat_rows, valid)
+            else:
+                # Upload once at compile time; run() chunks reuse the
+                # resident device operands.
+                self._packed = (jnp.asarray(pat_rows), jnp.asarray(valid))
         elif plan.backend == "mxu":
-            self._packed = jnp.asarray(
-                _pack_patterns_mxu(masks2d, plan.p_chars_pad, plan.q_pad),
-                jnp.bfloat16)
+            mat = _pack_patterns_mxu(masks2d, plan.p_chars_pad, plan.q_pad)
+            self._packed = (np.asarray(mat, jnp.bfloat16)
+                            if engine.merger.multiprocess
+                            else jnp.asarray(mat, jnp.bfloat16))
         else:
             self._packed = None
         self._lowered = True
@@ -431,25 +422,37 @@ class CompiledMatch:
         plan = self.plan
         step = plan.chunk_rows
         S = engine._row_shards
+        merger = engine.merger
+        coll0 = merger.collective_bytes
         if S > 1:
             tile = _swar.ROW_TILE * S
             step = max(tile, (step // tile) * tile)
         # Resident sharded streaming: device forms are in the cyclic
         # physical layout, so per-chunk kernel output rows come back in
-        # physical (shard-major) order and are un-permuted on the host
-        # before validity slicing and reduction merges.  Gather paths
-        # (rows= subsets, filter survivors) already follow logical order
-        # -- the gather indices are physical, their order is not -- and
-        # the ref backend reads the logical host buffer directly.
+        # physical (shard-major) order; the merge layer un-permutes
+        # *inside* its collective pulls.  Gather paths (rows= subsets,
+        # filter survivors) already follow logical order -- the gather
+        # indices are physical, their order is not -- and the ref backend
+        # reads the logical host buffer directly.
         shard_phys = S > 1 and idx is None and plan.backend != "ref"
 
         best_l: List[np.ndarray] = []
         best_s: List[np.ndarray] = []
         full: List[np.ndarray] = []
         hit_rows: List[np.ndarray] = []
-        run_rows = run_scores = None      # running global top-k state
+        topk_state = None                 # running global top-k (device)
+        n_topk_alive = 0
         n_chunks = 0
         thr_vec = self._thr_vec
+        thr_int = None
+        if thr_vec is not None:
+            # Integer-exact device threshold: scores are ints, so
+            # s >= t  <=>  s >= ceil(t).  The device hot-mask compares
+            # int32; the host recomputes final hits with the original
+            # float threshold over the gathered block -- the two select
+            # exactly the same set (no float32 rounding can differ).
+            thr_int = np.clip(np.ceil(thr_vec), -(2 ** 31),
+                              2 ** 31 - 1).astype(np.int32)
 
         t_scan0 = time.perf_counter()
         for c0 in range(0, R_pad, step):
@@ -459,8 +462,6 @@ class CompiledMatch:
                 break                     # pure-padding tail chunk
             scores = engine._chunk_scores(plan, self._pats2d, c0, c1,
                                           self._packed, idx, idx_log)
-            if not shard_phys:
-                scores = scores[:valid]
             n_chunks += 1
             # Per-chunk tombstone mask in logical row order (None when the
             # whole chunk is alive).
@@ -473,11 +474,11 @@ class CompiledMatch:
                 if alive.all():
                     alive = None
             if reduction == "full":
-                # Host materialization is the point of this reduction; the
-                # best reduction is derived from it at the end.
-                sc = np.asarray(scores)
-                if shard_phys:
-                    sc = _sharding.cyclic_unpermute(sc, S)[:valid]
+                # Host materialization is the point of this reduction (the
+                # one case where the whole block crosses); the pull
+                # replicates + un-permutes device-side first.
+                sc = merger.pull(scores, unpermute=shard_phys,
+                                 kind="block")[:valid]
                 if alive is not None:
                     # Dead rows report the -1 sentinel (scores are >= 0
                     # for live rows, so the sentinel is unambiguous).
@@ -485,17 +486,12 @@ class CompiledMatch:
                     sc[~alive] = -1
                 full.append(sc)
                 continue
-            # Fused per-chunk reduction: only (chunk, ...) lives at once.
-            # Sharded: argmax/max run shard-local on the physical chunk
-            # (dead padding rows included -- their garbage entries fall
-            # off the logical [:valid] slice after the host un-permute).
-            bl = jnp.argmax(scores, axis=1)
-            bs = jnp.max(scores, axis=1)
-            if shard_phys:
-                bl_np = _sharding.cyclic_unpermute(np.asarray(bl), S)[:valid]
-                bs_np = _sharding.cyclic_unpermute(np.asarray(bs), S)[:valid]
-            else:
-                bl_np, bs_np = np.asarray(bl), np.asarray(bs)
+            # Fused per-chunk reduction, jitted through the merge layer:
+            # only reduced per-row state ever crosses to the host, and no
+            # eager op touches a (possibly non-addressable) sharded array.
+            bl, bs = merger.chunk_best(scores)
+            bl_np = merger.pull(bl, unpermute=shard_phys)[:valid]
+            bs_np = merger.pull(bs, unpermute=shard_phys)[:valid]
             if alive is not None:
                 bl_np, bs_np = bl_np.copy(), bs_np.copy()
                 bl_np[~alive] = 0
@@ -505,62 +501,70 @@ class CompiledMatch:
             # topk / threshold report *corpus* row ids; with a rows= subset
             # that means mapping chunk positions through the selection.
             if reduction == "threshold":
-                sc = np.asarray(scores)
+                # Two-phase sparse pull (the per-chunk host-transfer fix):
+                # first a per-row any-hit bitmap, then a device gather of
+                # only the hot rows' score vectors -- the full (chunk, L
+                # [, Q]) block never crosses to the host.
+                hot = merger.hot_mask(scores, thr_int)
+                hot_np = merger.pull(hot, unpermute=shard_phys)[:valid]
+                if alive is not None:
+                    hot_np = hot_np & alive
+                hot_rows = np.flatnonzero(hot_np)
+                if hot_rows.size == 0:
+                    continue
                 if shard_phys:
-                    sc = _sharding.cyclic_unpermute(sc, S)[:valid]
+                    # Physical positions of the hot logical rows inside
+                    # this chunk's shard-major layout.
+                    jc = int(scores.shape[0]) // S
+                    pos = (hot_rows % S) * jc + hot_rows // S
+                else:
+                    pos = hot_rows
+                # Pad the gather to a power of two so hot-count jitter
+                # doesn't recompile the gather every chunk.
+                n_hot = pos.size
+                pad_n = max(8, 1 << (int(n_hot) - 1).bit_length())
+                pos_pad = np.zeros(pad_n, np.int64)
+                pos_pad[:n_hot] = pos
+                sc = merger.pull(merger.gather_rows(scores, pos_pad),
+                                 kind="block")[:n_hot]
                 if plan.mode == "batched":
                     local = np.argwhere(sc >= thr_vec[None, None, :])
                 else:
                     local = np.argwhere(sc >= float(thr_vec[0]))
                 if local.size:
                     vals = sc[tuple(local.T)]
-                    if sel is not None:
-                        local[:, 0] = sel[local[:, 0] + c0]
-                    else:
-                        local[:, 0] += c0
-                    if dead_full is not None:
-                        keep = ~dead_full[local[:, 0]]
-                        local, vals = local[keep], vals[keep]
-                    if local.size:
-                        hit_rows.append(np.concatenate(
-                            [local, vals[:, None].astype(np.int64)], 1))
+                    # Hot rows are ascending, so argwhere order over the
+                    # gathered block equals the full-block hit order.
+                    rows_chunk = hot_rows[local[:, 0]]
+                    local[:, 0] = (sel[rows_chunk + c0] if sel is not None
+                                   else rows_chunk + c0)
+                    hit_rows.append(np.concatenate(
+                        [local, vals[:, None].astype(np.int64)], 1))
             elif reduction == "topk":
-                if shard_phys or dead_full is not None:
-                    # Shard-local maxima (and/or tombstoned chunks) merge
-                    # on the host: bit-identical to the device path (see
-                    # _host_topk_merge); dead rows are dropped outright so
-                    # they can never occupy a top-k slot.
-                    rows_np = (np.arange(c0, c0 + valid, dtype=np.int64)
-                               if sel is None
-                               else np.asarray(sel[c0:c0 + valid]))
-                    b_sel = bs_np
-                    if alive is not None:
-                        rows_np, b_sel = rows_np[alive], bs_np[alive]
-                    if rows_np.size:
-                        run_rows, run_scores = _host_topk_merge(
-                            run_rows, run_scores, b_sel, rows_np,
-                            self._k_eff)
-                    continue
-                if sel is not None:
-                    chunk_rows_ids = jnp.asarray(sel[c0:c0 + valid])
+                # Device-side tree merge (ShardMerger): shard-local maxima
+                # + all_gather + replicated lexsort, or -- on logical-order
+                # paths -- a jitted sentinel merge.  Dead/padding rows ride
+                # the (-1, ROW_SENTINEL) sentinel pair and sort last.
+                if topk_state is None:
+                    topk_state = merger.topk_init(
+                        self._k_eff,
+                        plan.n_patterns if plan.mode == "batched" else 0)
+                n_bs = int(bs.shape[0])
+                alive_chunk = np.zeros(n_bs, bool)
+                alive_chunk[:valid] = True if alive is None else alive
+                n_topk_alive += valid if alive is None else int(alive.sum())
+                if shard_phys:
+                    topk_state = merger.topk_update(
+                        topk_state, bs, phys=True,
+                        alive_chunk=alive_chunk, c0=c0)
                 else:
-                    chunk_rows_ids = jnp.arange(c0, c0 + valid)
-                if bs.ndim == 2:          # batched: top-k per pattern
-                    chunk_rows_ids = jnp.broadcast_to(
-                        chunk_rows_ids[:, None], bs.shape)
-                cat_s = bs if run_scores is None else jnp.concatenate(
-                    [run_scores, bs], 0)
-                cat_r = chunk_rows_ids if run_rows is None else \
-                    jnp.concatenate([run_rows, chunk_rows_ids], 0)
-                kk = min(self._k_eff, cat_s.shape[0])
-                top_s, top_i = jax.lax.top_k(cat_s.T if cat_s.ndim == 2
-                                             else cat_s, kk)
-                if cat_s.ndim == 2:
-                    run_scores = top_s.T
-                    run_rows = jnp.take_along_axis(cat_r.T, top_i, 1).T
-                else:
-                    run_scores = top_s
-                    run_rows = cat_r[top_i]
+                    rows_full = np.zeros(n_bs, np.int64)
+                    rows_full[:valid] = (np.arange(c0, c0 + valid)
+                                         if sel is None
+                                         else sel[c0:c0 + valid])
+                    topk_state = merger.topk_update(
+                        topk_state, bs, phys=False,
+                        alive_chunk=alive_chunk, rows_np=rows_full)
 
         if engine.record_runtimes and n_chunks:
             # Observed scan/verify-stage wall time vs. the feedback-free
@@ -583,12 +587,14 @@ class CompiledMatch:
             return MatchResult(plan=plan, best_locs=all_scores.argmax(1),
                                best_scores=all_scores.max(1),
                                scores=all_scores, n_chunks=n_chunks,
-                               n_shards=S)
+                               n_shards=S, merge_path=merger.merge_path,
+                               collective_bytes=merger.collective_bytes
+                               - coll0)
         best_locs = np.concatenate(best_l, 0)
         best_scores = np.concatenate(best_s, 0)
         res = MatchResult(plan=plan, best_locs=best_locs,
                           best_scores=best_scores, n_chunks=n_chunks,
-                          n_shards=S)
+                          n_shards=S, merge_path=merger.merge_path)
         if survivor_frac is not None:
             res.survivor_rows = sel
             res.survivor_frac = survivor_frac
@@ -597,7 +603,7 @@ class CompiledMatch:
             res.hits = (np.concatenate(hit_rows, 0) if hit_rows
                         else np.zeros((0, width), np.int64))
         elif reduction == "topk":
-            if run_rows is None:
+            if topk_state is None or n_topk_alive == 0:
                 # Every scanned row was tombstoned: a well-formed empty
                 # top-k (matches the empty-subset result shape).
                 shape0 = ((0, plan.n_patterns) if plan.mode == "batched"
@@ -605,8 +611,9 @@ class CompiledMatch:
                 res.topk_rows = np.zeros(shape0, np.int64)
                 res.topk_scores = np.zeros(shape0, np.int32)
             else:
-                res.topk_rows = np.asarray(run_rows)
-                res.topk_scores = np.asarray(run_scores)
+                res.topk_rows, res.topk_scores = merger.topk_finalize(
+                    topk_state, n_topk_alive, self._k_eff)
+        res.collective_bytes = merger.collective_bytes - coll0
         return res
 
     __call__ = run
@@ -670,6 +677,15 @@ class MatchEngine:
             self._row_axes if self._row_axes is None or
             len(self._row_axes) > 1 else self._row_axes[0],
             self._row_shards)
+        # Cross-shard merge layer (DESIGN.md Sec. 3k): every reduction
+        # and host pull routes through it, so cross-shard combines run
+        # device-side under shard_map and work at any process count.
+        self.merger = ShardMerger(
+            self.mesh if self._row_shards > 1 else None,
+            self._row_axes, self._row_shards)
+        # Jitted multi-controller launch cache (keyed by kernel + shape
+        # geometry): a fresh jit per chunk would retrace every call.
+        self._mp_cache: dict = {}
         if planner is None:
             planner = Planner(cost_source=cost_source)
         elif cost_source is not None:
@@ -682,7 +698,12 @@ class MatchEngine:
         # discipline), off for the static fallback -- whose decisions are
         # a deterministic baseline that must not drift mid-session.
         if record_runtimes is None:
-            record_runtimes = self.planner.cost_source.name != "static"
+            # Multi-controller: per-process wall clocks differ, so
+            # feedback re-pricing would drift the SPMD plans apart across
+            # processes (divergent plans mean divergent collective
+            # programs -- a hang).  Default off beyond one process.
+            record_runtimes = (self.planner.cost_source.name != "static"
+                               and jax.process_count() == 1)
         self.record_runtimes = bool(record_runtimes)
         self.interpret = default_interpret() if interpret is None else interpret
         self.compile_cache_size = int(compile_cache_size)
@@ -727,16 +748,18 @@ class MatchEngine:
         """(S,) live rows per shard (cyclic layout: balanced to +-1 row)."""
         return self.corpus.shard_live_rows
 
-    def _device_gather_idx(self, pad_idx: np.ndarray) -> jnp.ndarray:
-        """Device gather indices for logical padded row ids.
+    def _device_gather_idx(self, pad_idx: np.ndarray) -> np.ndarray:
+        """Gather indices (host array) for logical padded row ids.
 
         Sharded forms store row r at physical position (r % S) * J +
         r // S; gathers must address that layout.  The gather *output*
         follows the order of ``pad_idx`` (logical query order), so
         downstream reductions never see physical order on this path.
+        Kept as a host array: identical on every process, handed to the
+        (jitted) gather at dispatch time.
         """
-        return jnp.asarray(_sharding.cyclic_physical_rows(
-            pad_idx, self._row_shards, self.corpus.shard_stride))
+        return _sharding.cyclic_physical_rows(
+            pad_idx, self._row_shards, self.corpus.shard_stride)
 
     # -- compilation ----------------------------------------------------------
     def compile(self, query: MatchQuery, *,
@@ -798,6 +821,10 @@ class MatchEngine:
                 f"cannot run against {n_rows} live rows; per_row queries "
                 "are geometry-bound to their compile-time corpus -- "
                 "recompile with one pattern per current corpus row")
+        topk_k = 0
+        if query.reduction == "topk":
+            kv = np.asarray(query.k if query.k else (10,), np.int64)
+            topk_k = int(kv.max()) if kv.size else 10
         return self.planner.plan(
             n_rows=n_rows,
             fragment_chars=self.corpus.fragment_chars,
@@ -805,7 +832,8 @@ class MatchEngine:
             n_patterns=query.n_patterns if mode == "batched" else None,
             per_row=mode == "per_row", backend=query.backend,
             chunk_rows=query.chunk_rows, predicate=query.predicate,
-            filter_ctx=filter_ctx, n_shards=self._row_shards)
+            filter_ctx=filter_ctx, n_shards=self._row_shards,
+            reduction=query.reduction, topk_k=topk_k)
 
     # -- q-gram filter stage (DESIGN.md Sec. 3g) ------------------------------
     def _filter_context(self, query: MatchQuery, mode: Optional[str],
@@ -892,12 +920,19 @@ class MatchEngine:
         the sharded signature form: each shard tests its own rows (the
         q-gram lemma is a per-row property, so it holds per shard), the
         per-pattern union happens device-side, and the cross-shard
-        survivor union is the host un-permute of the flag bitmap back to
-        logical row order.
+        survivor union is a device all_gather + un-permute through the
+        merge layer -- the host receives only the final replicated
+        bitmap, at any process count.
         """
         ops = cm._filter_ops
+        merger = self.merger
         if cm._filter_dev is None:
-            cm._filter_dev = jnp.asarray(ops.qsig_words)
+            # Multi-controller: keep the tiny query signatures as host
+            # arrays (identical everywhere); the jitted dispatch places
+            # them replicated per its in_specs.
+            cm._filter_dev = (np.asarray(ops.qsig_words)
+                              if merger.multiprocess
+                              else jnp.asarray(ops.qsig_words))
         sigs = self.index.signatures()
         tile = _fq.FILTER_ROW_TILE
         S = self._row_shards
@@ -916,18 +951,23 @@ class MatchEngine:
         # free (same reshape trick as the match chunks).
         jf = sigs.shape[0] // S
         jn = min(jf, -(-(-(-n_rows // S)) // tile) * tile)
-        rows = sigs.reshape(S, jf, sigs.shape[1])[:, :jn].reshape(
-            S * jn, sigs.shape[1])
+        if merger.multiprocess:
+            rows = _merge._resident_slicer(S, jf, 0, jn, sigs.shape[1])(sigs)
+        else:
+            rows = sigs.reshape(S, jf, sigs.shape[1])[:, :jn].reshape(
+                S * jn, sigs.shape[1])
         flags = None
         for qi in range(ops.qsig_words.shape[0]):
             def call(r, q, _slack=ops.slacks[qi]):
                 return _fq.filter_qgram(r, q, slack=_slack,
                                         interpret=self.interpret)
-            f = self._shard_wrap(call, PartitionSpec(None, None))(
+            f = self._shard_wrap(
+                call, PartitionSpec(None, None),
+                cache_key=("filter", ops.slacks[qi], rows.shape,
+                           cm._filter_dev.shape))(
                 rows, cm._filter_dev[qi:qi + 1])
-            flags = f if flags is None else flags | f
-        logical = _sharding.cyclic_unpermute(np.asarray(flags)[:, 0], S)
-        return logical[:n_rows].astype(bool)
+            flags = f if flags is None else merger.or_(flags, f)
+        return merger.survivor_union(flags, n_rows)
 
     def plan(self, patterns, *, backend=_UNSET, mode=_UNSET, rows=_UNSET,
              chunk_rows=_UNSET) -> Plan:
@@ -939,16 +979,28 @@ class MatchEngine:
         return self._plan_query(query, n_rows)
 
     # -- kernel dispatch (one chunk, pure device) -----------------------------
-    def _shard_wrap(self, call, pat_spec=None):
+    def _shard_wrap(self, call, pat_spec=None, cache_key=None):
         if self.mesh is None or self._row_axes is None:
             return call
         from jax.experimental.shard_map import shard_map
+        if self.merger.multiprocess and cache_key is not None:
+            hit = self._mp_cache.get(cache_key)
+            if hit is not None:
+                return hit
         spec = PartitionSpec(self._row_axes if len(self._row_axes) > 1
                              else self._row_axes[0])
-        return shard_map(call, mesh=self.mesh,
-                         in_specs=(spec, spec if pat_spec is None
-                                   else pat_spec),
-                         out_specs=spec, check_rep=False)
+        fn = shard_map(call, mesh=self.mesh,
+                       in_specs=(spec, spec if pat_spec is None
+                                 else pat_spec),
+                       out_specs=spec, check_rep=False)
+        if self.merger.multiprocess:
+            # Multi-controller: eager dispatch on global arrays is not
+            # generally supported -- stage the whole launch through jit
+            # (host-array operands get placed per the in_specs).
+            fn = jax.jit(fn)
+            if cache_key is not None:
+                self._mp_cache[cache_key] = fn
+        return fn
 
     def _swar_chunk(self, words: jnp.ndarray, pat_rows: jnp.ndarray,
                     mask: jnp.ndarray, plan: Plan) -> jnp.ndarray:
@@ -965,13 +1017,68 @@ class MatchEngine:
                                         interpret=self.interpret)
         return self._shard_wrap(call)(words, pat_rows)
 
+    def _swar_chunk_mp(self, words, pat_rows, mask, plan: Plan):
+        """Multi-controller SWAR dispatch: one jitted shard_map launch.
+
+        The (tiny, replicated) host pattern operands enter with a
+        replicated spec and broadcast to each shard's block *inside* the
+        body -- an eager full-size broadcast would be a committed local
+        array that cannot be resharded onto other processes' devices.
+        Shared-pattern queries only: per-row and batched SWAR layouts
+        interleave pattern rows across shards (tile/repeat on a sharded
+        chunk), which has no multi-process lowering yet.
+        """
+        if plan.mode in ("per_row", "batched"):
+            raise NotImplementedError(
+                f"{plan.mode} SWAR queries are not supported on a "
+                "multi-process mesh (shared-pattern queries and the "
+                "batched MXU backend are); use backend=\"mxu\" or run "
+                "the patterns as separate queries")
+        key = ("swar_mp", plan.predicate, plan.n_locs, plan.pattern_chars,
+               tuple(words.shape), tuple(np.shape(pat_rows)))
+        fn = self._mp_cache.get(key)
+        if fn is None:
+            from jax.experimental.shard_map import shard_map
+            spec = PartitionSpec(self._row_axes if len(self._row_axes) > 1
+                                 else self._row_axes[0])
+            rep = PartitionSpec(None, None)
+            kern = (_swar.match_swar_masks if plan.predicate == "accept"
+                    else _swar.match_swar)
+
+            def call(w, p, m):
+                pr = jnp.broadcast_to(p[0][None, :],
+                                      (w.shape[0], p.shape[1]))
+                return kern(w, pr, m, n_locs=plan.n_locs,
+                            pattern_chars=plan.pattern_chars,
+                            interpret=self.interpret)
+
+            fn = jax.jit(shard_map(call, mesh=self.mesh,
+                                   in_specs=(spec, rep, rep),
+                                   out_specs=spec, check_rep=False))
+            self._mp_cache[key] = fn
+        return fn(words, np.asarray(pat_rows), np.asarray(mask))
+
     def _mxu_chunk(self, ref_flat: jnp.ndarray, pat_mat: jnp.ndarray,
                    plan: Plan) -> jnp.ndarray:
+        mp = self.merger.multiprocess
+
         def call(r, p):
-            return _mxu.match_mxu(r, p, l_pad=plan.l_pad,
-                                  interpret=self.interpret)
-        return self._shard_wrap(call, PartitionSpec(None, None))(
-            ref_flat, pat_mat)
+            out = _mxu.match_mxu(r, p, l_pad=plan.l_pad,
+                                 interpret=self.interpret)
+            if mp:
+                # Fold the round/slice into the staged launch: no eager
+                # op may touch the sharded output multi-controller.  The
+                # arithmetic is identical to the host-side epilogue.
+                out = jnp.round(out[:, :plan.n_locs, :plan.n_patterns]
+                                ).astype(jnp.int32)
+                if plan.mode != "batched":
+                    out = out[:, :, 0]
+            return out
+        return self._shard_wrap(
+            call, PartitionSpec(None, None),
+            cache_key=("mxu", plan.l_pad, plan.n_locs, plan.n_patterns,
+                       plan.mode, tuple(ref_flat.shape),
+                       tuple(np.shape(pat_mat))))(ref_flat, pat_mat)
 
     def _slice_resident(self, base: jnp.ndarray, c0: int,
                         c1: int) -> jnp.ndarray:
@@ -989,6 +1096,11 @@ class MatchEngine:
         if S == 1:
             return base[c0:c1]
         j = base.shape[0] // S
+        if self.merger.multiprocess:
+            # Jitted (cached by geometry): the eager reshape would touch
+            # non-addressable shards.
+            return _merge._resident_slicer(S, j, c0 // S, c1 // S,
+                                           base.shape[1])(base)
         return base.reshape(S, j, base.shape[1])[:, c0 // S:c1 // S].reshape(
             c1 - c0, base.shape[1])
 
@@ -1023,9 +1135,16 @@ class MatchEngine:
 
         if plan.backend == "swar":
             base = self.corpus.swar_words(plan.need_words)
-            words = (base[idx[c0:c1]] if idx is not None
-                     else self._slice_resident(base, c0, c1))
+            if idx is not None:
+                # Cross-shard gather: device-side (replicated output)
+                # multi-controller, plain fancy-index otherwise.
+                words = (self.merger.gather_rows(base, idx[c0:c1])
+                         if self.merger.multiprocess else base[idx[c0:c1]])
+            else:
+                words = self._slice_resident(base, c0, c1)
             pat_rows, mask = packed
+            if self.merger.multiprocess:
+                return self._swar_chunk_mp(words, pat_rows, mask, plan)
             pat_rows = jnp.asarray(pat_rows)   # (Q, Wp) words or (Q, 4*Wp)
             mask = jnp.asarray(mask)
             if plan.mode == "per_row":
@@ -1057,9 +1176,14 @@ class MatchEngine:
 
         # mxu
         base = self.corpus.onehot_flat(plan.f_chars)
-        ref_flat = (base[idx[c0:c1]] if idx is not None
-                    else self._slice_resident(base, c0, c1))
+        if idx is not None:
+            ref_flat = (self.merger.gather_rows(base, idx[c0:c1])
+                        if self.merger.multiprocess else base[idx[c0:c1]])
+        else:
+            ref_flat = self._slice_resident(base, c0, c1)
         out = self._mxu_chunk(ref_flat, packed, plan)
+        if self.merger.multiprocess:
+            return out                    # epilogue folded into the launch
         scores = jnp.round(out[:, :plan.n_locs, :plan.n_patterns]
                            ).astype(jnp.int32)
         return scores[:, :, 0] if plan.mode != "batched" else scores
@@ -1101,7 +1225,8 @@ class MatchEngine:
         res = MatchResult(plan=plan,
                           best_locs=np.zeros(shape0, np.int32),
                           best_scores=np.zeros(shape0, np.int32),
-                          n_shards=self._row_shards)
+                          n_shards=self._row_shards,
+                          merge_path=self.merger.merge_path)
         if query.reduction == "full":
             res.scores = np.zeros((0, plan.n_locs, Q) if batched
                                   else (0, plan.n_locs), np.int32)

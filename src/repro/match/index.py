@@ -40,12 +40,16 @@ import dataclasses
 import math
 from typing import Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.distributed import sharding as _sharding
 from repro.kernels import filter_qgram as _fq
 from repro.match.feedback import EwmaRatio
+
+from . import merge as _merge
 
 # Host signature packing proceeds in bounded row chunks: pack_bit_rows
 # materializes an (n, n_bits) occupancy matrix, which at 1M rows x 256
@@ -251,6 +255,14 @@ class CorpusIndex:
         self.sig_words = n_bits // 32
         self._sigs: Optional[jnp.ndarray] = None     # (S_pad, Wb) uint32
         self._row_bits = np.zeros(corpus.capacity, np.int32)
+        # Multi-controller: per-row distinct-bit counts live on device
+        # ((S_pad, 1) int32, same cyclic layout as the signatures) --
+        # each host only ever computes counts for the rows it packs, and
+        # density() must be identical on every process, so the mean
+        # reduces device-side.
+        self._bits_dev: Optional[jnp.ndarray] = None
+        self._dsum_fn = None
+        self._dcache: Optional[tuple] = None
         self.sig_pack_count = 0
         self.row_update_count = 0
         # Selectivity feedback: EWMA of measured/predicted survivor-
@@ -293,22 +305,64 @@ class CorpusIndex:
         array, which row splices keep up to date incrementally.
         """
         if self._sigs is None:
-            n = self.corpus.n_rows
-            s = self.corpus.n_shards
-            stride = self.shard_stride
-            words = np.zeros((self._rows_padded, self.sig_words), np.uint32)
-            # Chunked pack (bounded occupancy temporary) straight into the
-            # cyclic physical layout the corpus forms use.
-            for b0 in range(0, n, _BUILD_CHUNK_ROWS):
-                b1 = min(b0 + _BUILD_CHUNK_ROWS, n)
-                live, counts = row_signatures(
-                    self.corpus.fragments[b0:b1], self.q, self.n_bits)
-                words[_sharding.cyclic_physical_rows(
-                    np.arange(b0, b1), s, stride)] = live
-                self._row_bits[b0:b1] = counts
-            self._sigs = self.corpus._place(words)
+            if self.corpus._multiprocess:
+                self._build_sigs_per_host()
+            else:
+                n = self.corpus.n_rows
+                s = self.corpus.n_shards
+                stride = self.shard_stride
+                words = np.zeros((self._rows_padded, self.sig_words),
+                                 np.uint32)
+                # Chunked pack (bounded occupancy temporary) straight into
+                # the cyclic physical layout the corpus forms use.
+                for b0 in range(0, n, _BUILD_CHUNK_ROWS):
+                    b1 = min(b0 + _BUILD_CHUNK_ROWS, n)
+                    live, counts = row_signatures(
+                        self.corpus.fragments[b0:b1], self.q, self.n_bits)
+                    words[_sharding.cyclic_physical_rows(
+                        np.arange(b0, b1), s, stride)] = live
+                    self._row_bits[b0:b1] = counts
+                self._sigs = self.corpus._place(words)
             self.sig_pack_count += 1
         return self._sigs
+
+    def _build_sigs_per_host(self) -> None:
+        """First signature pack, multi-controller: per-host shard blocks.
+
+        Signature block ``s`` holds rows ``s::S`` (slot ``j`` <-> logical
+        ``s + j*S``), so each process hashes only the rows its devices
+        own -- bit-identical to permuting a global pack, at 1/P of the
+        host work.  Per-row bit counts ride along as a device form
+        (``_bits_dev``) because no host holds all of them.
+        """
+        S = self.corpus.n_shards
+        Jf = self.shard_stride
+        n = self.corpus.n_rows
+        blocks: dict = {}
+
+        def pack(s):
+            blk = blocks.get(s)
+            if blk is None:
+                words = np.zeros((Jf, self.sig_words), np.uint32)
+                counts = np.zeros((Jf, 1), np.int32)
+                frag_s = self.corpus._frags[s::S]
+                live_s = max(0, (n - s + S - 1) // S)
+                for b0 in range(0, live_s, _BUILD_CHUNK_ROWS):
+                    b1 = min(b0 + _BUILD_CHUNK_ROWS, live_s)
+                    w, c = row_signatures(frag_s[b0:b1], self.q,
+                                          self.n_bits)
+                    words[b0:b1] = w
+                    counts[b0:b1, 0] = c
+                blocks[s] = blk = (words, counts)
+            return blk
+        ns = self.corpus._row_sharding()
+        self._sigs = jax.make_array_from_callback(
+            (S * Jf, self.sig_words), ns,
+            lambda idx: pack((idx[0].start or 0) // Jf)[0])
+        self._bits_dev = jax.make_array_from_callback(
+            (S * Jf, 1), ns,
+            lambda idx: pack((idx[0].start or 0) // Jf)[1])
+        self._dcache = None
 
     # -- corpus observer hooks -------------------------------------------------
     def _on_rows_written(self, start: int, rows: np.ndarray) -> None:
@@ -320,6 +374,15 @@ class CorpusIndex:
             if s == 1:
                 self._sigs = self._sigs.at[start:start + n, :].set(
                     jnp.asarray(words))
+            elif self.corpus._multiprocess:
+                phys = _sharding.cyclic_physical_rows(
+                    np.arange(start, start + n), s, self.shard_stride)
+                self._sigs = _merge.scatter_rows(self._sigs, phys, words)
+                if self._bits_dev is not None:
+                    self._bits_dev = _merge.scatter_rows(
+                        self._bits_dev, phys,
+                        counts[:, None].astype(np.int32))
+                self._dcache = None
             else:
                 phys = jnp.asarray(_sharding.cyclic_physical_rows(
                     np.arange(start, start + n), s, self.shard_stride))
@@ -341,9 +404,16 @@ class CorpusIndex:
                 # helper: rows keep their shard and slot, placement is
                 # re-applied.
                 self._sigs = self.corpus._grow_form_rows(self._sigs, pad)
+                if self._bits_dev is not None:
+                    self._bits_dev = self.corpus._grow_form_rows(
+                        self._bits_dev, pad)
+                    self._dcache = None
 
     def _on_invalidate(self) -> None:
         self._sigs = None
+        self._bits_dev = None
+        self._dsum_fn = None
+        self._dcache = None
 
     # -- selectivity model -----------------------------------------------------
     def density(self) -> float:
@@ -355,9 +425,38 @@ class CorpusIndex:
         """
         n = self.corpus.n_rows
         if self._sigs is not None and n:
+            if self._bits_dev is not None:
+                return self._density_device(n)
             return float(self._row_bits[:n].mean()) / self.n_bits
         return expected_density(self.corpus.fragment_chars, self.q,
                                 self.n_bits)
+
+    def _density_device(self, n: int) -> float:
+        """Live-row mean bit count from the device counts, replicated.
+
+        The masked integer sum reduces on device (XLA inserts the
+        cross-shard psum) and every process receives the same scalar, so
+        planner decisions stay in lock step; ``float(total) / n``
+        reproduces ``np.mean`` (exact integer sum, one float64 divide)
+        bit for bit.  Cached per (generation, n): density is read on
+        every plan, the corpus mutates far less often.
+        """
+        key = (self.corpus.generation, n)
+        if self._dcache is not None and self._dcache[0] == key:
+            return self._dcache[1]
+        if self._dsum_fn is None:
+            Jf, S = self.shard_stride, self.corpus.n_shards
+            ns = NamedSharding(self.corpus._mesh, PartitionSpec())
+
+            def total(c, n_):
+                p = jnp.arange(c.shape[0])
+                logical = (p % Jf) * S + p // Jf
+                return jnp.sum(jnp.where(logical < n_, c[:, 0], 0))
+            self._dsum_fn = jax.jit(total, out_shardings=ns)
+        tot = int(np.asarray(self._dsum_fn(self._bits_dev, np.int32(n))))
+        val = float(tot) / n / self.n_bits
+        self._dcache = (key, val)
+        return val
 
     def estimate_survivor_frac(self, n_query_bits: Sequence[int],
                                slacks: Sequence[int], *,

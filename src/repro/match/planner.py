@@ -155,6 +155,14 @@ class Plan:
     # per-shard row count (shards run concurrently; the critical path is
     # one shard's work plus the small host merge).
     n_shards: int = 1
+    # Device-side merge traffic (DESIGN.md Sec. 3k): estimated cross-
+    # shard collective bytes for the reduction (ring all_gather of
+    # reduced per-row state, per-chunk top-k candidate exchanges, the
+    # threshold hot bitmap).  Priced into est_seconds at ici_link_bw but
+    # kept out of the backend comparison -- every backend moves the same
+    # reduced state.  MatchResult.collective_bytes is the measured
+    # counterpart the feedback loop can hold against this.
+    est_collective_bytes: float = 0.0
     # Cost provenance (DESIGN.md Sec. 3i): which source priced this plan
     # ("static" | "calibrated:<digest8>"), the feedback-free estimate of
     # the scan/verify stage (what observed runtimes are recorded against
@@ -360,7 +368,8 @@ class Planner:
              chunk_rows: Optional[int] = None,
              predicate: str = "exact",
              filter_ctx: Optional[FilterContext] = None,
-             n_shards: int = 1) -> Plan:
+             n_shards: int = 1, reduction: Optional[str] = None,
+             topk_k: int = 0) -> Plan:
         R, F, P = n_rows, fragment_chars, pattern_chars
         if R < 1:
             raise ValueError("corpus has no rows")
@@ -488,6 +497,31 @@ class Planner:
                 est_base = self.backend_seconds(chosen, r_surv, L, P, Q,
                                                 predicate, base=True)
 
+        # Collective-merge pricing (DESIGN.md Sec. 3k): cross-shard
+        # reductions exchange reduced state on device.  Ring all_gather
+        # moves (S-1)/S of the replicated payload per link; the per-row
+        # best loc+score pulls (8 bytes/row/query) underlie every scan
+        # reduction, top-k adds per-chunk candidate exchanges
+        # ((score, row) pairs from S-1 peers), threshold adds the hot
+        # bitmap, and "full" replicates the whole score block.  Added to
+        # est_seconds *after* the backend choice: every backend moves the
+        # same reduced state, so it must not tilt the comparison.
+        est_coll = 0.0
+        if S > 1 and reduction is not None:
+            ring = (S - 1) / S
+            if reduction == "full":
+                est_coll = R_pad * L * 4.0 * Q * ring
+            else:
+                est_coll = R_pad * 8.0 * Q * ring
+                if reduction == "topk":
+                    n_ch = max(1, -(-R_pad // max(chunk, 1)))
+                    k_loc = min(max(int(topk_k), 1),
+                                max(chunk // S, 1))
+                    est_coll += n_ch * (S - 1) * k_loc * Q * 12.0
+                elif reduction == "threshold":
+                    est_coll += R_pad * 1.0 * ring
+            est += est_coll / self.roofline.ici_link_bw
+
         if S > 1:
             reason += f"; priced per shard (S={S})"
         reason += f" [cost={self.cost_source.tag}]"
@@ -498,6 +532,7 @@ class Planner:
                     est_seconds=est, reason=reason, predicate=predicate,
                     strategy=strategy, filter_words=filter_words,
                     est_survivor_frac=surv, n_shards=S,
+                    est_collective_bytes=est_coll,
                     cost_source=self.cost_source.tag,
                     est_base_seconds=est_base,
                     est_filter_seconds=est_fil,

@@ -89,6 +89,14 @@ class ServiceStats:
     total_latency_s: float = 0.0      # running sum (bounded state)
     n_shards: int = 1                 # engine row shards (mesh-resident)
     shard_rows: Optional[List[int]] = None   # live rows per shard
+    # Cross-shard merge accounting (DESIGN.md Sec. 3k): which path the
+    # engine's reductions combine on ("device" = collectives under
+    # shard_map, "host" = single-shard pulls) and the cumulative
+    # estimated collective bytes those merges moved -- the measured
+    # counterpart of Plan.est_collective_bytes, so mispriced merges are
+    # visible in the same snapshot the feedback loop reads.
+    merge_path: str = "host"
+    collective_bytes: int = 0
     # Cost-model provenance (DESIGN.md Sec. 3i): which source prices the
     # planner's decisions ("static" | "calibrated:<digest8>") and the
     # runtime-feedback state (observation/misprediction counters, number
@@ -181,6 +189,8 @@ class ServiceStats:
             "shard_rows": list(self.shard_rows or []),
             "shard_balance": (round(self.shard_balance, 4)
                               if self.shard_rows else 1.0),
+            "merge_path": self.merge_path,
+            "collective_bytes": self.collective_bytes,
             "cost_source": self.cost_source,
             "misprediction_rate": (self.feedback or {}).get(
                 "misprediction_rate", 0.0),
@@ -290,6 +300,10 @@ class MatchService:
                 f"bank fragment_chars={bank.fragment_chars} != corpus "
                 f"fragment_chars={engine.corpus.fragment_chars}")
         self.bank = bank
+        if bank is not None:
+            # One transfer ledger per service: bank pulls count alongside
+            # the engine's cross-shard merges (DESIGN.md Sec. 3k).
+            bank.merger = engine.merger
         if window_rows is not None and int(window_rows) < 1:
             raise ValueError("window_rows must be >= 1")
         self.window_rows = None if window_rows is None else int(window_rows)
@@ -428,10 +442,16 @@ class MatchService:
             self.stats.n_filtered_launches += 1
             self.stats.sum_survivor_frac += res.survivor_frac
 
+    def _note_merge(self, res: MatchResult) -> None:
+        """Fold one launch's cross-shard merge accounting into the stats."""
+        self.stats.merge_path = res.merge_path
+        self.stats.collective_bytes += int(res.collective_bytes)
+
     def _run_single(self, pend: _Pending) -> MatchResult:
         self.stats.n_launches += 1
         res = self.engine.match(pend.query)
         self._note_filter(res)
+        self._note_merge(res)
         return res
 
     def _scatter(self, res: MatchResult, q: int, n_q: int,
@@ -449,7 +469,10 @@ class MatchService:
                               res.best_scores[:, q]),
                           n_chunks=res.n_chunks,
                           survivor_rows=res.survivor_rows,
-                          survivor_frac=res.survivor_frac)
+                          survivor_frac=res.survivor_frac,
+                          n_shards=res.n_shards,
+                          merge_path=res.merge_path,
+                          collective_bytes=res.collective_bytes)
         if res.scores is not None:
             out.scores = np.ascontiguousarray(res.scores[:, :, q])
         if res.topk_rows is not None:
@@ -511,6 +534,7 @@ class MatchService:
             self.stats.n_coalesced_queries += len(grp)
             batched = self.engine.match(fused)
             self._note_filter(batched)
+            self._note_merge(batched)
             for q, mem in enumerate(members):
                 k_q = mem[0].query.k[0] if mem[0].query.k else 0
                 res = self._scatter(batched, q, n_q, k_q)

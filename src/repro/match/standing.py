@@ -198,6 +198,14 @@ class PatternBank:
         # CorpusIndex.record_selectivity (ratios against the uncalibrated
         # estimate; tight clamp against absorbing outliers).
         self._selectivity = EwmaRatio(decay=0.3, clamp=(0.1, 10.0))
+        # Host pulls route through a ShardMerger for transfer accounting
+        # (DESIGN.md Sec. 3k).  Bank forms are replicated bank-local
+        # state (patterns + arriving docs, identical on every process),
+        # so the default merger is a pass-through counter; a service
+        # attaches its engine's merger so bank traffic lands in the same
+        # ledger as the corpus reductions.
+        from .merge import ShardMerger
+        self.merger = ShardMerger(None, None, 1)
 
     # -- geometry --------------------------------------------------------------
     @property
@@ -484,7 +492,7 @@ class PatternBank:
                 [doc_sigs, np.zeros((d_pad - doc_sigs.shape[0],
                                      self.sig_words), np.uint32)])
         sigs, slacks = self.filter_operands()
-        flags = np.asarray(_fq.bank_prefilter(
+        flags = self.merger.pull(_fq.bank_prefilter(
             sigs, jnp.asarray(doc_sigs), slacks,
             interpret=self.interpret))[:, 0]
         self.n_prefilter_launches += 1
@@ -523,8 +531,8 @@ class PatternBank:
             words_t, planes_t, self._valid, n_locs=self.n_locs,
             pattern_chars=self.pattern_chars, interpret=self.interpret)
         self.n_bank_launches += 1
-        sc = np.asarray(out).reshape(Qs, d_pad, self.n_locs
-                                     ).transpose(1, 2, 0)[:D]
+        sc = self.merger.pull(out, kind="block").reshape(
+            Qs, d_pad, self.n_locs).transpose(1, 2, 0)[:D]
         thr = self._thr[slots]
         local = np.argwhere(sc >= thr[None, None, :])
         if not local.size:

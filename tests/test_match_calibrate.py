@@ -149,8 +149,10 @@ class TestPersistence:
 
     def test_bench_provenance_shape(self):
         prov = bench_provenance()
-        assert set(prov) == {"device_kind", "backend", "calibration"}
+        assert set(prov) == {"device_kind", "backend", "calibration",
+                             "n_processes", "n_hosts"}
         assert prov["calibration"] == "static"
+        assert prov["n_processes"] >= 1 and prov["n_hosts"] >= 1
         tagged = bench_provenance(make_table().cost_source())
         assert tagged["calibration"].startswith("calibrated:")
 

@@ -1,0 +1,161 @@
+"""Multi-controller match stack (DESIGN.md Sec. 3k).
+
+Two test groups:
+
+* ``TestCpuDistributed`` spawns a real 2-process CPU ``jax.distributed``
+  job (4 forced host devices per process -> the same 8-shard mesh a
+  single process gets) via ``repro.launch.cluster.run_cpu_demo`` and
+  asserts the bit-identity gates: threshold / forced-filter / IUPAC /
+  top-k / best results identical to the 1-process-8-shard baseline,
+  zero false negatives on planted needles, flat per-host pack counters
+  -- including after ``append_rows`` growth and tombstone compaction.
+
+* ``TestTransferLedger`` is the single-process regression for the
+  per-chunk host-transfer fix: a sharded threshold scan must keep its
+  reduction state device-side (per-row reduced pulls + hot-row gathers
+  only), never pulling the full (rows, locs) score block per chunk.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.launch.cluster import run_cpu_demo          # noqa: E402
+from repro.launch.mesh import make_row_mesh            # noqa: E402
+from repro.match import (MatchEngine, MatchQuery,      # noqa: E402
+                         MatchService)
+
+N_PROCESSES = 2
+LOCAL_DEVICES = 4
+
+
+@pytest.fixture(scope="module")
+def demo():
+    """One 2-process jax.distributed run + 1-process baseline (shared:
+    the subprocess spawn dominates, ~15 s)."""
+    return run_cpu_demo(n_processes=N_PROCESSES,
+                        local_devices=LOCAL_DEVICES)
+
+
+class TestCpuDistributed:
+    def test_gate_bit_identical(self, demo):
+        assert demo["identical"], demo["mismatches"]
+        assert demo["n_shards"] == N_PROCESSES * LOCAL_DEVICES
+
+    @pytest.mark.parametrize("stage", [
+        "threshold_scan", "threshold_filtered", "iupac_wildcard", "topk",
+        "best", "threshold_after_append", "topk_after_append",
+        "threshold_after_tombstone", "threshold_after_compact",
+        "best_after_compact"])
+    def test_stage_matches_single_process(self, demo, stage):
+        multi = demo["multiprocess"][0]["results"][stage]
+        single = demo["single"]["results"][stage]
+        for key in single:
+            if key == "collective_bytes":
+                # Byte accounting legitimately differs across controller
+                # topologies (a multi-controller gather is a collective);
+                # results must not.
+                continue
+            assert multi[key] == single[key], (stage, key)
+
+    def test_processes_agree(self, demo):
+        # SPMD contract: every controller computes the same replicated
+        # answer -- including the transfer ledger.
+        assert (demo["multiprocess"][1]["results"]
+                == demo["multiprocess"][0]["results"])
+
+    def test_merges_device_side(self, demo):
+        for run in (*demo["multiprocess"], demo["single"]):
+            assert run["merge_path"] == "device"
+            assert run["collective_bytes"] > 0
+            assert run["n_collectives"] > 0
+
+    def test_zero_false_negatives(self, demo):
+        # The workload plants a 32-char needle at known (row, loc)
+        # positions; _demo_workload raises in-process if any goes
+        # missing, so worker exit 0 is the gate -- re-assert the hits
+        # here on the returned records for a readable failure.
+        hits = {(r, l) for r, l, _ in
+                demo["multiprocess"][0]["results"]["threshold_scan"]["hits"]}
+        assert {(3, 5), (500, 5), (1021, 5), (11, 10)} <= hits
+        grown = {(r, l) for r, l, _ in
+                 demo["multiprocess"][0]["results"]
+                 ["threshold_after_append"]["hits"]}
+        assert (1024 + 40, 20) in grown
+
+    def test_tombstone_then_compact(self, demo):
+        res = demo["multiprocess"][0]["results"]
+        after_tomb = {r for r, _, _ in res["threshold_after_tombstone"]
+                      ["hits"]}
+        assert 3 not in after_tomb and 500 not in after_tomb
+        after_comp = {(r, l) for r, l, _ in res["threshold_after_compact"]
+                      ["hits"]}
+        # ids above the two reclaimed rows shift down.
+        assert {(10, 10), (1019, 5), (1062, 20)} <= after_comp
+
+    def test_pack_counters_flat_per_host(self, demo):
+        # Each process packs only its own shard blocks, exactly once,
+        # through the whole append/tombstone/compact sequence.
+        for run in demo["multiprocess"]:
+            assert run["pack_counts"]["swar"] == 1
+            assert run["pack_counts"]["host_total"] == \
+                demo["single"]["pack_counts"]["host_total"]
+        assert (demo["multiprocess"][0]["pack_counts"]
+                == demo["single"]["pack_counts"])
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs >= 8 devices")
+class TestTransferLedger:
+    R, F, P = 4096, 64, 32
+
+    @pytest.fixture()
+    def engine(self):
+        rng = np.random.default_rng(3)
+        frags = rng.integers(0, 4, (self.R, self.F), np.uint8)
+        self.pat = rng.integers(0, 4, self.P, np.uint8)
+        for r in (7, 1100, 4000):
+            frags[r, 9:9 + self.P] = self.pat
+        return MatchEngine(frags, mesh=make_row_mesh(8),
+                           record_runtimes=False)
+
+    def test_threshold_scan_stays_device_side(self, engine):
+        q = MatchQuery.exact(self.pat, reduction="threshold",
+                             threshold=float(self.P), filter=False)
+        res = engine.match(q)
+        assert {r for r, _, _ in res.hits} >= {7, 1100, 4000}
+        assert res.merge_path == "device"
+        assert res.collective_bytes > 0
+        m = engine.merger
+        # The old path pulled the full (chunk, L) score block every
+        # chunk: R * L * 4 bytes for the whole scan.  The fix pulls only
+        # per-row reduced state and the hot rows' score vectors.
+        L = self.F - self.P + 1
+        full_block = self.R * L * 4
+        pulled = m.reduced_pull_bytes + m.block_pull_bytes
+        assert pulled < full_block // 4, (pulled, full_block)
+
+    def test_topk_merges_on_device(self, engine):
+        res = engine.match(MatchQuery.exact(self.pat, reduction="topk", k=5))
+        assert set(res.topk_rows[:3].tolist()) == {7, 1100, 4000}
+        assert res.merge_path == "device"
+        assert res.collective_bytes > 0
+
+    def test_unsharded_engine_reports_host_path(self):
+        rng = np.random.default_rng(3)
+        e1 = MatchEngine(rng.integers(0, 4, (256, 64), np.uint8))
+        res = e1.match(MatchQuery.exact(
+            rng.integers(0, 4, 16, np.uint8), reduction="best"))
+        assert res.merge_path == "host"
+        assert res.collective_bytes == 0
+
+    def test_service_stats_surface_merge_path(self, engine):
+        svc = MatchService(engine)
+        svc.submit(self.pat, reduction="threshold",
+                   threshold=float(self.P))
+        svc.flush()
+        snap = svc.stats.snapshot()
+        assert snap["merge_path"] == "device"
+        assert snap["collective_bytes"] > 0
