@@ -29,8 +29,48 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.models import model
+from repro.obs import Observability
 from repro.serving.engine import Engine, Request
 from repro.serving.ngram_cache import NgramSpeculator, verify
+
+
+def _build_obs(args) -> Observability:
+    """Observability for the match/stream workloads.
+
+    Spans turn on exactly when a ``--trace`` destination exists -- the
+    disabled tracer is a no-op singleton, so an untraced run pays
+    nothing -- while the metrics registry is always on (it only
+    observes; DESIGN.md Sec. 3l).
+    """
+    return Observability(spans=bool(args.trace),
+                         profiler=bool(args.jax_profiler))
+
+
+def _export_trace(obs: Observability, path: str) -> None:
+    """Write the collected span tree: Chrome/Perfetto JSON by default,
+    JSON-lines when the path ends in ``.jsonl``."""
+    if path.endswith(".jsonl"):
+        obs.tracer.write_jsonl(path)
+        n = obs.tracer.n_spans
+        print(f"trace: wrote {n} spans to {path} (JSON-lines)")
+    else:
+        n = obs.tracer.write_chrome(path)
+        print(f"trace: wrote {n} spans to {path} "
+              f"(load in Perfetto / chrome://tracing)")
+
+
+def _print_metrics(svc, tick_label: str) -> None:
+    """One greppable per-interval metrics line (``--metrics-every``)."""
+    s = svc.stats
+    m = svc.obs.metrics
+    print(f"metrics,{tick_label},"
+          f"completed={s.n_completed},"
+          f"p50_ms={s.latency_hist.quantile(0.50) * 1e3:.2f},"
+          f"p95_ms={s.latency_hist.quantile(0.95) * 1e3:.2f},"
+          f"p99_ms={s.latency_hist.quantile(0.99) * 1e3:.2f},"
+          f"launches_last_tick={s.launches_last_tick},"
+          f"queue_depth={int(m.gauge('service.queue_depth').value)},"
+          f"plan_mispredict_rate={m.mispredict_rate():.3f}")
 
 
 def run_match_service(args) -> None:
@@ -53,7 +93,8 @@ def run_match_service(args) -> None:
     rng = np.random.default_rng(0)
     frags = rng.integers(0, 4, (args.corpus_rows, args.fragment_chars),
                          np.uint8)
-    eng = MatchEngine(frags)
+    obs = _build_obs(args)
+    eng = MatchEngine(frags, obs=obs)
     svc = MatchService(eng)
     P = args.pattern_chars
     pats = rng.integers(0, 4, (args.requests, P), np.uint8)
@@ -90,6 +131,9 @@ def run_match_service(args) -> None:
         tickets.append(svc.submit(q))
         if args.tick_every and (i + 1) % args.tick_every == 0:
             svc.tick()                 # mixed ingest+query ticks under load
+            if (args.metrics_every
+                    and svc.stats.n_ticks % args.metrics_every == 0):
+                _print_metrics(svc, f"tick={svc.stats.n_ticks}")
     svc.flush()
     dt = time.perf_counter() - t0
     assert all(t.done for t in tickets) and all(t.done for t in ingests)
@@ -102,8 +146,17 @@ def run_match_service(args) -> None:
           f"cache_hits={stats['n_cache_hits']} "
           f"(hit_rate={stats['cache_hit_rate']:.2f}) "
           f"avg_latency={stats['avg_latency_s']*1e3:.1f}ms "
+          f"latency_p50={stats['latency_p50_s']*1e3:.1f}ms "
+          f"p95={stats['latency_p95_s']*1e3:.1f}ms "
+          f"p99={stats['latency_p99_s']*1e3:.1f}ms "
           f"ticks={stats['n_ticks']} "
           f"launches/tick={stats['avg_launches_per_tick']}")
+    if stats["timings"]:
+        print("stage seconds (last tick): " + " ".join(
+            f"{k}={v:.4f}" for k, v in stats["timings"].items()))
+    print(f"plan-vs-actual: mispredict_rate="
+          f"{stats['plan_mispredict_rate']:.3f} over "
+          f"{len(stats['plan_actual'] or {})} (kernel, shape) buckets")
     if args.selective:
         print(f"filtered_launches={stats['n_filtered_launches']} "
               f"(filter_hit_rate={stats['filter_hit_rate']:.2f}) "
@@ -122,6 +175,8 @@ def run_match_service(args) -> None:
               f"({rows_before} -> {eng.corpus.n_rows} rows, capacity "
               f"{eng.corpus.capacity}, resident repacks: {repacks})")
         assert grew == stats["n_ingested_rows"]
+    if args.trace:
+        _export_trace(obs, args.trace)
 
 
 def run_stream(args) -> None:
@@ -144,7 +199,8 @@ def run_stream(args) -> None:
     F, P = args.fragment_chars, args.pattern_chars
     corpus = PackedCorpus(rng.integers(0, 4, (args.corpus_rows, F),
                                        np.uint8))
-    eng = MatchEngine(corpus)
+    obs = _build_obs(args)
+    eng = MatchEngine(corpus, obs=obs)
     bank = PatternBank(F, P, capacity=max(8, args.bank_patterns),
                        filter={"auto": None, "on": True,
                                "off": False}[args.bank_filter])
@@ -203,6 +259,8 @@ def run_stream(args) -> None:
               f"physical rows (evicted {svc.stats.n_evicted_rows}, "
               f"compactions {corpus.n_compactions})")
         assert corpus.n_live <= args.window_rows
+    if args.trace:
+        _export_trace(obs, args.trace)
 
 
 def main() -> None:
@@ -254,6 +312,17 @@ def main() -> None:
                     default="auto",
                     help="stream workload: pattern-side q-gram prefilter "
                          "routing (auto: planner prices it)")
+    ap.add_argument("--trace", type=str, default="",
+                    help="match/stream workloads: write the span tree "
+                         "here on exit -- Chrome/Perfetto trace-event "
+                         "JSON, or JSON-lines if the path ends in "
+                         ".jsonl (enables span collection)")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="match workload: print one greppable metrics "
+                         "line every N service ticks (0 disables)")
+    ap.add_argument("--jax-profiler", action="store_true",
+                    help="annotate spans into the jax profiler timeline "
+                         "(jax.profiler.TraceAnnotation) as well")
     args = ap.parse_args()
 
     if args.workload == "match":

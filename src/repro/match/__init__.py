@@ -50,6 +50,9 @@ this package; long-lived consumers (dedup, serving-scale workloads) hold a
 traffic goes through a ``MatchService``.
 """
 
+from repro.obs import (MetricsRegistry, Observability,  # noqa: F401
+                       Tracer)
+
 from .calibrate import (CalibrationTable, autotune, bench_provenance,
                         load_cost_source)
 from .corpus import PackedCorpus
@@ -70,4 +73,5 @@ __all__ = ["PackedCorpus", "Planner", "Plan", "BatchPlan", "FilterContext",
            "build_query_filter", "CalibrationTable", "autotune",
            "bench_provenance", "load_cost_source", "EwmaRatio",
            "FeedbackStore", "kernel_key", "PatternBank", "StandingPattern",
-           "HitTicket", "BankPlan"]
+           "HitTicket", "BankPlan", "Observability", "Tracer",
+           "MetricsRegistry"]

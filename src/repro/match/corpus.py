@@ -81,6 +81,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.core import encoding
 from repro.distributed import sharding as _sharding
 from repro.kernels import match_swar as _swar
+from repro.obs import NULL_OBS
 
 from . import merge as _merge
 
@@ -131,6 +132,10 @@ class PackedCorpus:
         # Cached device forms (lazy), sized to the padded capacity.
         self._swar: Optional[jnp.ndarray] = None      # (C_pad, W) uint32
         self._onehot: Optional[jnp.ndarray] = None    # (C_pad, F4) bf16
+        # Observability handle (spans around pack/splice/compact, churn
+        # counters).  The shared null default records metrics nobody
+        # reads; an owning MatchEngine replaces it with its own.
+        self.obs = NULL_OBS
         # Host->device full-corpus packing events, per form.
         self.swar_pack_count = 0
         self.onehot_pack_count = 0
@@ -352,23 +357,29 @@ class PackedCorpus:
         whole capacity and appends are pure row splices.
         """
         if self._swar is None:
-            if self._multiprocess:
-                self._swar = self._build_swar_per_host(need_words)
-            else:
-                words = encoding.pack_codes_u32(self._frags)
-                c_pad = self.capacity_padded
-                if c_pad > words.shape[0]:
-                    words = np.concatenate(
-                        [words,
-                         np.zeros((c_pad - words.shape[0], words.shape[1]),
-                                  np.uint32)], 0)
-                if words.shape[1] < need_words:
-                    words = np.concatenate(
-                        [words, np.zeros((c_pad, need_words - words.shape[1]),
-                                         np.uint32)], 1)
-                words = _sharding.cyclic_permute(words, self.n_shards)
-                self._swar = self._place(words)
+            tr = self.obs.tracer
+            with tr.span("pack",
+                         {"form": "swar", "rows": self.capacity_padded}
+                         if tr.enabled else None):
+                if self._multiprocess:
+                    self._swar = self._build_swar_per_host(need_words)
+                else:
+                    words = encoding.pack_codes_u32(self._frags)
+                    c_pad = self.capacity_padded
+                    if c_pad > words.shape[0]:
+                        words = np.concatenate(
+                            [words,
+                             np.zeros((c_pad - words.shape[0],
+                                       words.shape[1]), np.uint32)], 0)
+                    if words.shape[1] < need_words:
+                        words = np.concatenate(
+                            [words,
+                             np.zeros((c_pad, need_words - words.shape[1]),
+                                      np.uint32)], 1)
+                    words = _sharding.cyclic_permute(words, self.n_shards)
+                    self._swar = self._place(words)
             self.swar_pack_count += 1
+            self.obs.metrics.counter("corpus.packs").inc()
         elif self._swar.shape[1] < need_words:
             self._swar = self._grow_form_cols(
                 self._swar, need_words - self._swar.shape[1])
@@ -412,26 +423,32 @@ class PackedCorpus:
         chunks divide evenly over the mesh.
         """
         if self._onehot is None:
-            if self._multiprocess:
-                self._onehot = self._build_onehot_per_host(f_chars)
-            else:
-                base = _one_hot_flat(self._frags)
-                base[self._n_rows:] = 0.0     # reserved rows: all-zero
-                c_pad = self.capacity_padded
-                if c_pad > base.shape[0]:
-                    base = np.concatenate(
-                        [base,
-                         np.zeros((c_pad - base.shape[0], base.shape[1]),
-                                  np.float32)], 0)
-                need = max(f_chars, self.fragment_chars) * 4
-                if base.shape[1] < need:
-                    base = np.concatenate(
-                        [base, np.zeros((base.shape[0],
-                                         need - base.shape[1]),
-                                        np.float32)], 1)
-                base = _sharding.cyclic_permute(base, self.n_shards)
-                self._onehot = self._place(jnp.asarray(base, jnp.bfloat16))
+            tr = self.obs.tracer
+            with tr.span("pack",
+                         {"form": "onehot", "rows": self.capacity_padded}
+                         if tr.enabled else None):
+                if self._multiprocess:
+                    self._onehot = self._build_onehot_per_host(f_chars)
+                else:
+                    base = _one_hot_flat(self._frags)
+                    base[self._n_rows:] = 0.0   # reserved rows: all-zero
+                    c_pad = self.capacity_padded
+                    if c_pad > base.shape[0]:
+                        base = np.concatenate(
+                            [base,
+                             np.zeros((c_pad - base.shape[0], base.shape[1]),
+                                      np.float32)], 0)
+                    need = max(f_chars, self.fragment_chars) * 4
+                    if base.shape[1] < need:
+                        base = np.concatenate(
+                            [base, np.zeros((base.shape[0],
+                                             need - base.shape[1]),
+                                            np.float32)], 1)
+                    base = _sharding.cyclic_permute(base, self.n_shards)
+                    self._onehot = self._place(
+                        jnp.asarray(base, jnp.bfloat16))
             self.onehot_pack_count += 1
+            self.obs.metrics.counter("corpus.packs").inc()
         elif self._onehot.shape[1] < f_chars * 4:
             self._onehot = self._grow_form_cols(
                 self._onehot, f_chars * 4 - self._onehot.shape[1])
@@ -539,6 +556,14 @@ class PackedCorpus:
         Sharded forms scatter to the rows' *physical* (cyclic) positions;
         logical row ids never leak into the layout.
         """
+        tr = self.obs.tracer
+        with tr.span("pack",
+                     {"form": "splice", "rows": rows.shape[0]}
+                     if tr.enabled else None):
+            self._splice_impl(start, rows)
+        self.obs.metrics.counter("corpus.splice_rows").inc(rows.shape[0])
+
+    def _splice_impl(self, start: int, rows: np.ndarray) -> None:
         n = rows.shape[0]
         phys = None
         mp = self._multiprocess
@@ -631,6 +656,7 @@ class PackedCorpus:
             self._dead[rows] = True
             self.n_dead += newly
             self.generation += 1
+            self.obs.metrics.counter("corpus.tombstoned_rows").inc(newly)
         return newly
 
     def compact(self) -> int:
@@ -647,23 +673,28 @@ class PackedCorpus:
         """
         if self.n_dead == 0:
             return 0
-        old_n = self._n_rows
-        dead = self._dead[:old_n]
-        first = int(np.argmax(dead))
-        live_after = np.flatnonzero(~dead[first:]) + first
-        new_n = first + live_after.size
-        # Copy before overwrite: source and destination ranges overlap.
-        moved = np.array(self._frags[live_after])
-        self._frags[first:new_n] = moved
-        self._frags[new_n:old_n] = 0
-        self._dead[:old_n] = False
-        self.n_dead = 0
-        self._n_rows = new_n
-        # One splice covers the moved rows and the zeroed tail; observers
-        # (CorpusIndex) ride the same notification.
-        self._splice_device(first, self._frags[first:old_n])
-        self.generation += 1
-        self.n_compactions += 1
+        tr = self.obs.tracer
+        with tr.span("compact",
+                     {"n_dead": self.n_dead} if tr.enabled else None):
+            old_n = self._n_rows
+            dead = self._dead[:old_n]
+            first = int(np.argmax(dead))
+            live_after = np.flatnonzero(~dead[first:]) + first
+            new_n = first + live_after.size
+            # Copy before overwrite: source and destination ranges
+            # overlap.
+            moved = np.array(self._frags[live_after])
+            self._frags[first:new_n] = moved
+            self._frags[new_n:old_n] = 0
+            self._dead[:old_n] = False
+            self.n_dead = 0
+            self._n_rows = new_n
+            # One splice covers the moved rows and the zeroed tail;
+            # observers (CorpusIndex) ride the same notification.
+            self._splice_device(first, self._frags[first:old_n])
+            self.generation += 1
+            self.n_compactions += 1
+        self.obs.metrics.counter("corpus.compactions").inc()
         return old_n - new_n
 
     def invalidate(self) -> None:

@@ -58,6 +58,7 @@ from jax.sharding import Mesh, PartitionSpec
 from repro.core import encoding
 from repro.core.tech import CostSource
 from repro.distributed import sharding as _sharding
+from repro.obs import Observability
 from repro.kernels import filter_qgram as _fq
 from repro.kernels import match_mxu as _mxu
 from repro.kernels import match_swar as _swar
@@ -104,6 +105,11 @@ class MatchResult:
     # all_gather model), the quantity the Planner prices.
     merge_path: str = "host"
     collective_bytes: int = 0
+    # Per-stage wall-second breakdown (plan/pack/filter/launch/merge/
+    # pull) from the span tree -- populated only when the engine's
+    # tracer is enabled (None otherwise), and kept out of ``repr``:
+    # results print compactly either way.
+    timings: Optional[dict] = dataclasses.field(default=None, repr=False)
 
 
 def _valid_mask(P: int, wp: int) -> np.ndarray:
@@ -337,10 +343,39 @@ class CompiledMatch:
         machinery that serves explicit ``rows=`` subsets -- ``hits`` are
         bit-identical to the full scan by the conservativeness of the
         filter (DESIGN.md Sec. 3g).
+
+        With the engine's tracer enabled the whole execution runs under
+        a ``match.run`` span (plan / pack / filter / launch / merge /
+        pull children) and the result carries the per-stage breakdown in
+        ``timings``; disabled (the default) this wrapper is two branch
+        instructions.
         """
+        tr = self.engine.obs.tracer
+        if not tr.enabled:
+            return self._run()
+        with tr.span("match.run",
+                     {"reduction": self.query.reduction}) as root:
+            res = self._run()
+        res.timings = root.stage_seconds()
+        return res
+
+    def _note_plan(self, sp) -> None:
+        """Planner-decision attributes onto an open ``plan`` span."""
+        p = self.plan
+        sp.set("kernel", kernel_name(p.backend, p.predicate))
+        sp.set("strategy", p.strategy)
+        sp.set("cost_source", p.cost_source)
+        sp.set("est_seconds", p.est_seconds)
+        sp.set("est_collective_bytes", p.est_collective_bytes)
+        sp.set("n_rows", p.n_rows)
+        sp.set("n_shards", p.n_shards)
+
+    def _run(self) -> MatchResult:
+        """The streaming executor behind ``run()`` (span-instrumented)."""
         if self._empty:
             return self.engine._empty_result(self.query, self.plan)
         engine, query = self.engine, self.query
+        tr = engine.obs.tracer
         reduction = query.reduction
         sel = self._sel
         survivor_frac = None
@@ -351,22 +386,26 @@ class CompiledMatch:
         dead_full = (engine.corpus.dead_mask if engine.corpus.n_dead
                      else None)
         if sel is not None:
-            if self._sel_max >= engine.corpus.n_rows:
-                # compact() shrank the live region below a row this subset
-                # names; the gather would silently clamp to a wrong row.
-                raise IndexError(
-                    f"rows subset names row {self._sel_max} but the corpus "
-                    f"now holds {engine.corpus.n_rows} live rows (did "
-                    "compact() reclaim evicted rows?); recompile with "
-                    "current row ids")
-            R = len(sel)
-            if (engine._row_shards > 1
-                    and self._idx_stride != engine.corpus.shard_stride):
-                # Sharded capacity growth moved the cyclic stride: the
-                # logical ids are unchanged, re-derive their physical
-                # positions.
-                self._idx = engine._device_gather_idx(self._pad_idx)
-                self._idx_stride = engine.corpus.shard_stride
+            with tr.span("plan") as sp_plan:
+                if self._sel_max >= engine.corpus.n_rows:
+                    # compact() shrank the live region below a row this
+                    # subset names; the gather would silently clamp to a
+                    # wrong row.
+                    raise IndexError(
+                        f"rows subset names row {self._sel_max} but the "
+                        f"corpus now holds {engine.corpus.n_rows} live rows "
+                        "(did compact() reclaim evicted rows?); recompile "
+                        "with current row ids")
+                R = len(sel)
+                if (engine._row_shards > 1
+                        and self._idx_stride != engine.corpus.shard_stride):
+                    # Sharded capacity growth moved the cyclic stride: the
+                    # logical ids are unchanged, re-derive their physical
+                    # positions.
+                    self._idx = engine._device_gather_idx(self._pad_idx)
+                    self._idx_stride = engine.corpus.shard_stride
+                if tr.enabled:
+                    self._note_plan(sp_plan)
             idx, idx_log = self._idx, self._pad_idx
             R_pad = idx.shape[0]
         else:
@@ -376,37 +415,50 @@ class CompiledMatch:
                 # Reserved-but-empty corpus: the answer is no rows (yet).
                 return engine._empty_result(query, self.plan)
             R_pad = engine.corpus.n_rows_padded
-            if not self._lowered:
-                self._lower(R)
-            elif (self.plan.n_rows != R
-                  or engine.planner.feedback.version != self._fb_version):
-                # Row count moved *or* the feedback store re-priced some
-                # bucket since this program was planned: either can flip
-                # the kernel or strategy choice, so re-plan (a backend
-                # flip re-packs only the tiny pattern operands).
-                self._revalidate(R)
+            with tr.span("plan") as sp_plan:
+                if not self._lowered:
+                    self._lower(R)
+                elif (self.plan.n_rows != R
+                      or engine.planner.feedback.version != self._fb_version):
+                    # Row count moved *or* the feedback store re-priced some
+                    # bucket since this program was planned: either can flip
+                    # the kernel or strategy choice, so re-plan (a backend
+                    # flip re-packs only the tiny pattern operands).
+                    self._revalidate(R)
+                if tr.enabled:
+                    self._note_plan(sp_plan)
             if self.plan.strategy == "filter":
-                t0 = time.perf_counter()
-                flags = engine._run_filter(self, R)
-                t_fil = time.perf_counter() - t0
-                sel = np.flatnonzero(flags).astype(np.int64)
-                if dead_full is not None:
-                    # Tombstoned rows can survive the signature test but
-                    # must not reach the verify stage (nor the hits).
-                    sel = sel[~dead_full[sel]]
-                survivor_frac = len(sel) / R
+                with tr.span("filter") as sp_fil:
+                    t0 = time.perf_counter()
+                    flags = engine._run_filter(self, R)
+                    t_fil = time.perf_counter() - t0
+                    sel = np.flatnonzero(flags).astype(np.int64)
+                    if dead_full is not None:
+                        # Tombstoned rows can survive the signature test
+                        # but must not reach the verify stage (nor the
+                        # hits).
+                        sel = sel[~dead_full[sel]]
+                    survivor_frac = len(sel) / R
+                    if tr.enabled:
+                        sp_fil.set("survivor_frac", survivor_frac)
                 ops = self._filter_ops
                 engine.index.record_selectivity(
                     engine.index.estimate_survivor_frac(
                         ops.n_bits, ops.slacks, calibrated=False),
                     survivor_frac)
+                # Plan-vs-actual: one record per executed filter stage,
+                # same key and same floats as the feedback observation
+                # (computed once, handed to both sinks -- the registry is
+                # pure accounting and records unconditionally).
+                p0 = self.plan
+                r_sh = -(-p0.n_rows // p0.n_shards)
+                f_key = kernel_key("filter", r_sh, p0.filter_words,
+                                   ops.qsig_words.shape[0])
+                engine.obs.record_plan_actual(
+                    f_key, p0.est_filter_base_seconds, t_fil)
                 if engine.record_runtimes:
-                    p0 = self.plan
-                    r_sh = -(-p0.n_rows // p0.n_shards)
                     engine.planner.feedback.observe(
-                        kernel_key("filter", r_sh, p0.filter_words,
-                                   ops.qsig_words.shape[0]),
-                        p0.est_filter_base_seconds, t_fil)
+                        f_key, p0.est_filter_base_seconds, t_fil)
                 if len(sel) == 0:
                     res = engine._empty_result(query, self.plan)
                     res.survivor_rows = sel
@@ -460,8 +512,12 @@ class CompiledMatch:
             valid = min(c1, R) - c0       # rows in this chunk that are real
             if valid <= 0:
                 break                     # pure-padding tail chunk
-            scores = engine._chunk_scores(plan, self._pats2d, c0, c1,
-                                          self._packed, idx, idx_log)
+            # The launch span measures kernel *dispatch* (JAX is async);
+            # the device wait lands in the merge layer's pull spans.
+            with tr.span("launch",
+                         {"c0": c0, "rows": valid} if tr.enabled else None):
+                scores = engine._chunk_scores(plan, self._pats2d, c0, c1,
+                                              self._packed, idx, idx_log)
             n_chunks += 1
             # Per-chunk tombstone mask in logical row order (None when the
             # whole chunk is alive).
@@ -566,21 +622,25 @@ class CompiledMatch:
                         topk_state, bs, phys=False,
                         alive_chunk=alive_chunk, rows_np=rows_full)
 
-        if engine.record_runtimes and n_chunks:
+        if n_chunks:
             # Observed scan/verify-stage wall time vs. the feedback-free
             # estimate at the *actual* rows scanned (for a filtered run the
             # plan priced estimated survivors; recomputing at the measured
             # count keeps selectivity error out of the kernel-cost EWMA --
             # selectivity has its own feedback in CorpusIndex).  The ref
-            # backend is priced at total rows, kernels per shard.
+            # backend is priced at total rows, kernels per shard.  The
+            # plan-vs-actual registry always gets the record; the feedback
+            # store (which mutates future plans) only when enabled.
             r_price = R if plan.backend == "ref" else -(-R // plan.n_shards)
             base = engine.planner.backend_seconds(
                 plan.backend, r_price, plan.n_locs, plan.pattern_chars,
                 plan.n_patterns, plan.predicate, base=True)
-            engine.planner.feedback.observe(
-                kernel_key(kernel_name(plan.backend, plan.predicate),
-                           r_price, plan.pattern_chars, plan.n_patterns),
-                base, time.perf_counter() - t_scan0)
+            s_key = kernel_key(kernel_name(plan.backend, plan.predicate),
+                               r_price, plan.pattern_chars, plan.n_patterns)
+            t_scan = time.perf_counter() - t_scan0
+            engine.obs.record_plan_actual(s_key, base, t_scan)
+            if engine.record_runtimes:
+                engine.planner.feedback.observe(s_key, base, t_scan)
 
         if reduction == "full":
             all_scores = np.concatenate(full, 0)
@@ -636,7 +696,14 @@ class MatchEngine:
                  interpret: Optional[bool] = None,
                  mesh: Optional[Mesh] = None, rules=None,
                  compile_cache_size: int = 128,
-                 index: Union[bool, CorpusIndex] = True):
+                 index: Union[bool, CorpusIndex] = True,
+                 obs: Optional[Observability] = None):
+        # Observability handle (DESIGN.md Sec. 3l): spans off by default
+        # (and free when off); the metrics registry is always on -- it
+        # only observes, never feeds back into plans, so it is safe at
+        # any process count.  Shared with the corpus, index, merger, and
+        # any MatchService/PatternBank built on this engine.
+        self.obs = obs if obs is not None else Observability()
         n_row_slots = (corpus.capacity if isinstance(corpus, PackedCorpus)
                        else np.asarray(corpus).shape[0])
         if n_row_slots < 1:
@@ -670,6 +737,9 @@ class MatchEngine:
         else:
             self.corpus = PackedCorpus(np.asarray(corpus, np.uint8),
                                        row_pad=row_pad)
+        # Pack/splice/compact spans record into this engine's tracer
+        # (engines sharing a corpus share whichever was attached last).
+        self.corpus.obs = self.obs
         # Configure the cyclic row layout + NamedSharding placement (a
         # no-op when the corpus already has this exact layout).
         self.corpus.shard_rows(
@@ -682,7 +752,7 @@ class MatchEngine:
         # device-side under shard_map and work at any process count.
         self.merger = ShardMerger(
             self.mesh if self._row_shards > 1 else None,
-            self._row_axes, self._row_shards)
+            self._row_axes, self._row_shards, obs=self.obs)
         # Jitted multi-controller launch cache (keyed by kernel + shape
         # geometry): a fresh jit per chunk would retrace every call.
         self._mp_cache: dict = {}

@@ -176,6 +176,24 @@ class FeedbackStore:
         return {k: c.published for k, c in self._cells.items()
                 if not math.isclose(c.published, 1.0)}
 
+    def keys(self) -> Tuple[Tuple, ...]:
+        """Every (kernel, shape-bucket) key seen so far (warmup included).
+
+        The same tuples the obs-layer plan-vs-actual registry keys on
+        (both receive the identical ``kernel_key`` from the engine), so
+        joining the two accountings is a dict lookup.
+        """
+        return tuple(self._cells.keys())
+
+    def cell_stats(self, key: Tuple) -> Optional[Dict]:
+        """One bucket's state: post-warmup count, EWMA ratio, factor."""
+        cell = self._cells.get(key)
+        if cell is None:
+            return None
+        return {"n": cell.n, "warmed": cell.warmed,
+                "ewma_ratio": cell.ewma.value,
+                "published_factor": cell.published}
+
     def snapshot(self) -> Dict:
         return {
             "n_observations": self.n_observations,
@@ -183,5 +201,12 @@ class FeedbackStore:
             "misprediction_rate": round(self.misprediction_rate, 4),
             "n_buckets": len(self._cells),
             "n_repriced": len(self.repriced()),
+            # JSON-safe per-bucket factors for the re-priced set: the
+            # drift a ServiceStats snapshot should make visible, not
+            # just count.
+            "repriced_factors": {
+                "/".join(str(p) for p in k): round(v, 4)
+                for k, v in sorted(self.repriced().items(),
+                                   key=lambda kv: str(kv[0]))},
             "version": self.version,
         }

@@ -305,25 +305,31 @@ class CorpusIndex:
         array, which row splices keep up to date incrementally.
         """
         if self._sigs is None:
-            if self.corpus._multiprocess:
-                self._build_sigs_per_host()
-            else:
-                n = self.corpus.n_rows
-                s = self.corpus.n_shards
-                stride = self.shard_stride
-                words = np.zeros((self._rows_padded, self.sig_words),
-                                 np.uint32)
-                # Chunked pack (bounded occupancy temporary) straight into
-                # the cyclic physical layout the corpus forms use.
-                for b0 in range(0, n, _BUILD_CHUNK_ROWS):
-                    b1 = min(b0 + _BUILD_CHUNK_ROWS, n)
-                    live, counts = row_signatures(
-                        self.corpus.fragments[b0:b1], self.q, self.n_bits)
-                    words[_sharding.cyclic_physical_rows(
-                        np.arange(b0, b1), s, stride)] = live
-                    self._row_bits[b0:b1] = counts
-                self._sigs = self.corpus._place(words)
+            tr = self.corpus.obs.tracer
+            with tr.span("pack",
+                         {"form": "qgram_sigs", "rows": self._rows_padded}
+                         if tr.enabled else None):
+                if self.corpus._multiprocess:
+                    self._build_sigs_per_host()
+                else:
+                    n = self.corpus.n_rows
+                    s = self.corpus.n_shards
+                    stride = self.shard_stride
+                    words = np.zeros((self._rows_padded, self.sig_words),
+                                     np.uint32)
+                    # Chunked pack (bounded occupancy temporary) straight
+                    # into the cyclic physical layout the corpus forms use.
+                    for b0 in range(0, n, _BUILD_CHUNK_ROWS):
+                        b1 = min(b0 + _BUILD_CHUNK_ROWS, n)
+                        live, counts = row_signatures(
+                            self.corpus.fragments[b0:b1], self.q,
+                            self.n_bits)
+                        words[_sharding.cyclic_physical_rows(
+                            np.arange(b0, b1), s, stride)] = live
+                        self._row_bits[b0:b1] = counts
+                    self._sigs = self.corpus._place(words)
             self.sig_pack_count += 1
+            self.corpus.obs.metrics.counter("corpus.packs").inc()
         return self._sigs
 
     def _build_sigs_per_host(self) -> None:

@@ -44,6 +44,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.distributed import sharding as _sharding
+from repro.obs import NULL_OBS, Observability
 
 # Sentinel pair for dead / padding top-k entries: any real row scores
 # >= 0 and has id strictly below ROW_SENTINEL, so sentinels sort
@@ -85,7 +86,12 @@ class ShardMerger:
     bit-identity gate in ``BENCH_match_shard.json`` compares the two).
     """
 
-    def __init__(self, mesh: Optional[Mesh], row_axes, n_shards: int):
+    def __init__(self, mesh: Optional[Mesh], row_axes, n_shards: int,
+                 obs: Optional[Observability] = None):
+        # Merge/pull spans + transfer counters record here; the engine
+        # hands in its own handle, passthrough mergers (PatternBank's
+        # single-shard default) keep the shared null one.
+        self.obs = obs if obs is not None else NULL_OBS
         self.n_shards = int(n_shards)
         self.mesh = mesh if self.n_shards > 1 else None
         if row_axes is None:
@@ -173,21 +179,27 @@ class ShardMerger:
         byte; replicated/local inputs pull directly.  ``kind`` buckets
         the transfer accounting ("reduced" state vs. score "block").
         """
-        if self._sharded(x):
-            rep = self._replicator(unpermute)(x)
-            self.n_collectives += 1
-            self.collective_bytes += (int(rep.nbytes)
-                                      * (self.n_shards - 1)) // self.n_shards
-            out = np.asarray(rep)
-        else:
-            out = np.asarray(x)
-            if unpermute and self.n_shards > 1:
-                out = _sharding.cyclic_unpermute(out, self.n_shards)
-        self.n_pulls += 1
-        if kind == "block":
-            self.block_pull_bytes += out.nbytes
-        else:
-            self.reduced_pull_bytes += out.nbytes
+        tr = self.obs.tracer
+        with tr.span("pull",
+                     {"kind": kind} if tr.enabled else None) as sp:
+            if self._sharded(x):
+                rep = self._replicator(unpermute)(x)
+                self.n_collectives += 1
+                self.collective_bytes += (int(rep.nbytes)
+                                          * (self.n_shards - 1)) \
+                    // self.n_shards
+                out = np.asarray(rep)
+            else:
+                out = np.asarray(x)
+                if unpermute and self.n_shards > 1:
+                    out = _sharding.cyclic_unpermute(out, self.n_shards)
+            self.n_pulls += 1
+            if kind == "block":
+                self.block_pull_bytes += out.nbytes
+            else:
+                self.reduced_pull_bytes += out.nbytes
+            if tr.enabled:
+                sp.set("bytes", int(out.nbytes))
         return out
 
     # -- jitted per-chunk reductions -------------------------------------------
@@ -201,7 +213,9 @@ class ShardMerger:
         """(rows, L[, Q]) -> ((rows[, Q]) argmax, (rows[, Q]) max), jitted."""
         fn = self._jit("best", lambda: jax.jit(
             lambda s: (jnp.argmax(s, axis=1), jnp.max(s, axis=1))))
-        return fn(scores)
+        tr = self.obs.tracer
+        with tr.span("merge", {"op": "best"} if tr.enabled else None):
+            return fn(scores)
 
     def hot_mask(self, scores, thr_int: np.ndarray):
         """(rows,) bool: any alignment (any query) reaches the threshold.
@@ -216,7 +230,10 @@ class ShardMerger:
                 m = (s >= t[None, None, :]) if s.ndim == 3 else (s >= t)
                 return m.any(axis=tuple(range(1, m.ndim)))
             return jax.jit(hot)
-        return self._jit("hot", build)(scores, np.asarray(thr_int, np.int32))
+        tr = self.obs.tracer
+        with tr.span("merge", {"op": "hot_mask"} if tr.enabled else None):
+            return self._jit("hot", build)(scores,
+                                           np.asarray(thr_int, np.int32))
 
     def or_(self, a, b):
         """Jitted elementwise OR (filter flag union across patterns)."""
@@ -230,18 +247,21 @@ class ShardMerger:
         (identical on every process by SPMD discipline).
         """
         idx = np.asarray(idx)
-        if self.mesh is None:
-            return jnp.take(arr, jnp.asarray(idx), axis=0)
-        arr = self._localize(arr)
-        def build():
-            ns = NamedSharding(self.mesh, PartitionSpec())
-            return jax.jit(lambda a, i: jnp.take(a, i, axis=0),
-                           out_shardings=ns)
-        out = self._jit("gather", build)(arr, idx)
-        self.n_collectives += 1
-        self.collective_bytes += (int(out.nbytes)
-                                  * (self.n_shards - 1)) // self.n_shards
-        return out
+        tr = self.obs.tracer
+        with tr.span("merge",
+                     {"op": "gather_rows"} if tr.enabled else None):
+            if self.mesh is None:
+                return jnp.take(arr, jnp.asarray(idx), axis=0)
+            arr = self._localize(arr)
+            def build():
+                ns = NamedSharding(self.mesh, PartitionSpec())
+                return jax.jit(lambda a, i: jnp.take(a, i, axis=0),
+                               out_shardings=ns)
+            out = self._jit("gather", build)(arr, idx)
+            self.n_collectives += 1
+            self.collective_bytes += (int(out.nbytes)
+                                      * (self.n_shards - 1)) // self.n_shards
+            return out
 
     # -- top-k tree merge ------------------------------------------------------
     def _shard_index(self):
@@ -354,19 +374,22 @@ class ShardMerger:
         """
         st_s, st_r = state
         alive_chunk = np.asarray(alive_chunk, bool)
-        if phys:
-            fn = self._phys_topk()
-            st_s, st_r = fn(bs, alive_chunk, np.int32(c0), st_s, st_r)
-            if self.n_shards > 1:
-                k_loc = min(np.shape(st_s)[0], bs.shape[0] // self.n_shards)
-                cols = bs.shape[1] if bs.ndim == 2 else 1
-                self.n_collectives += 1
-                self.collective_bytes += (self.n_shards - 1) * k_loc * \
-                    cols * 12
-        else:
-            fn = self._logical_topk()
-            st_s, st_r = fn(st_s, st_r, self._localize(bs),
-                            np.asarray(rows_np, np.int32), alive_chunk)
+        tr = self.obs.tracer
+        with tr.span("merge", {"op": "topk"} if tr.enabled else None):
+            if phys:
+                fn = self._phys_topk()
+                st_s, st_r = fn(bs, alive_chunk, np.int32(c0), st_s, st_r)
+                if self.n_shards > 1:
+                    k_loc = min(np.shape(st_s)[0],
+                                bs.shape[0] // self.n_shards)
+                    cols = bs.shape[1] if bs.ndim == 2 else 1
+                    self.n_collectives += 1
+                    self.collective_bytes += (self.n_shards - 1) * k_loc * \
+                        cols * 12
+            else:
+                fn = self._logical_topk()
+                st_s, st_r = fn(st_s, st_r, self._localize(bs),
+                                np.asarray(rows_np, np.int32), alive_chunk)
         return st_s, st_r
 
     def topk_finalize(self, state, n_alive: int, k: int):

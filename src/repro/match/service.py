@@ -45,7 +45,9 @@ reference in lock step (Sec. 3.4); the service is the TPU analogue:
   live rows beyond the window are tombstoned (reductions mask them; the
   standing scan already fired for them at ingest) and the corpus
   compacts once the dead fraction crosses ``compact_dead_frac``.
-* **Stats.**  Per-request latency plus launch/coalescing/cache/ingest
+* **Stats.**  Per-request latency (a log-bucketed histogram: exact
+  bucket counts over the whole run, so the snapshot reports p50/p95/p99,
+  not just a mean) plus launch/coalescing/cache/ingest
   counters, per-tick launch counts, cache hit-rate, and q-gram filter
   routing (filtered-launch count, hit-rate, measured survivor fraction --
   the engine routes eligible threshold queries through the
@@ -62,6 +64,8 @@ from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.obs import LogHistogram
 
 from .engine import MatchEngine, MatchResult
 from .planner import BatchPlan
@@ -86,7 +90,14 @@ class ServiceStats:
     launches_last_tick: int = 0       # engine launches in the latest tick
     n_filtered_launches: int = 0      # launches that ran filter-then-verify
     sum_survivor_frac: float = 0.0    # running sum over filtered launches
-    total_latency_s: float = 0.0      # running sum (bounded state)
+    # Per-request latency distribution: a log-bucketed histogram (exact
+    # bucket counts over the whole run, O(#occupied buckets) state)
+    # replaces the old running-sum-only accounting, so the snapshot can
+    # report p50/p95/p99 -- which a long-tail launch distribution needs;
+    # the mean alone buried the tail.  ``total_latency_s`` and
+    # ``avg_latency_s`` remain below as thin views over it.
+    latency_hist: LogHistogram = dataclasses.field(
+        default_factory=LogHistogram, repr=False)
     n_shards: int = 1                 # engine row shards (mesh-resident)
     shard_rows: Optional[List[int]] = None   # live rows per shard
     # Cross-shard merge accounting (DESIGN.md Sec. 3k): which path the
@@ -112,8 +123,24 @@ class ServiceStats:
     n_evicted_rows: int = 0           # rows tombstoned by the window
     n_compactions: int = 0            # corpus compactions triggered
     bank: Optional[Dict] = None       # PatternBank.stats() snapshot
+    # Obs-layer views (DESIGN.md Sec. 3l), refreshed per tick: per-stage
+    # wall seconds summed over the latest tick's launches (from the
+    # ``MatchResult.timings`` span breakdowns) and the registry's
+    # plan-vs-actual accounting, so "where did the tick go" and "how
+    # wrong were the estimates" read out of the same snapshot the
+    # benchmarks and the launcher already grep.
+    timings_last_tick: Optional[Dict] = None
+    plan_actual: Optional[Dict] = None
+    plan_mispredict_rate: float = 0.0
     _t_first_submit: Optional[float] = None
     _t_last_complete: Optional[float] = None
+
+    @property
+    def total_latency_s(self) -> float:
+        """Deprecated running-sum view; kept for callers of the old
+        field.  The histogram is the source of truth now -- prefer
+        ``latency_hist`` / the snapshot percentiles."""
+        return self.latency_hist.sum
 
     @property
     def avg_latency_s(self) -> float:
@@ -184,6 +211,9 @@ class ServiceStats:
             "filter_hit_rate": round(self.filter_hit_rate, 4),
             "avg_survivor_frac": round(self.avg_survivor_frac, 4),
             "avg_latency_s": round(self.avg_latency_s, 6),
+            "latency_p50_s": round(self.latency_hist.quantile(0.50), 6),
+            "latency_p95_s": round(self.latency_hist.quantile(0.95), 6),
+            "latency_p99_s": round(self.latency_hist.quantile(0.99), 6),
             "qps": round(self.qps, 1),
             "n_shards": self.n_shards,
             "shard_rows": list(self.shard_rows or []),
@@ -201,6 +231,9 @@ class ServiceStats:
             "n_evicted_rows": self.n_evicted_rows,
             "n_compactions": self.n_compactions,
             "bank": dict(self.bank) if self.bank is not None else None,
+            "timings": dict(self.timings_last_tick or {}),
+            "plan_actual": dict(self.plan_actual or {}),
+            "plan_mispredict_rate": round(self.plan_mispredict_rate, 4),
         }
 
 
@@ -293,6 +326,9 @@ class MatchService:
         rows are tombstoned past it, and the corpus compacts once
         ``n_dead / n_rows`` reaches ``compact_dead_frac``)."""
         self.engine = engine
+        # One observability surface per stack: the service records into
+        # the engine's tracer/registry, never a second one.
+        self.obs = engine.obs
         self.cache_size = int(cache_size)
         if bank is not None and (bank.fragment_chars
                                  != engine.corpus.fragment_chars):
@@ -302,8 +338,10 @@ class MatchService:
         self.bank = bank
         if bank is not None:
             # One transfer ledger per service: bank pulls count alongside
-            # the engine's cross-shard merges (DESIGN.md Sec. 3k).
+            # the engine's cross-shard merges (DESIGN.md Sec. 3k) -- and
+            # one obs surface, so bank scan spans nest in the same trace.
             bank.merger = engine.merger
+            bank.obs = engine.obs
         if window_rows is not None and int(window_rows) < 1:
             raise ValueError("window_rows must be >= 1")
         self.window_rows = None if window_rows is None else int(window_rows)
@@ -311,6 +349,7 @@ class MatchService:
             raise ValueError("compact_dead_frac must be in (0, 1]")
         self.compact_dead_frac = float(compact_dead_frac)
         self.stats = ServiceStats()
+        self._tick_timings: Dict[str, float] = {}
         self._queue: List[_Pending] = []
         self._ingest_queue: List[Tuple[IngestTicket, np.ndarray]] = []
         self._cache: "OrderedDict[MatchQuery, MatchResult]" = OrderedDict()
@@ -332,29 +371,32 @@ class MatchService:
         (1-D pattern) queries coalesce; 2-D (per-row / batched) queries
         pass through as singleton launches.
         """
-        query = as_query(patterns, reduction=reduction, k=k,
-                         threshold=threshold, rows=rows, backend=backend,
-                         mode=mode, filter=filter)
-        # Coalescing key straight off the IR: 1-D queries whose fused
-        # batched execution is well-defined group by everything that must
-        # agree for one launch to serve them all.  Predicate kind is part
-        # of the key so exact groups keep riding the exact kernels; the
-        # filter hint is part of it so the fused query inherits one
-        # unambiguous routing decision (the engine filters fused batched
-        # threshold queries with a survivor union, so coalesced groups
-        # still ride the index transparently).
-        coalescible = len(query.shape) == 1
-        group_key = ((query.pattern_chars, query.reduction, query.rows_b,
-                      query.backend, query.chunk_rows, query.is_exact,
-                      query.filter)
-                     if coalescible else None)
-        ticket = MatchTicket(self)
-        now = time.perf_counter()
-        self._queue.append(_Pending(ticket=ticket, query=query,
-                                    t_submit=now, group_key=group_key))
-        self.stats.n_submitted += 1
-        if self.stats._t_first_submit is None:
-            self.stats._t_first_submit = now
+        tr = self.obs.tracer
+        with tr.span("service.enqueue"):
+            query = as_query(patterns, reduction=reduction, k=k,
+                             threshold=threshold, rows=rows,
+                             backend=backend, mode=mode, filter=filter)
+            # Coalescing key straight off the IR: 1-D queries whose fused
+            # batched execution is well-defined group by everything that
+            # must agree for one launch to serve them all.  Predicate kind
+            # is part of the key so exact groups keep riding the exact
+            # kernels; the filter hint is part of it so the fused query
+            # inherits one unambiguous routing decision (the engine
+            # filters fused batched threshold queries with a survivor
+            # union, so coalesced groups still ride the index
+            # transparently).
+            coalescible = len(query.shape) == 1
+            group_key = ((query.pattern_chars, query.reduction,
+                          query.rows_b, query.backend, query.chunk_rows,
+                          query.is_exact, query.filter)
+                         if coalescible else None)
+            ticket = MatchTicket(self)
+            now = time.perf_counter()
+            self._queue.append(_Pending(ticket=ticket, query=query,
+                                        t_submit=now, group_key=group_key))
+            self.stats.n_submitted += 1
+            if self.stats._t_first_submit is None:
+                self.stats._t_first_submit = now
         return ticket
 
     def ingest(self, rows) -> IngestTicket:
@@ -424,7 +466,7 @@ class MatchService:
         t.done = True
         now = time.perf_counter()
         t.latency_s = now - pend.t_submit
-        self.stats.total_latency_s += t.latency_s
+        self.stats.latency_hist.record(t.latency_s)
         self.stats.n_completed += 1
         self.stats.n_cache_hits += int(cached)
         self.stats.n_failed += int(error is not None)
@@ -447,11 +489,25 @@ class MatchService:
         self.stats.merge_path = res.merge_path
         self.stats.collective_bytes += int(res.collective_bytes)
 
+    def _note_timings(self, res: MatchResult) -> None:
+        """Fold one launch's per-stage span breakdown into the tick's.
+
+        Only present when the tracer is enabled (``MatchResult.timings``
+        is ``None`` otherwise); accumulated once per *launch*, so a
+        coalesced group charges its stages once, not per scattered view.
+        """
+        if res.timings is None:
+            return
+        acc = self._tick_timings
+        for stage, secs in res.timings.items():
+            acc[stage] = acc.get(stage, 0.0) + secs
+
     def _run_single(self, pend: _Pending) -> MatchResult:
         self.stats.n_launches += 1
         res = self.engine.match(pend.query)
         self._note_filter(res)
         self._note_merge(res)
+        self._note_timings(res)
         return res
 
     def _scatter(self, res: MatchResult, q: int, n_q: int,
@@ -473,6 +529,9 @@ class MatchService:
                           n_shards=res.n_shards,
                           merge_path=res.merge_path,
                           collective_bytes=res.collective_bytes)
+        # Scatter views share the fused launch's stage breakdown: the
+        # stages ran once for the whole group.
+        out.timings = res.timings
         if res.scores is not None:
             out.scores = np.ascontiguousarray(res.scores[:, :, q])
         if res.topk_rows is not None:
@@ -528,19 +587,24 @@ class MatchService:
                 predicate=first.predicate,
                 n_shards=self.engine.n_shards)
         if bp is not None and bp.coalesced:
-            fused = self._fuse_queries(members)
-            self.stats.n_launches += 1
-            self.stats.n_coalesced_launches += 1
-            self.stats.n_coalesced_queries += len(grp)
-            batched = self.engine.match(fused)
-            self._note_filter(batched)
-            self._note_merge(batched)
-            for q, mem in enumerate(members):
-                k_q = mem[0].query.k[0] if mem[0].query.k else 0
-                res = self._scatter(batched, q, n_q, k_q)
-                self._cache_put(mem[0].query, res)
-                for p in mem:
-                    self._complete(p, res, cached=False)
+            tr = self.obs.tracer
+            with tr.span("service.coalesce",
+                         {"n_queries": len(grp), "n_uniq": n_q}
+                         if tr.enabled else None):
+                fused = self._fuse_queries(members)
+                self.stats.n_launches += 1
+                self.stats.n_coalesced_launches += 1
+                self.stats.n_coalesced_queries += len(grp)
+                batched = self.engine.match(fused)
+                self._note_filter(batched)
+                self._note_merge(batched)
+                self._note_timings(batched)
+                for q, mem in enumerate(members):
+                    k_q = mem[0].query.k[0] if mem[0].query.k else 0
+                    res = self._scatter(batched, q, n_q, k_q)
+                    self._cache_put(mem[0].query, res)
+                    for p in mem:
+                        self._complete(p, res, cached=False)
         else:
             if n_q > 1:
                 self.stats.n_sequential_fallback += len(grp)
@@ -627,6 +691,29 @@ class MatchService:
                 self.bank.n_prefilter_launches
             self.stats.bank = self.bank.stats()
 
+    def _note_obs(self) -> None:
+        """Mirror per-tick service health into the metrics registry.
+
+        Gauges carry the service-level facts no single span shows (queue
+        depth, hit rates, shard balance); the stats snapshot pulls the
+        registry's plan-vs-actual accounting back so estimate drift per
+        (kernel, shape-bucket) reads out of ``ServiceStats.snapshot()``.
+        """
+        m = self.obs.metrics
+        s = self.stats
+        m.gauge("service.queue_depth").set(len(self._queue))
+        m.gauge("service.cache_hit_rate").set(s.cache_hit_rate)
+        m.gauge("service.launches_last_tick").set(s.launches_last_tick)
+        m.gauge("service.avg_survivor_frac").set(s.avg_survivor_frac)
+        m.gauge("service.shard_balance").set(s.shard_balance)
+        m.gauge("service.collective_bytes").set(s.collective_bytes)
+        m.gauge("service.n_evicted_rows").set(s.n_evicted_rows)
+        m.gauge("service.n_compactions").set(s.n_compactions)
+        s.timings_last_tick = (dict(self._tick_timings)
+                               if self._tick_timings else None)
+        s.plan_actual = m.plan_actual_summary() or None
+        s.plan_mispredict_rate = m.mispredict_rate()
+
     def tick(self) -> int:
         """Drain the queues once: ingests, cache hits, grouped launches.
 
@@ -635,6 +722,16 @@ class MatchService:
         below covers the append.  Returns the number of requests completed
         this tick.
         """
+        tr = self.obs.tracer
+        if not tr.enabled:
+            return self._tick()
+        with tr.span("service.tick", {"tick": self.stats.n_ticks}) as sp:
+            n = self._tick()
+            sp.set("n_completed", n)
+            return n
+
+    def _tick(self) -> int:
+        """The tick body behind ``tick()`` (span-instrumented)."""
         if self.bank is not None:
             # Retire TTL-expired standing patterns before this tick's
             # ingest scan: a pattern past its deadline must not fire.
@@ -649,9 +746,11 @@ class MatchService:
             self._cache_generation = gen
         self.stats.n_ticks += 1
         launches_before = self.stats.n_launches
+        self._tick_timings = {}
         pending, self._queue = self._queue, []
         if not pending:
             self.stats.launches_last_tick = 0
+            self._note_obs()
             return 0
         before = self.stats.n_completed
         groups: "OrderedDict[Tuple, List[_Pending]]" = OrderedDict()
@@ -680,4 +779,5 @@ class MatchService:
                         self._complete(p, None, cached=False, error=e)
         self.stats.launches_last_tick = (self.stats.n_launches
                                          - launches_before)
+        self._note_obs()
         return self.stats.n_completed - before

@@ -62,6 +62,7 @@ from repro.match.engine import _pack_mask_planes, _valid_mask, \
 from repro.match.feedback import EwmaRatio
 from repro.match.planner import BankPlan, Planner, _swar_geometry
 from repro.match.query import MatchQuery, as_masks
+from repro.obs import NULL_OBS
 
 # Hit array columns (HitTicket.hits): batch-local doc index, alignment
 # location, pattern id, similarity score.
@@ -206,6 +207,10 @@ class PatternBank:
         # ledger as the corpus reductions.
         from .merge import ShardMerger
         self.merger = ShardMerger(None, None, 1)
+        # Observability handle: scan/prefilter/verify spans record here.
+        # A MatchService replaces it with its engine's so bank activity
+        # lands in the same trace as the corpus reductions.
+        self.obs = NULL_OBS
 
     # -- geometry --------------------------------------------------------------
     @property
@@ -459,24 +464,40 @@ class PatternBank:
         if D == 0 or self.n_live == 0:
             return ticket
         self.n_scans += 1
-        plan = self.planner.plan_bank(
-            n_docs=D, fragment_chars=self.fragment_chars,
-            pattern_chars=self.pattern_chars, n_patterns=self.n_live,
-            sig_words=self.sig_words,
-            survivor_frac=self.estimate_survivor_frac(),
-            prunable=self.prunable, force=self.filter)
-        ticket.plan = plan
-        slots = np.arange(self.n_live, dtype=np.int64)
-        if plan.strategy == "filter":
-            slots = self._prefilter(docs)
-            ticket.survivor_frac = len(slots) / self.n_live
-        ticket.n_verified = len(slots)
-        if len(slots):
-            hits = self._verify(docs, slots)
-            ticket.n_bank_launches = 1
-            ticket.hits = hits
-            self.n_hits += hits.shape[0]
-            self._deliver(hits)
+        tr = self.obs.tracer
+        with tr.span("bank.scan",
+                     {"n_docs": D, "n_patterns": self.n_live}
+                     if tr.enabled else None):
+            with tr.span("plan") as sp_plan:
+                plan = self.planner.plan_bank(
+                    n_docs=D, fragment_chars=self.fragment_chars,
+                    pattern_chars=self.pattern_chars,
+                    n_patterns=self.n_live, sig_words=self.sig_words,
+                    survivor_frac=self.estimate_survivor_frac(),
+                    prunable=self.prunable, force=self.filter)
+                if tr.enabled:
+                    sp_plan.set("strategy", plan.strategy)
+                    sp_plan.set("est_seconds", plan.est_seconds)
+            ticket.plan = plan
+            slots = np.arange(self.n_live, dtype=np.int64)
+            if plan.strategy == "filter":
+                with tr.span("filter",
+                             {"op": "bank_prefilter"}
+                             if tr.enabled else None) as sp_fil:
+                    slots = self._prefilter(docs)
+                    ticket.survivor_frac = len(slots) / self.n_live
+                    if tr.enabled:
+                        sp_fil.set("survivor_frac", ticket.survivor_frac)
+            ticket.n_verified = len(slots)
+            if len(slots):
+                with tr.span("launch",
+                             {"op": "bank_verify", "n_verified": len(slots)}
+                             if tr.enabled else None):
+                    hits = self._verify(docs, slots)
+                ticket.n_bank_launches = 1
+                ticket.hits = hits
+                self.n_hits += hits.shape[0]
+                self._deliver(hits)
         ticket.wall_s = time.perf_counter() - t0
         return ticket
 

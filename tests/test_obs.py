@@ -1,0 +1,419 @@
+"""Observability layer tests (DESIGN.md Sec. 3l).
+
+Covers the contracts the layer is trusted for:
+
+* ``LogHistogram`` quantiles within one bucket width of exact numpy
+  percentiles, over several distributions;
+* span nesting / attribute / stage-breakdown invariants, including the
+  disjoint self-time accounting;
+* Chrome/Perfetto trace-event export schema;
+* plan-vs-actual records agreeing **bit-for-bit** with what
+  ``FeedbackStore.observe`` receives on a feedback-enabled engine;
+* the disabled fast path allocating nothing (singleton no-op span,
+  tracemalloc-asserted);
+* the AST lint (``tools/lint_obs_spans.py``) passing on the tree and
+  catching a planted uncovered dispatch;
+* ``MatchResult.timings`` / ``ServiceStats`` histogram views.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import subprocess
+import sys
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.obs import (NOOP_SPAN, STAGES, LogHistogram, MetricsRegistry,
+                       Observability, Tracer)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+LINT = REPO / "tools" / "lint_obs_spans.py"
+
+
+# -- LogHistogram ------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["lognormal", "uniform", "exponential",
+                                  "bimodal"])
+def test_histogram_quantiles_within_one_bucket(dist):
+    rng = np.random.default_rng(3)
+    if dist == "lognormal":
+        xs = rng.lognormal(-5, 2, 5000)
+    elif dist == "uniform":
+        xs = rng.uniform(1e-4, 1e-1, 5000)
+    elif dist == "exponential":
+        xs = rng.exponential(0.01, 5000)
+    else:
+        xs = np.concatenate([rng.normal(1e-3, 1e-4, 2500),
+                             rng.normal(1e-1, 1e-2, 2500)])
+        xs = np.abs(xs) + 1e-9
+    h = LogHistogram()
+    for x in xs:
+        h.record(float(x))
+    for q in (0.01, 0.25, 0.50, 0.90, 0.95, 0.99):
+        true = float(np.quantile(xs, q, method="lower"))
+        est = h.quantile(q)
+        assert est > 0.0
+        # One bucket width of log-error max (plus the min/max clamp can
+        # only *reduce* the error).
+        assert abs(math.log(est) - math.log(true)) <= math.log(h.base) \
+            + 1e-9, (dist, q, est, true)
+
+
+def test_histogram_edge_cases():
+    h = LogHistogram()
+    assert h.quantile(0.5) == 0.0 and h.mean == 0.0
+    h.record(0.0)                      # underflow bucket
+    h.record(-1.0)
+    h.record(4.0)
+    assert h.count == 3 and h.n_under == 2
+    assert h.quantile(0.0) == 0.0      # underflow sorts first
+    assert h.quantile(1.0) == pytest.approx(4.0)   # clamped to max
+    assert h.sum == pytest.approx(3.0)
+    snap = h.snapshot()
+    assert snap["count"] == 3 and "p99" in snap
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    with pytest.raises(ValueError):
+        LogHistogram(base=1.0)
+
+
+def test_histogram_single_value_exact():
+    h = LogHistogram()
+    for _ in range(100):
+        h.record(0.125)
+    for q in (0.0, 0.5, 1.0):
+        assert h.quantile(q) == pytest.approx(0.125)
+
+
+# -- spans -------------------------------------------------------------------
+
+def test_span_nesting_and_attrs():
+    tr = Tracer(enabled=True)
+    with tr.span("service.tick", {"tick": 0}) as t:
+        with tr.span("match.run") as r:
+            with tr.span("plan", {"kernel": "swar"}) as p:
+                p.set("est_seconds", np.float64(0.5))
+            with tr.span("launch", {"c0": 0}):
+                pass
+        assert tr.current() is t
+    assert tr.current() is None
+    assert len(tr.roots) == 1
+    root = tr.roots[0]
+    assert [s.name for s in root.walk()] == \
+        ["service.tick", "match.run", "plan", "launch"]
+    assert r.parent_id == root.span_id
+    assert p.attrs["kernel"] == "swar"
+    # numpy scalar coerced to a plain JSON float
+    assert isinstance(p.attrs["est_seconds"], float)
+    assert root.duration_s >= r.duration_s >= 0.0
+    # span ids unique + parent ids resolve within the tree
+    ids = [s.span_id for s in root.walk()]
+    assert len(set(ids)) == len(ids)
+    for s in root.walk():
+        if s.parent_id is not None:
+            assert s.parent_id in ids
+
+
+def test_stage_seconds_disjoint():
+    tr = Tracer(enabled=True)
+    with tr.span("match.run") as root:
+        with tr.span("filter"):
+            with tr.span("pull"):     # nested stage: counts as pull only
+                pass
+        with tr.span("launch"):
+            pass
+    stages = root.stage_seconds()
+    assert set(stages) == set(STAGES)
+    fil = next(s for s in root.children if s.name == "filter")
+    pull = fil.children[0]
+    # Disjoint self-times: filter excludes the nested pull.
+    assert stages["pull"] == pytest.approx(pull.duration_s)
+    assert stages["filter"] == pytest.approx(
+        fil.duration_s - pull.duration_s)
+    assert sum(stages.values()) <= root.duration_s + 1e-9
+
+
+def test_span_exception_unwind():
+    tr = Tracer(enabled=True)
+    with pytest.raises(RuntimeError):
+        with tr.span("a"):
+            with tr.span("b"):
+                raise RuntimeError("boom")
+    assert tr.current() is None        # stack fully unwound
+    assert [s.name for s in tr.iter_spans()] == ["a", "b"]
+
+
+def test_max_spans_bounds_roots():
+    tr = Tracer(enabled=True, max_spans=2)
+    for _ in range(5):
+        with tr.span("r"):
+            pass
+    assert len(tr.roots) == 2 and tr.n_dropped == 3
+    assert tr.n_spans == 5
+
+
+# -- export ------------------------------------------------------------------
+
+def test_chrome_trace_schema(tmp_path):
+    tr = Tracer(enabled=True)
+    with tr.span("match.run", {"reduction": "best"}):
+        with tr.span("launch"):
+            pass
+    path = tmp_path / "trace.json"
+    n = tr.write_chrome(path)
+    trace = json.loads(path.read_text())
+    assert n == 2 and len(trace["traceEvents"]) == 2
+    for ev in trace["traceEvents"]:
+        assert set(("name", "cat", "ph", "ts", "dur", "pid", "tid",
+                    "args")) <= set(ev)
+        assert ev["ph"] == "X"
+        assert ev["ts"] >= 0.0 and ev["dur"] >= 0.0
+    # child starts within parent's [ts, ts+dur] (Perfetto nests by
+    # time containment)
+    parent, child = trace["traceEvents"]
+    assert parent["ts"] <= child["ts"]
+    assert child["ts"] + child["dur"] <= parent["ts"] + parent["dur"] \
+        + 1.0   # 1us slack for float rounding
+    assert trace["otherData"]["n_spans"] == 2
+
+
+def test_jsonl_export(tmp_path):
+    tr = Tracer(enabled=True)
+    with tr.span("a", {"x": 1}):
+        with tr.span("b"):
+            pass
+    path = tmp_path / "spans.jsonl"
+    assert tr.write_jsonl(path) == 2
+    recs = [json.loads(line) for line in path.read_text().splitlines()]
+    assert [r["name"] for r in recs] == ["a", "b"]
+    assert recs[1]["parent_id"] == recs[0]["span_id"]
+    assert recs[0]["attrs"] == {"x": 1}
+
+
+# -- disabled fast path ------------------------------------------------------
+
+def test_disabled_span_is_singleton_noop():
+    tr = Tracer(enabled=False)
+    s = tr.span("anything", None)
+    assert s is NOOP_SPAN
+    assert tr.span("other") is s       # same object every call
+    with s as inner:
+        inner.set("k", "v")            # swallowed
+    assert tr.n_spans == 0 and tr.roots == []
+
+
+def test_disabled_span_zero_allocations():
+    tr = Tracer(enabled=False)
+
+    def hot():
+        for _ in range(100):
+            with tr.span("launch"):
+                pass
+
+    hot()                              # warm any lazy state
+    tracemalloc.start()
+    before = tracemalloc.take_snapshot()
+    hot()
+    after = tracemalloc.take_snapshot()
+    tracemalloc.stop()
+    # Zero allocations attributable to the obs layer itself (the test
+    # harness's own snapshot bookkeeping is excluded by the filter).
+    grew = [st for st in after.compare_to(before, "lineno")
+            if st.size_diff > 0
+            and any("repro" in str(f) and "obs" in str(f)
+                    for f in st.traceback)]
+    assert not grew, f"disabled span path allocated: {grew[:3]}"
+
+
+# -- registry / plan-vs-actual ----------------------------------------------
+
+def test_registry_instruments():
+    m = MetricsRegistry()
+    m.counter("x").inc()
+    m.counter("x").inc(2)
+    m.gauge("g").set(1.5)
+    m.histogram("h").record(0.25)
+    assert m.counter("x").value == 3
+    assert m.gauge("g").value == 1.5
+    snap = m.snapshot()
+    assert snap["counters"]["x"] == 3
+    assert snap["histograms"]["h"]["count"] == 1
+    json.dumps(snap)                   # JSON-safe end to end
+
+
+def test_plan_actual_mispredict_accounting():
+    m = MetricsRegistry(drift_bound=2.0)
+    key = ("swar", 5, 3, 0)
+    m.record_plan_actual(key, 1.0, 1.5)     # within bound
+    m.record_plan_actual(key, 1.0, 8.0)     # outside
+    m.record_plan_actual(key, 0.0, 1.0)     # degenerate -> mispredict
+    assert m.mispredict_rate() == pytest.approx(2 / 3)
+    assert m.mispredict_rate("swar") == pytest.approx(2 / 3)
+    assert m.mispredict_rate("mxu") == 0.0
+    summary = m.plan_actual_summary()
+    assert summary["swar/5/3/0"]["n"] == 3
+    assert summary["swar/5/3/0"]["last_obs_s"] == 1.0
+
+
+def test_plan_actual_matches_feedback_bit_for_bit():
+    """Every (key, est, obs) the engine hands FeedbackStore.observe is
+    the identical record in the obs registry (same tuples, same float
+    bits) -- the two accountings are one accounting."""
+    from repro.match import MatchEngine
+
+    rng = np.random.default_rng(5)
+    rows = rng.integers(0, 4, (48, 64), np.uint8)
+    eng = MatchEngine(rows, record_runtimes=True)
+    observed = []
+    orig = eng.planner.feedback.observe
+    eng.planner.feedback.observe = (
+        lambda key, est, obs: (observed.append((key, est, obs)),
+                               orig(key, est, obs))[-1])
+    for i in range(4):
+        eng.match(rows[i, :12].copy())
+    eng.match(rows[0, :12].copy(), reduction="threshold", threshold=12.0)
+    assert observed, "feedback-enabled engine recorded nothing"
+    records = eng.obs.metrics.plan_actual_records
+    assert len(records) >= len(observed)
+    # every feedback observation appears verbatim (tuple identity +
+    # float equality, not approx) in the registry's record list
+    reg = {(k, e, o) for k, e, o in records}
+    for key, est, obs in observed:
+        assert (key, est, obs) in reg
+    # and the registry saw them under the same kernel names
+    kernels = {k[0] for k, _, _ in records}
+    assert kernels <= {"swar", "mxu", "ref", "filter"}
+
+
+def test_plan_actual_always_on_without_feedback():
+    from repro.match import MatchEngine
+
+    rng = np.random.default_rng(6)
+    rows = rng.integers(0, 4, (32, 64), np.uint8)
+    eng = MatchEngine(rows, record_runtimes=False)
+    eng.match(rows[0, :8].copy())
+    eng.match(rows[1, :8].copy())
+    assert eng.planner.feedback.n_observations == 0
+    assert eng.obs.metrics.plan_actual      # registry recorded anyway
+    assert eng.obs.metrics.mispredict_rate() >= 0.0
+
+
+# -- engine / service integration -------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_service():
+    from repro.match import MatchEngine, MatchService
+
+    rng = np.random.default_rng(9)
+    rows = rng.integers(0, 4, (48, 64), np.uint8)
+    obs = Observability(spans=True)
+    eng = MatchEngine(rows, obs=obs)
+    svc = MatchService(eng)
+    pats = [rows[i, :10].copy() for i in range(6)]
+    tickets = [svc.submit(p) for p in pats]
+    svc.ingest(rng.integers(0, 4, (4, 64), np.uint8))
+    svc.flush()
+    return svc, tickets, obs
+
+
+def test_match_result_timings(traced_service):
+    svc, tickets, obs = traced_service
+    res = tickets[0].result
+    assert res.timings is not None
+    assert set(res.timings) == set(STAGES)
+    assert all(v >= 0.0 for v in res.timings.values())
+    assert res.timings["launch"] > 0.0
+    # timings excluded from the dataclass repr (compact result)
+    assert "timings" not in repr(res)
+
+
+def test_timings_absent_when_disabled():
+    from repro.match import MatchEngine
+
+    rng = np.random.default_rng(10)
+    rows = rng.integers(0, 4, (32, 64), np.uint8)
+    eng = MatchEngine(rows)            # obs default: spans off
+    res = eng.match(rows[0, :8].copy())
+    assert res.timings is None
+    assert eng.obs.tracer.n_spans == 0
+
+
+def test_service_stats_histogram_views(traced_service):
+    svc, tickets, obs = traced_service
+    s = svc.stats
+    assert s.latency_hist.count == s.n_completed
+    # deprecated running-sum accessors remain as thin views
+    assert s.total_latency_s == pytest.approx(s.latency_hist.sum)
+    assert s.avg_latency_s == pytest.approx(
+        s.latency_hist.sum / s.n_completed)
+    snap = s.snapshot()
+    assert 0.0 < snap["latency_p50_s"] <= snap["latency_p95_s"] \
+        <= snap["latency_p99_s"]
+    # snapshot rounds to 6 decimals, which can nudge p99 above the true
+    # max by up to 5e-7 -- tolerance must cover the rounding step
+    assert snap["latency_p99_s"] <= s.latency_hist.max + 1e-6
+    assert set(snap["timings"]) == set(STAGES)
+    assert snap["plan_actual"]
+    assert snap["plan_mispredict_rate"] >= 0.0
+    json.dumps(snap)
+
+
+def test_service_trace_covers_stages(traced_service):
+    svc, tickets, obs = traced_service
+    spans = list(obs.tracer.iter_spans())
+    names = {s.name for s in spans}
+    assert {"service.enqueue", "service.tick", "match.run", "plan",
+            "launch", "merge", "pull", "pack"} <= names
+    n_enq = sum(s.name == "service.enqueue" for s in spans)
+    assert n_enq == svc.stats.n_submitted
+    for run in (s for s in spans if s.name == "match.run"):
+        sub = {c.name for c in run.walk()}
+        assert {"plan", "launch", "pull"} <= sub
+
+
+def test_corpus_counters(traced_service):
+    svc, tickets, obs = traced_service
+    counters = obs.metrics.counters
+    assert counters["corpus.packs"].value >= 1
+    assert counters["corpus.splice_rows"].value >= 4   # the ingest
+
+
+# -- lint --------------------------------------------------------------------
+
+def test_lint_passes_on_tree():
+    proc = subprocess.run([sys.executable, str(LINT)],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_lint_catches_uncovered_dispatch(tmp_path):
+    k = tmp_path / "src" / "repro" / "kernels"
+    m = tmp_path / "src" / "repro" / "match"
+    k.mkdir(parents=True)
+    m.mkdir(parents=True)
+    (k / "foo.py").write_text(
+        "import jax.experimental.pallas as pl\n"
+        "def kern(x):\n"
+        "    return pl.pallas_call(lambda r: r)(x)\n")
+    (m / "eng.py").write_text(
+        "from repro.kernels import foo as _f\n"
+        "def run(x):\n"
+        "    return _f.kern(x)\n")
+    bad = subprocess.run([sys.executable, str(LINT), str(tmp_path)],
+                         capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "eng.py:3" in bad.stderr
+    (m / "eng.py").write_text(
+        "from repro.kernels import foo as _f\n"
+        "def run(x, tr):\n"
+        "    with tr.span('launch'):\n"
+        "        return _f.kern(x)\n")
+    good = subprocess.run([sys.executable, str(LINT), str(tmp_path)],
+                          capture_output=True, text=True)
+    assert good.returncode == 0, good.stderr
